@@ -1,0 +1,66 @@
+"""Vectorized NumPy implementations of RSR / RSR++ used by the benchmark
+tables (the paper's §5.1/§5.2 environment is scalar C++ / NumPy — this is
+the faithful CPU-algorithm comparison, independent of JAX/XLA)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def preprocess_np(b: np.ndarray, k: int):
+    """Algorithm 1 -> (perm (nb,n), seg (nb,2^k+1)) int32."""
+    n, m = b.shape
+    pad = (-m) % k
+    if pad:
+        b = np.pad(b, ((0, 0), (0, pad)))
+    blocks = b.reshape(n, -1, k).transpose(1, 0, 2)          # (nb, n, k)
+    w = (1 << np.arange(k - 1, -1, -1)).astype(np.int64)
+    codes = (blocks.astype(np.int64) * w).sum(-1)            # (nb, n)
+    perm = np.argsort(codes, axis=1, kind="stable").astype(np.int32)
+    nb = codes.shape[0]
+    hist = np.zeros((nb, 2 ** k), np.int32)
+    for i in range(nb):                                      # offline, once
+        hist[i] = np.bincount(codes[i], minlength=2 ** k)
+    seg = np.concatenate([np.zeros((nb, 1), np.int32),
+                          np.cumsum(hist, 1).astype(np.int32)], 1)
+    return perm, seg, codes.astype(np.uint32)
+
+
+def bin_matrix_np(k: int) -> np.ndarray:
+    j = np.arange(2 ** k, dtype=np.uint32)[:, None]
+    return ((j >> np.arange(k - 1, -1, -1)) & 1).astype(np.float32)
+
+
+def rsr_matvec_np(v: np.ndarray, perm: np.ndarray, seg: np.ndarray,
+                  k: int, m: int, plus_plus: bool = False) -> np.ndarray:
+    """Inference (Algorithm 2): segmented sums via prefix sums + Bin product."""
+    vp = v[perm]                                             # (nb, n) Eq. 5
+    ps = np.concatenate([np.zeros((vp.shape[0], 1), vp.dtype),
+                         np.cumsum(vp, axis=1)], axis=1)
+    u = np.take_along_axis(ps, seg[:, 1:], 1) - \
+        np.take_along_axis(ps, seg[:, :-1], 1)               # (nb, 2^k)
+    if plus_plus:
+        outs = []
+        x = u
+        for _ in range(k):                                   # Algorithm 3
+            pairs = x.reshape(x.shape[0], -1, 2)
+            outs.append(pairs[:, :, 1].sum(1))
+            x = pairs.sum(2)
+        r = np.stack(outs[::-1], axis=1)
+    else:
+        r = u @ bin_matrix_np(k)
+    return r.reshape(-1)[:m]
+
+
+def standard_matvec_np(v: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """BLAS baseline (np.dot) — stronger than the paper's scalar C++."""
+    return v @ b
+
+
+def naive_matvec_np(v: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Non-BLAS vectorized O(n·m): the closest analog of the paper's
+    'Standard' scalar implementation."""
+    return (v[:, None] * b).sum(axis=0)
+
+
+def index_bytes_np(perm: np.ndarray, seg: np.ndarray) -> int:
+    return perm.nbytes + seg.nbytes

@@ -1,0 +1,256 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Container scale: the paper
+benches n up to 2^16 in C++; a single CPU core here gets honest numbers up to
+n=2^12-2^13 (pass --large for the paper's full range).  Each row's `derived`
+column carries the headline quantity of that figure (speedup, ratio, k*).
+
+  fig4_native   RSR / RSR++ / Standard matvec time vs n      (paper Fig. 4)
+  fig5_memory   index bytes vs dense matrix bytes            (paper Fig. 5)
+  fig9_opt_k    measured best k vs Eq.6/7 prediction         (paper Fig. 9)
+  fig10_pp      RSR++ vs RSR step-2 improvement              (paper Fig. 10)
+  fig11_numpy   RSR vs NumPy BLAS dot, binary+ternary        (paper Fig. 11)
+  fig6_llm      per-layer decode matvec at the paper's LLM
+                matrix sizes (llama3-8b / falcon3)           (paper Fig. 6)
+  table1_tpu    TPU-kernel roofline projection for the same
+                layers (replaces the paper's GPU Table 1;
+                no GPU here — v5e is the target)             (paper Tab. 1)
+  engine_e2e    end-to-end reduced-model decode: RSR serve
+                vs dense serve through the Engine            (paper §5.3)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.rsr_numpy import (bin_matrix_np, index_bytes_np,
+                                  naive_matvec_np, preprocess_np,
+                                  rsr_matvec_np, standard_matvec_np)
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us: float, derived: str):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.2f},{derived}", flush=True)
+
+
+def _time(fn, reps=5, warmup=1):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6         # µs
+
+
+def _best_k(n, m, v, b, ks, reps=3):
+    best, best_us = None, float("inf")
+    for k in ks:
+        perm, seg, _ = preprocess_np(b, k)
+        us = _time(lambda: rsr_matvec_np(v, perm, seg, k, m), reps=reps)
+        if us < best_us:
+            best, best_us = k, us
+    return best, best_us
+
+
+# ---------------------------------------------------------------------------
+
+def fig4_native(ns):
+    """RSR vs RSR++ vs Standard (naive, non-BLAS) — the paper's C++ setting."""
+    rng = np.random.default_rng(0)
+    for n in ns:
+        b = rng.integers(0, 2, size=(n, n)).astype(np.int8)
+        v = rng.standard_normal(n).astype(np.float32)
+        k = max(4, int(np.log2(n)) - 3)
+        perm, seg, _ = preprocess_np(b, k)
+        bf = b.astype(np.float32)
+        t_std = _time(lambda: naive_matvec_np(v, bf))
+        t_rsr = _time(lambda: rsr_matvec_np(v, perm, seg, k, n))
+        t_pp = _time(lambda: rsr_matvec_np(v, perm, seg, k, n,
+                                           plus_plus=True))
+        ref = rsr_matvec_np(v, perm, seg, k, n)
+        assert np.allclose(ref, v @ bf, rtol=1e-3, atol=1e-2)
+        emit(f"fig4_standard_n{n}", t_std, "baseline")
+        emit(f"fig4_rsr_n{n}", t_rsr, f"speedup={t_std/t_rsr:.2f}x")
+        emit(f"fig4_rsrpp_n{n}", t_pp, f"speedup={t_std/t_pp:.2f}x")
+
+
+def fig5_memory(ns):
+    for n in ns:
+        rng = np.random.default_rng(1)
+        b = rng.integers(0, 2, size=(n, n)).astype(np.int8)
+        k = max(4, int(np.log2(n)) - 3)
+        perm, seg, codes = preprocess_np(b, k)
+        dense = n * n * 4                                   # f32 (paper Fig 5)
+        idx = index_bytes_np(perm, seg)
+        codes_b = codes.astype(np.uint8).nbytes if k <= 8 else codes.nbytes
+        emit(f"fig5_memory_n{n}", 0.0,
+             f"dense_f32={dense};index={idx};ratio={dense/idx:.2f}x;"
+             f"codes={codes_b}")
+
+
+def fig9_opt_k(ns):
+    for n in ns:
+        rng = np.random.default_rng(2)
+        b = rng.integers(0, 2, size=(n, n)).astype(np.int8)
+        v = rng.standard_normal(n).astype(np.float32)
+        ks = range(2, max(4, int(np.log2(n))) + 1)
+        k_star, us = _best_k(n, n, v, b, ks)
+        from repro.core import optimal_k_rsrpp
+        emit(f"fig9_optk_n{n}", us,
+             f"k_measured={k_star};k_eq7={optimal_k_rsrpp(n)}")
+
+
+def fig10_pp(ns):
+    """RSR++ vs RSR on step 2 only (u · Bin_[k])."""
+    for n in ns:
+        k = max(4, int(np.log2(n)) - 3)
+        rng = np.random.default_rng(3)
+        u = rng.standard_normal((max(1, n // k), 2 ** k)).astype(np.float32)
+        bink = bin_matrix_np(k)
+        t_mat = _time(lambda: u @ bink, reps=20)
+
+        def fold():
+            x = u
+            outs = []
+            for _ in range(k):
+                pairs = x.reshape(x.shape[0], -1, 2)
+                outs.append(pairs[:, :, 1].sum(1))
+                x = pairs.sum(2)
+            return np.stack(outs[::-1], 1)
+        t_fold = _time(fold, reps=20)
+        imp = (t_mat - t_fold) / t_mat * 100
+        # paper Fig 10 (scalar C++) sees ~25% from the O(2^k) fold; in NumPy
+        # the k tiny BLAS-free passes lose to one sgemm on constant factors —
+        # report both the measurement and the op-count theory (k·2^k vs 2^k).
+        theory = k * 2 ** k / (2 ** (k + 1) - 2)
+        emit(f"fig10_step2_n{n}", t_fold,
+             f"improvement={imp:.1f}%;theory_op_ratio={theory:.2f}x")
+
+
+def fig11_numpy(ns):
+    """RSR vs np.dot (BLAS) for binary AND ternary weights."""
+    rng = np.random.default_rng(4)
+    for n in ns:
+        v = rng.standard_normal(n).astype(np.float32)
+        k = max(4, int(np.log2(n)) - 3)
+        # binary
+        b = rng.integers(0, 2, size=(n, n)).astype(np.int8)
+        perm, seg, _ = preprocess_np(b, k)
+        t_np = _time(lambda: standard_matvec_np(v, b.astype(np.float32)))
+        t_rsr = _time(lambda: rsr_matvec_np(v, perm, seg, k, n))
+        emit(f"fig11_binary_n{n}", t_rsr,
+             f"numpy_us={t_np:.1f};speedup={t_np/t_rsr:.2f}x")
+        # ternary (Prop 2.1: two binary passes)
+        a = rng.integers(-1, 2, size=(n, n)).astype(np.int8)
+        p1, s1, _ = preprocess_np((a == 1).astype(np.int8), k)
+        p2, s2, _ = preprocess_np((a == -1).astype(np.int8), k)
+        t_np_t = _time(lambda: standard_matvec_np(v, a.astype(np.float32)))
+        t_rsr_t = _time(lambda: rsr_matvec_np(v, p1, s1, k, n) -
+                        rsr_matvec_np(v, p2, s2, k, n))
+        emit(f"fig11_ternary_n{n}", t_rsr_t,
+             f"numpy_us={t_np_t:.1f};speedup={t_np_t/t_rsr_t:.2f}x")
+
+
+# the paper's §5.3 LLM layer sizes (llama3-8b: d=4096 ff=14336;
+# falcon3: d=3072 ff=9216/23040)
+LLM_LAYERS = {
+    "llama3-8b": [(4096, 4096), (4096, 14336), (14336, 4096)],
+    "falcon3-3b": [(3072, 3072), (3072, 9216), (9216, 3072)],
+    "falcon3-10b": [(3072, 3072), (3072, 23040), (23040, 3072)],
+}
+
+
+def fig6_llm():
+    """Per-layer decode matvec at true paper matrix sizes, CPU."""
+    rng = np.random.default_rng(5)
+    for model, layers in LLM_LAYERS.items():
+        t_std_total = t_rsr_total = 0.0
+        for (n, m) in layers:
+            a = rng.integers(-1, 2, size=(n, m)).astype(np.int8)
+            v = rng.standard_normal(n).astype(np.float32)
+            k = 8
+            p1, s1, _ = preprocess_np((a == 1).astype(np.int8), k)
+            p2, s2, _ = preprocess_np((a == -1).astype(np.int8), k)
+            t_std = _time(lambda: standard_matvec_np(v, a.astype(np.float32)),
+                          reps=3)
+            t_rsr = _time(lambda: rsr_matvec_np(v, p1, s1, k, m) -
+                          rsr_matvec_np(v, p2, s2, k, m), reps=3)
+            t_std_total += t_std
+            t_rsr_total += t_rsr
+        emit(f"fig6_{model}", t_rsr_total,
+             f"standard_us={t_std_total:.0f};"
+             f"speedup={t_std_total/t_rsr_total:.2f}x")
+
+
+def table1_tpu():
+    """TPU v5e roofline projection of the Pallas kernels for the same layers
+    (replaces the paper's GPU Table 1; see DESIGN.md §2 for the model).
+    dense-2bit: max(bytes/4/819GBps, 2·n·m/197T);  RSR direct k=5:
+    max(n·m/5B/819GBps, 2·(3^5/5)·n·m/394T int8-MXU)."""
+    for model, layers in LLM_LAYERS.items():
+        t_dense = t_rsr = 0.0
+        for (n, m) in layers:
+            nm = n * m
+            t_dense += max(nm / 4 / 819e9, 2 * nm / 197e12) * 1e6
+            t_rsr += max(nm / 5 / 819e9, 2 * (243 / 5) * nm / 394e12) * 1e6
+        emit(f"table1_tpu_{model}", t_rsr,
+             f"dense2bit_us={t_dense:.2f};ratio={t_dense/t_rsr:.2f}x")
+
+
+def engine_e2e():
+    """Reduced-model end-to-end decode: RSR serve vs dense serve (§5.3)."""
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from repro.config import ServeConfig, get_config
+    from repro.models import transformer as tfm
+    from repro.serve.engine import Engine
+    cfg = dataclasses.replace(get_config("falcon3-3b-1.58bit").reduced(),
+                              vocab_size=256, num_layers=2)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    scfg = ServeConfig(max_seq_len=64, batch_size=2)
+    e_rsr = Engine(cfg, tfm.serve_params(params, cfg), scfg)
+    e_dense = Engine(cfg, tfm.serve_params(
+        params, dataclasses.replace(cfg, rsr_serve=False)), scfg)
+    prompts = jnp.ones((2, 8), jnp.int32)
+    o1 = e_rsr.generate(prompts, 8)          # warmup+compile
+    o2 = e_dense.generate(prompts, 8)
+    assert np.array_equal(o1, o2), "RSR and dense decodes must match"
+    e_rsr.reset()
+    t1 = _time(lambda: e_rsr.generate(prompts, 8), reps=2, warmup=0)
+    e_dense.reset()
+    t2 = _time(lambda: e_dense.generate(prompts, 8), reps=2, warmup=0)
+    emit("engine_e2e_rsr", t1, f"dense_us={t2:.0f};outputs_equal=True")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--large", action="store_true",
+                    help="paper-scale n (2^11..2^15); slow on 1 core")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    ns = [2 ** e for e in ((11, 12, 13, 14, 15) if args.large
+                           else (9, 10, 11, 12))]
+    print("name,us_per_call,derived")
+    tables = {
+        "fig4": lambda: fig4_native(ns),
+        "fig5": lambda: fig5_memory(ns),
+        "fig9": lambda: fig9_opt_k(ns[:2]),
+        "fig10": lambda: fig10_pp(ns),
+        "fig11": lambda: fig11_numpy(ns),
+        "fig6": fig6_llm,
+        "table1": table1_tpu,
+        "engine": engine_e2e,
+    }
+    for name, fn in tables.items():
+        if args.only and args.only not in name:
+            continue
+        fn()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Aggregate experiments/dryrun/*.json into the EXPERIMENTS.md tables."""
+import glob
+import json
+import sys
+
+ORDER_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ORDER_ARCHS = ["hubert-xlarge", "mamba2-780m", "granite-moe-3b-a800m",
+               "deepseek-v2-lite-16b", "recurrentgemma-2b", "qwen2-72b",
+               "deepseek-67b", "qwen1.5-32b", "gemma-2b",
+               "llama-3.2-vision-90b"]
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    for unit, div in (("s", 1), ("ms", 1e-3), ("us", 1e-6), ("ns", 1e-9)):
+        if x >= div:
+            return f"{x/div:.2f}{unit}"
+    return f"{x:.1e}s"
+
+
+def load(mesh):
+    out = {}
+    for f in glob.glob("experiments/dryrun/*.json"):
+        d = json.load(open(f))
+        if d["mesh"] != mesh:
+            continue
+        out[(d["arch"], d["shape"])] = d
+    return out
+
+
+def table(mesh, full=True):
+    recs = load(mesh)
+    print(f"\n### Mesh {mesh}\n")
+    print("| arch | shape | status | FLOPs/chip | bytes/chip | coll B/chip |"
+          " compute | memory | collective | dominant | 6ND/HLO | roofline"
+          " frac | HBM/chip |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|---|---|")
+    for arch in ORDER_ARCHS:
+        for shape in ORDER_SHAPES:
+            d = recs.get((arch, shape))
+            if d is None:
+                continue
+            if d["status"] == "skipped":
+                print(f"| {arch} | {shape} | SKIP: {d['reason'][:48]} |"
+                      + " |" * 10)
+                continue
+            if d["status"] == "error":
+                print(f"| {arch} | {shape} | ERROR |" + " |" * 10)
+                continue
+            r = d["roofline"]
+            hbm = (d["memory"]["argument_bytes"] + d["memory"]["temp_bytes"]
+                   + d["memory"]["output_bytes"]) / d["chips"] / 2**30
+            print(f"| {arch} | {shape} | ok | {r['hlo_flops']:.2e} |"
+                  f" {r['hlo_bytes']:.2e} | {r['coll_bytes']:.2e} |"
+                  f" {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} |"
+                  f" {fmt_s(r['collective_s'])} | **{r['dominant']}** |"
+                  f" {min(r['useful_ratio'],99):.3f} |"
+                  f" {r['roofline_fraction']:.3f} | {hbm:.2f}GiB |")
+
+
+if __name__ == "__main__":
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "16x16"
+    table(mesh)

@@ -1,0 +1,208 @@
+"""Configuration system: model / train / serve / mesh configs + arch registry.
+
+Every assigned architecture lives in ``repro/configs/<id>.py`` exposing a
+``CONFIG: ModelConfig``.  ``get_config(name)`` resolves ids (dashes allowed).
+``ModelConfig.reduced()`` yields the CPU smoke-test variant of the same family.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional, Tuple
+
+__all__ = ["ModelConfig", "TrainConfig", "ServeConfig", "ShapeConfig",
+           "get_config", "list_archs", "SHAPES", "shape_applicable"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | encoder | vlm
+    num_layers: int = 12
+    d_model: int = 512
+    num_heads: int = 8
+    num_kv_heads: int = 8
+    head_dim: int = 0                 # 0 -> d_model // num_heads
+    d_ff: int = 2048
+    vocab_size: int = 32000
+
+    # --- attention ---
+    attention: str = "gqa"            # gqa | mla | none
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    window: int = 0                   # >0: sliding-window (local) attention
+    causal: bool = True
+    # MLA (deepseek-v2)
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    qk_rope_head_dim: int = 64
+    qk_nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+    # --- FFN ---
+    act: str = "silu"                 # silu | gelu
+    glu: bool = True                  # gated (SwiGLU / GeGLU) vs plain MLP
+
+    # --- MoE ---
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0                 # per-expert hidden width
+    first_dense_layers: int = 0
+    capacity_factor: float = 1.25
+
+    # --- SSM (mamba2 SSD) ---
+    ssm_state: int = 0
+    expand: int = 2
+    conv_width: int = 4
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+
+    # --- hybrid (recurrentgemma/griffin) ---
+    block_pattern: Tuple[str, ...] = ("attn",)   # per-superblock layer kinds
+    d_rnn: int = 0                    # RG-LRU width (0 -> d_model)
+
+    # --- vlm ---
+    cross_attn_every: int = 0         # 1 cross-attn layer per N self-attn
+    num_image_tokens: int = 0
+
+    # --- encoder / modality frontend ---
+    is_encoder: bool = False
+    frontend: str = "none"            # none | audio_stub | vision_stub
+
+    # --- quantization / the paper's technique ---
+    quant: str = "ternary"            # none | ternary (QAT train, RSR serve)
+    rsr_k: int = 5                    # ternary-direct block width at serve
+    rsr_serve: bool = True            # serve linears via RSR indices
+    quant_head: bool = False          # keep embed/lm_head full precision
+
+    # --- misc ---
+    norm: str = "rmsnorm"
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+
+    # ----------------------------------------------------------------- utils
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def d_inner(self) -> int:         # mamba2 inner width
+        return self.expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True iff attention cost does not grow quadratically with context."""
+        has_full_attn = self.attention != "none" and self.window == 0
+        return not has_full_attn
+
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test variant: same family/topology, tiny dims."""
+        few = max(1, len(self.block_pattern))
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            num_layers=max(2 * few, self.first_dense_layers + few),
+            d_model=64,
+            num_heads=4,
+            num_kv_heads=min(4, max(1, self.num_kv_heads)),
+            head_dim=16 if self.head_dim else 0,
+            d_ff=0 if self.d_ff == 0 else 128,
+            vocab_size=256,
+            kv_lora_rank=32 if self.kv_lora_rank else 0,
+            q_lora_rank=0,
+            qk_rope_head_dim=8 if self.attention == "mla" else 64,
+            qk_nope_head_dim=16 if self.attention == "mla" else 128,
+            v_head_dim=16 if self.attention == "mla" else 128,
+            num_experts=min(8, self.num_experts),
+            num_experts_per_tok=min(2, self.num_experts_per_tok),
+            moe_d_ff=64 if self.moe_d_ff else 0,
+            ssm_state=16 if self.ssm_state else 0,
+            ssm_head_dim=16 if self.ssm_state else 64,
+            ssm_chunk=8,
+            d_rnn=64 if self.d_rnn else 0,
+            window=min(self.window, 16) if self.window else 0,
+            num_image_tokens=16 if self.num_image_tokens else 0,
+            cross_attn_every=self.cross_attn_every,
+            first_dense_layers=min(1, self.first_dense_layers),
+            dtype="float32",
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    grad_clip: float = 1.0
+    optimizer: str = "adamw"          # adamw | lion
+    zero1: bool = True                # shard optimizer state over data axis
+    remat: str = "block"              # none | block | full
+    microbatches: int = 1             # gradient accumulation
+    grad_compression: str = "none"    # none | int8_ef
+    seed: int = 0
+    checkpoint_every: int = 100
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep_checkpoints: int = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_seq_len: int = 4096
+    batch_size: int = 8
+    rsr_impl: str = "onehot"          # segments | scatter | onehot
+    temperature: float = 0.0          # 0 -> greedy
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                         # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k":    ShapeConfig("train_4k",    4096,   256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768,  32,  "prefill"),
+    "decode_32k":  ShapeConfig("decode_32k",  32768,  128, "decode"),
+    "long_500k":   ShapeConfig("long_500k",   524288, 1,   "decode"),
+}
+
+ARCHS = [
+    "hubert-xlarge", "mamba2-780m", "granite-moe-3b-a800m",
+    "deepseek-v2-lite-16b", "recurrentgemma-2b", "qwen2-72b", "deepseek-67b",
+    "qwen1.5-32b", "gemma-2b", "llama-3.2-vision-90b",
+    # the paper's own evaluation models (1.58-bit):
+    "llama3-8b-1.58bit", "falcon3-3b-1.58bit", "falcon3-10b-1.58bit",
+]
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """(runnable?, reason-if-not) per the assignment's skip rules."""
+    if cfg.is_encoder and shape.kind == "decode":
+        return False, "encoder-only arch has no autoregressive decode step"
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention arch: 512k context requires "
+                       "sub-quadratic attention (skip per assignment)")
+    return True, ""
+
+
+def _module_name(arch: str) -> str:
+    return arch.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_module_name(arch)}")
+    return mod.CONFIG
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)

@@ -1,0 +1,1 @@
+"""Architecture registry: one module per assigned arch + the paper's own models."""

@@ -1,0 +1,13 @@
+"""DeepSeek-V2-Lite 16B [arXiv:2405.04434]: MLA (kv_lora=512, decoupled RoPE
+64), MoE 64 routed + 2 shared, top-6, expert d_ff=1408, first layer dense."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-lite-16b", family="moe",
+    num_layers=27, d_model=2048, num_heads=16, num_kv_heads=16,
+    d_ff=10944, vocab_size=102400,
+    attention="mla", kv_lora_rank=512, q_lora_rank=0,
+    qk_rope_head_dim=64, qk_nope_head_dim=128, v_head_dim=128,
+    num_experts=64, num_experts_per_tok=6, num_shared_experts=2,
+    moe_d_ff=1408, first_dense_layers=1,
+)

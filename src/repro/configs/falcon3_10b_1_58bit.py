@@ -1,0 +1,9 @@
+"""Falcon3-10B-1.58bit — paper §5.3/§5.4 evaluation model."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="falcon3-10b-1.58bit", family="dense",
+    num_layers=40, d_model=3072, num_heads=12, num_kv_heads=4,
+    d_ff=23040, vocab_size=131072,
+    attention="gqa",
+)

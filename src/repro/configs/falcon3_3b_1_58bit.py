@@ -1,0 +1,9 @@
+"""Falcon3-3B-1.58bit — paper §5.3/§5.4 evaluation model."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="falcon3-3b-1.58bit", family="dense",
+    num_layers=22, d_model=3072, num_heads=12, num_kv_heads=4,
+    d_ff=9216, vocab_size=131072,
+    attention="gqa",
+)

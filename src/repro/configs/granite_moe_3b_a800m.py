@@ -1,0 +1,12 @@
+"""IBM Granite 3.0 MoE 3B-a800m [hf:ibm-granite]. Spec column: 40 routed
+experts, top-8, expert d_ff=512 (see DESIGN.md on the 32-vs-40 discrepancy)."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m", family="moe",
+    num_layers=32, d_model=1536, num_heads=24, num_kv_heads=8,
+    d_ff=512, vocab_size=49155,
+    attention="gqa",
+    num_experts=40, num_experts_per_tok=8, moe_d_ff=512,
+    tie_embeddings=True,
+)

@@ -1,0 +1,12 @@
+"""HuBERT-XLarge encoder backbone [arXiv:2106.07447]. Audio frontend is a stub:
+input_specs provides precomputed frame embeddings (B, S, d)."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge", family="encoder",
+    num_layers=48, d_model=1280, num_heads=16, num_kv_heads=16,
+    d_ff=5120, vocab_size=504,
+    attention="gqa", causal=False, is_encoder=True,
+    act="gelu", glu=False, norm="layernorm",
+    frontend="audio_stub",
+)

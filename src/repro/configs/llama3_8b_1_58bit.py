@@ -1,0 +1,10 @@
+"""Llama3-8B-1.58bit — the paper's §5.3/§5.4 evaluation model (Ma et al. 2024
+recipe). Matrix sizes 2^12..~2^13.5, matching the paper's reported range."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-8b-1.58bit", family="dense",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8,
+    d_ff=14336, vocab_size=128256,
+    attention="gqa", rope_theta=5e5,
+)

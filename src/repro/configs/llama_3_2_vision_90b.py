@@ -1,0 +1,13 @@
+"""Llama-3.2-Vision-90B text backbone [hf:meta-llama]: 100 layers, 1 gated
+cross-attn per 5, GQA kv=8. Vision frontend is a stub (precomputed patch
+embeddings (B, 6400, d) via input_specs)."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b", family="vlm",
+    num_layers=100, d_model=8192, num_heads=64, num_kv_heads=8,
+    d_ff=28672, vocab_size=128256,
+    attention="gqa", cross_attn_every=5,
+    block_pattern=("attn", "attn", "attn", "attn", "xattn"),
+    num_image_tokens=6400, frontend="vision_stub",
+)

@@ -1,0 +1,11 @@
+"""Mamba-2 780M, SSD (state-space duality) [arXiv:2405.21060]. Attention-free."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-780m", family="ssm",
+    num_layers=48, d_model=1536, num_heads=0, num_kv_heads=0,
+    d_ff=0, vocab_size=50280,
+    attention="none", block_pattern=("mamba",),
+    ssm_state=128, expand=2, conv_width=4, ssm_head_dim=64,
+    tie_embeddings=True,
+)

@@ -1,0 +1,9 @@
+"""Qwen1.5-32B [hf:Qwen]: dense MHA (kv=40), QKV bias, SwiGLU."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-32b", family="dense",
+    num_layers=64, d_model=5120, num_heads=40, num_kv_heads=40,
+    d_ff=27392, vocab_size=152064,
+    attention="gqa", qkv_bias=True,
+)

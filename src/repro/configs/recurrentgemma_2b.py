@@ -1,0 +1,12 @@
+"""RecurrentGemma-2B (Griffin) [arXiv:2402.19427]: RG-LRU + local attention,
+pattern (rec, rec, attn), MQA kv=1, window 2048, GeGLU."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b", family="hybrid",
+    num_layers=26, d_model=2560, num_heads=10, num_kv_heads=1, head_dim=256,
+    d_ff=7680, vocab_size=256000,
+    attention="gqa", window=2048, block_pattern=("rec", "rec", "attn"),
+    d_rnn=2560, act="gelu", glu=True,
+    tie_embeddings=True,
+)

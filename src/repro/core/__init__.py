@@ -1,0 +1,16 @@
+"""RSR/RSR++ core: the paper's contribution as a composable JAX module."""
+from repro.core.api import default_k, preprocess, rsr_matmul, RSR_TPU_K
+from repro.core.binlib import bin_matrix, tern_matrix, binary_row_codes, \
+    ternary_row_codes
+from repro.core.preprocess import (BinaryRSRIndex, TernaryDirectIndex,
+                                   TernaryRSRIndex, index_nbytes,
+                                   optimal_k_rsr, optimal_k_rsrpp,
+                                   preprocess_binary, preprocess_ternary,
+                                   preprocess_ternary_direct)
+from repro.core.rsr import (rsr_matmul_binary, rsr_matmul_ternary,
+                            rsr_matmul_ternary_direct, segmented_sum,
+                            segmented_sum_onehot, segmented_sum_scatter)
+from repro.core.rsrpp import fold_bin_product
+from repro.core.ternary import (absmean_quantize, decompose_ternary,
+                                pack2bit, random_binary, random_ternary,
+                                recompose_ternary, ste_ternary, unpack2bit)

@@ -1,0 +1,60 @@
+"""Public API facade for the RSR core.
+
+    idx = preprocess(W, k=6, mode="ternary")         # offline, once per model
+    y   = rsr_matmul(v, idx, impl="onehot", plus_plus=True)   # inference
+
+``mode``: "binary" (W ∈ {0,1}), "ternary" (Prop 2.1 pair), "ternary_direct"
+(beyond-paper base-3).  ``k=None`` picks the paper's optimal k (Eq. 6/7) for
+the CPU paths or the roofline-optimal k for the TPU one-hot path.
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax
+
+from repro.core import preprocess as _pp
+from repro.core import rsr as _rsr
+from repro.core.preprocess import (BinaryRSRIndex, TernaryDirectIndex,
+                                   TernaryRSRIndex)
+
+__all__ = ["preprocess", "rsr_matmul", "default_k", "RSR_TPU_K"]
+
+# Roofline-optimal block width for the TPU one-hot kernel (DESIGN.md §2):
+# balance 2·(2^k/k) FLOPs/weight-bit against the v5e FLOP:byte ratio.
+RSR_TPU_K = 6
+
+AnyIndex = Union[BinaryRSRIndex, TernaryRSRIndex, TernaryDirectIndex]
+
+
+def default_k(n: int, *, target: str = "tpu", plus_plus: bool = True) -> int:
+    """Paper-optimal k for CPU (Eq. 6/7) or roofline-optimal k for TPU."""
+    if target == "tpu":
+        return RSR_TPU_K
+    return _pp.optimal_k_rsrpp(n) if plus_plus else _pp.optimal_k_rsr(n)
+
+
+def preprocess(w: jax.Array, k: Optional[int] = None, *,
+               mode: str = "ternary", target: str = "tpu") -> AnyIndex:
+    """Offline index construction (Algorithm 1) for a trained weight matrix."""
+    if k is None:
+        k = default_k(w.shape[0], target=target)
+    if mode == "binary":
+        return _pp.preprocess_binary(w, k)
+    if mode == "ternary":
+        return _pp.preprocess_ternary(w, k)
+    if mode == "ternary_direct":
+        return _pp.preprocess_ternary_direct(w, k)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def rsr_matmul(v: jax.Array, idx: AnyIndex, *, impl: str = "segments",
+               plus_plus: bool = False) -> jax.Array:
+    """v (..., n) × indexed matrix -> (..., m).  Dispatches on index type."""
+    if isinstance(idx, BinaryRSRIndex):
+        return _rsr.rsr_matmul_binary(v, idx, impl=impl, plus_plus=plus_plus)
+    if isinstance(idx, TernaryRSRIndex):
+        return _rsr.rsr_matmul_ternary(v, idx, impl=impl, plus_plus=plus_plus)
+    if isinstance(idx, TernaryDirectIndex):
+        return _rsr.rsr_matmul_ternary_direct(v, idx, impl=impl)
+    raise TypeError(f"unknown index type {type(idx)}")

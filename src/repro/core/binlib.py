@@ -1,0 +1,77 @@
+"""Bin_[k] / Tern_[k] pattern-enumeration matrices and code extraction.
+
+``Bin_[k]`` (paper §3.2) is the 2^k × k binary matrix whose row j spells the
+k-bit big-endian binary expansion of j, rows in ascending order.  The paper's
+Example Bin_[3] drops the all-zero row (a typo); we use the complete 2^k rows —
+Lemma 4.2 requires exactly one row per possible pattern.
+
+``Tern_[k]`` (beyond-paper ternary-direct variant) is the 3^k × k ternary
+matrix whose row j spells the base-3 big-endian expansion of j with digits
+mapped {0,1,2} -> {0,1,-1}.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["bin_matrix", "tern_matrix", "binary_row_codes", "ternary_row_codes",
+           "code_dtype"]
+
+
+def code_dtype(num_codes: int):
+    """Smallest unsigned integer dtype able to hold codes in [0, num_codes)."""
+    if num_codes <= 2 ** 8:
+        return jnp.uint8
+    if num_codes <= 2 ** 16:
+        return jnp.uint16
+    return jnp.uint32
+
+
+@functools.lru_cache(maxsize=None)
+def _bin_np(k: int) -> np.ndarray:
+    j = np.arange(2 ** k, dtype=np.uint32)[:, None]
+    bits = (j >> np.arange(k - 1, -1, -1, dtype=np.uint32)[None, :]) & 1
+    return bits.astype(np.int8)
+
+
+def bin_matrix(k: int, dtype=jnp.float32) -> jax.Array:
+    """Bin_[k]: (2^k, k), row j = big-endian bits of j."""
+    return jnp.asarray(_bin_np(k), dtype=dtype)
+
+
+@functools.lru_cache(maxsize=None)
+def _tern_np(k: int) -> np.ndarray:
+    j = np.arange(3 ** k, dtype=np.int64)[:, None]
+    digits = (j // (3 ** np.arange(k - 1, -1, -1, dtype=np.int64))[None, :]) % 3
+    return np.where(digits == 2, -1, digits).astype(np.int8)
+
+
+def tern_matrix(k: int, dtype=jnp.float32) -> jax.Array:
+    """Tern_[k]: (3^k, k), row j = big-endian base-3 digits of j, 2 -> -1."""
+    return jnp.asarray(_tern_np(k), dtype=dtype)
+
+
+def binary_row_codes(block: jax.Array) -> jax.Array:
+    """Per-row k-bit codes of a binary block (n, k) -> (n,) (Def 3.2 value).
+
+    ``code[r] = Σ_j block[r, j] << (k-1-j)`` — the big-endian binary value the
+    paper sorts by.  Works batched over leading dims: (..., n, k) -> (..., n).
+    """
+    k = block.shape[-1]
+    weights = (2 ** jnp.arange(k - 1, -1, -1, dtype=jnp.int32))
+    return jnp.sum(block.astype(jnp.int32) * weights, axis=-1)
+
+
+def ternary_row_codes(block: jax.Array) -> jax.Array:
+    """Per-row base-3 codes of a ternary block (..., n, k) -> (..., n).
+
+    Digit mapping {0,1,-1} -> {0,1,2}, big-endian.
+    """
+    k = block.shape[-1]
+    digits = jnp.where(block == -1, 2, block).astype(jnp.int32)
+    weights = jnp.asarray(3 ** np.arange(k - 1, -1, -1, dtype=np.int64),
+                          dtype=jnp.int32)
+    return jnp.sum(digits * weights, axis=-1)

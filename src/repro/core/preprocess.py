@@ -1,0 +1,221 @@
+"""Preprocessing: index construction (Paper §3, Algorithm 1).
+
+Given a binary weight matrix ``B ∈ {0,1}^{n×m}`` (n = input/row dim, m =
+output/column dim) and block width ``k``:
+
+  Step 1 (Def 3.1)  column blocking:  ⌈m/k⌉ blocks of k consecutive columns.
+  Step 2 (Def 3.2)  binary row order: per block, the stable permutation σ that
+                    sorts rows by their k-bit big-endian pattern value.
+  Step 3 (Def 3.4)  full segmentation: per block, the length-2^k list L of
+                    first indices per pattern value (empty patterns collapse
+                    onto the next start, exactly as in the paper's Figure 2).
+
+The index is returned as a :class:`BinaryRSRIndex` pytree carrying BOTH the
+paper-faithful (σ, L) representation (drives the CPU/NumPy reference paths and
+the memory accounting of Fig. 5) and the packed per-row code array (drives the
+TPU one-hot kernel — see DESIGN.md §2; σ = argsort(codes), L = cumsum of the
+code histogram, so the two representations are mutually recoverable).
+
+Ternary matrices become a pair of binary indices via Prop 2.1
+(:class:`TernaryRSRIndex`) or a single base-3 index (beyond-paper
+ternary-direct, :class:`TernaryDirectIndex`).
+
+All functions are jit-able; preprocessing itself is a one-off offline step
+(paper: O(n·m), optimal since the input must be read).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import binlib, ternary
+
+__all__ = [
+    "BinaryRSRIndex", "TernaryRSRIndex", "TernaryDirectIndex",
+    "preprocess_binary", "preprocess_ternary", "preprocess_ternary_direct",
+    "optimal_k_rsr", "optimal_k_rsrpp", "index_nbytes", "pad_columns",
+]
+
+
+# ---------------------------------------------------------------------------
+# Index pytrees
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BinaryRSRIndex:
+    """Preprocessed index of a binary matrix B (n×m), block width k.
+
+    codes : (num_blocks, n) uint{8,16,32} — k-bit pattern value of each row in
+            each column block (big-endian, Def 3.2).
+    perm  : (num_blocks, n) int32 — σ_Bᵢ; argsort of ``codes`` (stable).  Row
+            ``perm[i, r]`` of block i is the r-th row in binary row order.
+    seg   : (num_blocks, 2^k + 1) int32 — full segmentation with a trailing
+            sentinel n; segment j (pattern value j) spans perm rows
+            [seg[i, j], seg[i, j+1]).  (The paper's L is seg[..., :-1],
+            1-indexed; we use 0-indexed with sentinel for vector math.)
+    """
+    codes: jax.Array
+    perm: jax.Array
+    seg: jax.Array
+    k: int = dataclasses.field(metadata=dict(static=True))
+    n: int = dataclasses.field(metadata=dict(static=True))
+    m: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def num_blocks(self) -> int:
+        return self.codes.shape[0]
+
+    @property
+    def m_padded(self) -> int:
+        return self.num_blocks * self.k
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TernaryRSRIndex:
+    """Prop 2.1 pair: A = B1 - B2, each side a BinaryRSRIndex."""
+    pos: BinaryRSRIndex   # B1 = (A == +1)
+    neg: BinaryRSRIndex   # B2 = (A == -1)
+
+    @property
+    def k(self) -> int:
+        return self.pos.k
+
+    @property
+    def n(self) -> int:
+        return self.pos.n
+
+    @property
+    def m(self) -> int:
+        return self.pos.m
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TernaryDirectIndex:
+    """Beyond-paper: single base-3 index (3^k buckets, one pass instead of two).
+
+    codes : (num_blocks, n) uint{8,16,32} — base-3 pattern value per row/block.
+    perm/seg : analogous to BinaryRSRIndex with 3^k segments.
+    """
+    codes: jax.Array
+    perm: jax.Array
+    seg: jax.Array
+    k: int = dataclasses.field(metadata=dict(static=True))
+    n: int = dataclasses.field(metadata=dict(static=True))
+    m: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def num_blocks(self) -> int:
+        return self.codes.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# Preprocessing (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def pad_columns(b: jax.Array, k: int) -> jax.Array:
+    """Zero-pad trailing columns so m is a multiple of k (zero cols are inert:
+    they map to pattern bits 0 and their outputs are sliced away)."""
+    m = b.shape[1]
+    pad = (-m) % k
+    if pad:
+        b = jnp.pad(b, ((0, 0), (0, pad)))
+    return b
+
+
+def _blocks_of(b: jax.Array, k: int) -> jax.Array:
+    """(n, m_pad) -> (num_blocks, n, k) contiguous column blocks (Def 3.1)."""
+    n, mp = b.shape
+    return b.reshape(n, mp // k, k).transpose(1, 0, 2)
+
+
+def _segments_from_codes(codes: jax.Array, num_patterns: int, n: int):
+    """σ and L from per-row codes: σ = stable argsort; L via histogram cumsum.
+
+    Full segmentation semantics (paper Fig. 2): L[j] = first sorted position
+    whose pattern value is j; empty patterns take the next segment's start.
+    That is exactly the exclusive cumulative histogram.
+    """
+    perm = jnp.argsort(codes, axis=-1, stable=True).astype(jnp.int32)
+    hist = jax.vmap(
+        lambda c: jnp.bincount(c.astype(jnp.int32), length=num_patterns))(codes)
+    seg = jnp.concatenate(
+        [jnp.zeros((codes.shape[0], 1), jnp.int32),
+         jnp.cumsum(hist, axis=-1, dtype=jnp.int32)], axis=-1)
+    return perm, seg
+
+
+def preprocess_binary(b: jax.Array, k: int) -> BinaryRSRIndex:
+    """Algorithm 1 for a binary matrix (n×m) with block width k."""
+    n, m = b.shape
+    blocks = _blocks_of(pad_columns(b, k), k)            # (nb, n, k)
+    codes = binlib.binary_row_codes(blocks)              # (nb, n) int32
+    perm, seg = _segments_from_codes(codes, 2 ** k, n)
+    codes = codes.astype(binlib.code_dtype(2 ** k))
+    return BinaryRSRIndex(codes=codes, perm=perm, seg=seg, k=k, n=n, m=m)
+
+
+def preprocess_ternary(a: jax.Array, k: int) -> TernaryRSRIndex:
+    """Prop 2.1 + Algorithm 1 on both binary parts."""
+    b1, b2 = ternary.decompose_ternary(a)
+    return TernaryRSRIndex(pos=preprocess_binary(b1, k),
+                           neg=preprocess_binary(b2, k))
+
+
+def preprocess_ternary_direct(a: jax.Array, k: int) -> TernaryDirectIndex:
+    """Beyond-paper single-pass ternary index (3^k patterns)."""
+    n, m = a.shape
+    blocks = _blocks_of(pad_columns(a, k), k)
+    codes = binlib.ternary_row_codes(blocks)
+    perm, seg = _segments_from_codes(codes, 3 ** k, n)
+    codes = codes.astype(binlib.code_dtype(3 ** k))
+    return TernaryDirectIndex(codes=codes, perm=perm, seg=seg, k=k, n=n, m=m)
+
+
+# ---------------------------------------------------------------------------
+# Optimal k (paper §4.2.2 / §4.3.2, Eq. 6 / Eq. 7)
+# ---------------------------------------------------------------------------
+
+def _argmin_cost(n: int, costf, k_max: int) -> int:
+    ks = range(1, max(2, k_max + 1))
+    return min(ks, key=lambda k: costf(n, k))
+
+
+def optimal_k_rsr(n: int) -> int:
+    """argmin_k (n/k)(n + k·2^k), k ∈ [1, log n − log log n] (Eq. 6)."""
+    k_max = max(1, int(math.log2(max(2.0, n / max(1.0, math.log2(n))))))
+    return _argmin_cost(n, lambda n_, k: (n_ / k) * (n_ + k * 2 ** k), k_max)
+
+
+def optimal_k_rsrpp(n: int) -> int:
+    """argmin_k (n/k)(n + 2^k), k ∈ [1, log n] (Eq. 7)."""
+    k_max = max(1, int(math.log2(n)))
+    return _argmin_cost(n, lambda n_, k: (n_ / k) * (n_ + 2 ** k), k_max)
+
+
+# ---------------------------------------------------------------------------
+# Space accounting (Theorem 3.6 / Fig. 5)
+# ---------------------------------------------------------------------------
+
+def index_nbytes(idx, representation: str = "paper") -> int:
+    """Bytes to store the index.
+
+    representation="paper": σ + L per block (what the paper's Fig. 5 stores).
+    representation="codes": packed code array only (what the TPU kernel reads).
+    """
+    def one(b: BinaryRSRIndex | TernaryDirectIndex) -> int:
+        if representation == "paper":
+            return b.perm.size * b.perm.dtype.itemsize + \
+                   b.seg.size * b.seg.dtype.itemsize
+        return b.codes.size * b.codes.dtype.itemsize
+
+    if isinstance(idx, TernaryRSRIndex):
+        return one(idx.pos) + one(idx.neg)
+    return one(idx)

@@ -1,0 +1,148 @@
+"""Inference-time RSR multiplication (Paper §4, Algorithm 2).
+
+Three mathematically identical evaluation strategies are provided, matching
+the three execution regimes we care about:
+
+  * ``segments``  — paper-faithful Eq. 5: segmented sums over the σ-permuted
+                    vector at the L boundaries, evaluated with an exclusive
+                    prefix sum (sum of a contiguous range = difference of two
+                    prefix values).  This is the direct transcription of the
+                    paper's CPU algorithm into vector form.
+  * ``scatter``   — in-place bucket accumulation keyed by the per-row code
+                    (the composition σ∘L collapses to "add v[r] to bucket
+                    code[r]"); used as a second oracle and the fastest pure-JAX
+                    CPU path.
+  * ``onehot``    — the TPU-native formulation (DESIGN.md §2): per block,
+                    ``u = v · OneHot(codes)`` — an MXU matmul whose HBM traffic
+                    is the code array only.  The Pallas kernel in
+                    ``repro.kernels.rsr_onehot`` implements exactly this; the
+                    function here is its pure-jnp oracle.
+
+Step 2 (``u · Bin_[k]``) runs either as the plain small matmul (RSR) or the
+O(2^k) pairwise fold (RSR++, see rsrpp.py).
+
+All entry points accept batched activations ``v`` of shape (..., n) and return
+(..., m).  Everything is jit-able and differentiable w.r.t. ``v`` (the index is
+static data — the paper's core premise).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binlib
+from repro.core.preprocess import (BinaryRSRIndex, TernaryDirectIndex,
+                                   TernaryRSRIndex)
+from repro.core.rsrpp import fold_bin_product
+
+__all__ = [
+    "segmented_sum", "segmented_sum_scatter", "segmented_sum_onehot",
+    "rsr_matmul_binary", "rsr_matmul_ternary", "rsr_matmul_ternary_direct",
+]
+
+
+# ---------------------------------------------------------------------------
+# Step 1: segmented sums  u[i, j] = Σ_{r : code_i(r) = j} v[r]
+# ---------------------------------------------------------------------------
+
+def segmented_sum(v: jax.Array, perm: jax.Array, seg: jax.Array) -> jax.Array:
+    """Paper-faithful Eq. 5 via prefix sums.
+
+    v    : (..., n) activations
+    perm : (nb, n)   σ per block
+    seg  : (nb, P+1) full segmentation with sentinel
+    ->     (..., nb, P) segmented sums
+    """
+    vp = v[..., perm]                                     # (..., nb, n) permuted
+    zeros = jnp.zeros((*vp.shape[:-1], 1), vp.dtype)
+    ps = jnp.concatenate([zeros, jnp.cumsum(vp, axis=-1)], axis=-1)
+    seg_b = jnp.broadcast_to(seg, (*vp.shape[:-2], *seg.shape))
+    hi = jnp.take_along_axis(ps, seg_b[..., 1:], axis=-1)
+    lo = jnp.take_along_axis(ps, seg_b[..., :-1], axis=-1)
+    return hi - lo
+
+
+def segmented_sum_scatter(v: jax.Array, codes: jax.Array,
+                          num_patterns: int) -> jax.Array:
+    """Bucket scatter-add form: u[..., i, code[i, r]] += v[..., r]."""
+    nb, n = codes.shape
+
+    def one(vv: jax.Array) -> jax.Array:                  # vv: (n,)
+        u = jnp.zeros((nb, num_patterns), vv.dtype)
+        block_ids = jnp.broadcast_to(jnp.arange(nb)[:, None], codes.shape)
+        return u.at[block_ids, codes.astype(jnp.int32)].add(
+            jnp.broadcast_to(vv, (nb, n)))
+
+    flat = v.reshape(-1, v.shape[-1])
+    out = jax.vmap(one)(flat)
+    return out.reshape(*v.shape[:-1], nb, num_patterns)
+
+
+def segmented_sum_onehot(v: jax.Array, codes: jax.Array,
+                         num_patterns: int) -> jax.Array:
+    """One-hot MXU form: u = v · OneHot(codes) per block (oracle for Pallas)."""
+    onehot = (codes[..., None] ==
+              jnp.arange(num_patterns, dtype=jnp.int32)).astype(v.dtype)
+    return jnp.einsum("...n,bnp->...bp", v, onehot)
+
+
+_SS_IMPLS = ("segments", "scatter", "onehot")
+
+
+def _seg_sums(v, idx, num_patterns, impl):
+    if impl == "segments":
+        return segmented_sum(v, idx.perm, idx.seg)
+    if impl == "scatter":
+        return segmented_sum_scatter(v, idx.codes, num_patterns)
+    if impl == "onehot":
+        return segmented_sum_onehot(v, idx.codes, num_patterns)
+    raise ValueError(f"impl must be one of {_SS_IMPLS}, got {impl!r}")
+
+
+# ---------------------------------------------------------------------------
+# Step 2 + assembly
+# ---------------------------------------------------------------------------
+
+def _block_product(u: jax.Array, pattern_matrix: jax.Array,
+                   plus_plus: bool) -> jax.Array:
+    """(..., nb, P) × (P, k) -> (..., nb, k); fold when plus_plus (binary only)."""
+    if plus_plus:
+        return fold_bin_product(u)
+    return jnp.einsum("...bp,pk->...bk", u, pattern_matrix)
+
+
+def _assemble(r_blocks: jax.Array, m: int) -> jax.Array:
+    """(..., nb, k) -> (..., m): concatenate block results, drop col padding."""
+    out = r_blocks.reshape(*r_blocks.shape[:-2], -1)
+    return out[..., :m]
+
+
+@partial(jax.jit, static_argnames=("impl", "plus_plus"))
+def rsr_matmul_binary(v: jax.Array, idx: BinaryRSRIndex, *,
+                      impl: str = "segments",
+                      plus_plus: bool = False) -> jax.Array:
+    """Algorithm 2 (RSR) / with Algorithm 3 step-2 (RSR++): v · B, v (..., n)."""
+    u = _seg_sums(v, idx, 2 ** idx.k, impl)
+    r = _block_product(u, binlib.bin_matrix(idx.k, v.dtype), plus_plus)
+    return _assemble(r, idx.m)
+
+
+@partial(jax.jit, static_argnames=("impl", "plus_plus"))
+def rsr_matmul_ternary(v: jax.Array, idx: TernaryRSRIndex, *,
+                       impl: str = "segments",
+                       plus_plus: bool = False) -> jax.Array:
+    """Prop 2.1 assembly: v·A = v·B1 − v·B2."""
+    pos = rsr_matmul_binary(v, idx.pos, impl=impl, plus_plus=plus_plus)
+    neg = rsr_matmul_binary(v, idx.neg, impl=impl, plus_plus=plus_plus)
+    return pos - neg
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def rsr_matmul_ternary_direct(v: jax.Array, idx: TernaryDirectIndex, *,
+                              impl: str = "segments") -> jax.Array:
+    """Beyond-paper single-pass ternary RSR (3^k buckets, Tern_[k] step 2)."""
+    u = _seg_sums(v, idx, 3 ** idx.k, impl)
+    r = _block_product(u, binlib.tern_matrix(idx.k, v.dtype), plus_plus=False)
+    return _assemble(r, idx.m)

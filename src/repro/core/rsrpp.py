@@ -1,0 +1,41 @@
+"""RSR++ Step 2: the O(2^k) pairwise-fold product u · Bin_[k] (Paper §4.3, Alg. 3).
+
+Correctness derivation (matches the paper's (i)/(ii) loop): with 0-indexed
+patterns, column k-1 of Bin_[k] (the LSB column) has a 1 exactly at odd pattern
+values, so
+
+    r[k-1] = Σ_{p odd} u[p]                       ... step (i)
+
+and summing adjacent pairs x[q] = u[2q] + u[2q+1] marginalizes the LSB out,
+leaving the identical (k-1)-bit subproblem on a half-length vector
+                                                   ... step (ii)
+
+Iterating emits outputs LSB→MSB ("from the k-th element to the first") with
+total work 2^k + 2^{k-1} + ... = O(2^k) adds, log-depth — ideal for the TPU
+VPU (each fold is a reshape + lane-reduce).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["fold_bin_product"]
+
+
+def fold_bin_product(u: jax.Array) -> jax.Array:
+    """u (..., 2^k)  ->  u · Bin_[k]  (..., k), via Algorithm 3.
+
+    k is derived from the trailing dimension (must be a power of two).
+    """
+    p = u.shape[-1]
+    k = p.bit_length() - 1
+    if 2 ** k != p:
+        raise ValueError(f"trailing dim must be 2^k, got {p}")
+    outs = []
+    x = u
+    for _ in range(k):
+        pairs = x.reshape(*x.shape[:-1], -1, 2)
+        outs.append(pairs[..., 1].sum(axis=-1))   # (i): odd-pattern sum
+        x = pairs.sum(axis=-1)                    # (ii): marginalize LSB
+    # outs[0] is the LSB column (r[k-1]); stack back in MSB..LSB order.
+    return jnp.stack(outs[::-1], axis=-1)

@@ -1,0 +1,118 @@
+"""Ternary/binary weight handling (Paper §2, Prop 2.1) + BitNet-style QAT quantizers.
+
+A ternary matrix ``A ∈ {-1,0,1}^{n×m}`` is decomposed as ``A = B1 - B2`` with
+``B1 = (A == 1)`` and ``B2 = (A == -1)`` (Proposition 2.1).  All RSR machinery
+operates on binary matrices; ternary support is the (B1, B2) pair plus the
+beyond-paper ternary-direct code path (see preprocess.py).
+
+Also provides the 2-bit packing used by the dense "Standard" TPU baseline
+kernel and the absmean ternary quantizer (BitNet b1.58, Ma et al. 2024) used
+for quantization-aware training so trained checkpoints are RSR-preprocessable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "decompose_ternary",
+    "recompose_ternary",
+    "pack2bit",
+    "unpack2bit",
+    "absmean_quantize",
+    "ste_ternary",
+    "absmax_quantize_activations",
+]
+
+
+def decompose_ternary(a: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Proposition 2.1: A = B1 - B2 with binary B1, B2 (same shape, int8)."""
+    b1 = (a == 1).astype(jnp.int8)
+    b2 = (a == -1).astype(jnp.int8)
+    return b1, b2
+
+
+def recompose_ternary(b1: jax.Array, b2: jax.Array) -> jax.Array:
+    """Inverse of :func:`decompose_ternary`."""
+    return (b1.astype(jnp.int8) - b2.astype(jnp.int8)).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# 2-bit packing (dense baseline storage: the best-practice non-RSR layout)
+# ---------------------------------------------------------------------------
+
+def pack2bit(a: jax.Array) -> jax.Array:
+    """Pack a ternary array {-1,0,1} into uint8, 4 values per byte.
+
+    Encoding per 2-bit field: 0 -> 0, 1 -> 1, -1 -> 2.  Packing runs along the
+    *leading* axis (rows) so a column stays contiguous per packed byte — the
+    dequant matmul kernel unpacks 4 rows at a time.
+    Input leading dim must be a multiple of 4 (pad first if not).
+    """
+    n = a.shape[0]
+    if n % 4 != 0:
+        raise ValueError(f"pack2bit needs leading dim % 4 == 0, got {n}")
+    enc = jnp.where(a == -1, 2, a).astype(jnp.uint8)  # {-1,0,1} -> {2,0,1}
+    enc = enc.reshape(n // 4, 4, *a.shape[1:])
+    shifts = jnp.array([0, 2, 4, 6], dtype=jnp.uint8).reshape(
+        (1, 4) + (1,) * (a.ndim - 1))
+    return jnp.sum(enc << shifts, axis=1).astype(jnp.uint8)
+
+
+def unpack2bit(packed: jax.Array, n_rows: int) -> jax.Array:
+    """Inverse of :func:`pack2bit` -> int8 ternary array with ``n_rows`` rows."""
+    shifts = jnp.array([0, 2, 4, 6], dtype=jnp.uint8).reshape(
+        (1, 4) + (1,) * (packed.ndim - 1))
+    fields = (packed[:, None] >> shifts) & 0x3
+    dec = jnp.where(fields == 2, -1, fields.astype(jnp.int8)).astype(jnp.int8)
+    return dec.reshape(n_rows, *packed.shape[1:])
+
+
+# ---------------------------------------------------------------------------
+# QAT quantizers (training side; BitNet b1.58)
+# ---------------------------------------------------------------------------
+
+def absmean_quantize(w: jax.Array, eps: float = 1e-6) -> tuple[jax.Array, jax.Array]:
+    """BitNet-b1.58 absmean ternary quantization.
+
+    Returns (ternary int8 matrix, per-matrix fp scale gamma) with
+    ``W ≈ gamma * W_t``,  ``W_t = clip(round(W / gamma), -1, 1)``.
+    """
+    gamma = jnp.mean(jnp.abs(w)) + eps
+    wt = jnp.clip(jnp.round(w / gamma), -1, 1).astype(jnp.int8)
+    return wt, gamma.astype(jnp.float32)
+
+
+def ste_ternary(w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Straight-through ternary quantization for QAT forward passes.
+
+    Forward: gamma * clip(round(w/gamma), -1, 1).  Backward: identity.
+    """
+    gamma = jnp.mean(jnp.abs(w)) + eps
+    wq = gamma * jnp.clip(jnp.round(w / gamma), -1, 1)
+    return w + jax.lax.stop_gradient(wq - w)
+
+
+def absmax_quantize_activations(x: jax.Array, bits: int = 8,
+                                eps: float = 1e-6) -> jax.Array:
+    """Per-token absmax fake-quant of activations (BitNet §2), STE backward."""
+    qmax = 2 ** (bits - 1) - 1
+    scale = qmax / (jnp.max(jnp.abs(x), axis=-1, keepdims=True) + eps)
+    xq = jnp.clip(jnp.round(x * scale), -qmax, qmax) / scale
+    return x + jax.lax.stop_gradient(xq - x)
+
+
+# ---------------------------------------------------------------------------
+# Random ternary/binary generators (benchmarks + tests)
+# ---------------------------------------------------------------------------
+
+def random_ternary(key: jax.Array, shape, p_zero: float = 1 / 3) -> jax.Array:
+    """Random ternary matrix; P(0)=p_zero, P(+1)=P(-1)=(1-p_zero)/2."""
+    u = jax.random.uniform(key, shape)
+    p1 = (1 - p_zero) / 2
+    return jnp.where(u < p1, 1, jnp.where(u < 2 * p1, -1, 0)).astype(jnp.int8)
+
+
+def random_binary(key: jax.Array, shape, p_one: float = 0.5) -> jax.Array:
+    return (jax.random.uniform(key, shape) < p_one).astype(jnp.int8)

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the perf-critical compute: RSR one-hot matmul (the
+paper's technique) and the dense 2-bit dequant baseline.  Validated against
+ref.py oracles in interpret mode; TPU is the target hardware."""
+from repro.kernels.ops import rsr_matmul_kernel, ternary_matmul_kernel
+from repro.kernels.rsr_onehot import rsr_onehot_matmul
+from repro.kernels.ternary_dequant import ternary_dequant_matmul

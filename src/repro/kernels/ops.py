@@ -1,0 +1,96 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles shape padding to tile multiples (safe: activation rows pad with zeros,
+extra column blocks are sliced off the output), index-type dispatch, and the
+scale application of quantized linears.  ``interpret=True`` everywhere in this
+container (CPU); on a real TPU runtime the flag flips to False unchanged.
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binlib
+from repro.core.preprocess import (BinaryRSRIndex, TernaryDirectIndex,
+                                   TernaryRSRIndex)
+from repro.kernels.rsr_onehot import rsr_onehot_matmul
+from repro.kernels.ternary_dequant import ternary_dequant_matmul
+
+__all__ = ["rsr_matmul_kernel", "ternary_matmul_kernel"]
+
+AnyIndex = Union[BinaryRSRIndex, TernaryRSRIndex, TernaryDirectIndex]
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def rsr_matmul_kernel(v: jax.Array, idx: AnyIndex, *,
+                      scale: Optional[jax.Array] = None,
+                      fused_ternary: bool = True,
+                      tile_b: int = 8, tile_blk: int = 8, tile_n: int = 256,
+                      interpret: bool = True) -> jax.Array:
+    """v (..., n) × indexed matrix -> (..., m) through the Pallas kernel."""
+    lead = v.shape[:-1]
+    n = v.shape[-1]
+    x = v.reshape(-1, n)
+    b = x.shape[0]
+    x = _pad_to(_pad_to(x, 0, tile_b), 1, tile_n)
+
+    if isinstance(idx, TernaryRSRIndex) and not fused_ternary:
+        pos = rsr_matmul_kernel(v, idx.pos, tile_b=tile_b, tile_blk=tile_blk,
+                                tile_n=tile_n, interpret=interpret)
+        neg = rsr_matmul_kernel(v, idx.neg, tile_b=tile_b, tile_blk=tile_blk,
+                                tile_n=tile_n, interpret=interpret)
+        out = pos - neg
+        return out * scale if scale is not None else out
+
+    if isinstance(idx, TernaryRSRIndex):
+        codes, neg_codes = idx.pos.codes, idx.neg.codes
+        pattern = binlib.bin_matrix(idx.k)
+        k, m = idx.k, idx.m
+    elif isinstance(idx, BinaryRSRIndex):
+        codes, neg_codes = idx.codes, None
+        pattern = binlib.bin_matrix(idx.k)
+        k, m = idx.k, idx.m
+    elif isinstance(idx, TernaryDirectIndex):
+        codes, neg_codes = idx.codes, None
+        pattern = binlib.tern_matrix(idx.k)
+        k, m = idx.k, idx.m
+    else:
+        raise TypeError(type(idx))
+
+    codes = _pad_to(_pad_to(codes, 0, tile_blk), 1, tile_n)
+    if neg_codes is not None:
+        neg_codes = _pad_to(_pad_to(neg_codes, 0, tile_blk), 1, tile_n)
+
+    y = rsr_onehot_matmul(x, codes, pattern, neg_codes,
+                          tile_b=tile_b, tile_blk=tile_blk, tile_n=tile_n,
+                          interpret=interpret)
+    y = y[:b, :m].reshape(*lead, m)
+    return y * scale if scale is not None else y
+
+
+def ternary_matmul_kernel(v: jax.Array, packed: jax.Array, m: int, *,
+                          scale: Optional[jax.Array] = None,
+                          tile_b: int = 8, tile_m: int = 128,
+                          tile_n: int = 256,
+                          interpret: bool = True) -> jax.Array:
+    """Dense baseline: v (..., n) × unpack2bit(packed) -> (..., m)."""
+    lead = v.shape[:-1]
+    n = v.shape[-1]
+    x = v.reshape(-1, n)
+    b = x.shape[0]
+    x = _pad_to(_pad_to(x, 0, tile_b), 1, tile_n)
+    packed = _pad_to(_pad_to(packed, 0, tile_n // 4), 1, tile_m)
+    y = ternary_dequant_matmul(x, packed, tile_b=tile_b, tile_m=tile_m,
+                               tile_n=tile_n, interpret=interpret)
+    y = y[:b, :m].reshape(*lead, m)
+    return y * scale if scale is not None else y

@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ternary import unpack2bit
+
+__all__ = ["rsr_onehot_ref", "ternary_dequant_ref"]
+
+
+def rsr_onehot_ref(x: jax.Array, codes: jax.Array, pattern: jax.Array,
+                   neg_codes: jax.Array | None = None) -> jax.Array:
+    """Oracle for rsr_onehot_matmul: explicit one-hot einsum, fp32."""
+    p = pattern.shape[0]
+    ar = jnp.arange(p, dtype=jnp.int32)
+    oh = (codes.astype(jnp.int32)[..., None] == ar).astype(jnp.float32)
+    if neg_codes is not None:
+        oh = oh - (neg_codes.astype(jnp.int32)[..., None] == ar).astype(
+            jnp.float32)
+    u = jnp.einsum("bn,cnp->bcp", x.astype(jnp.float32), oh)
+    y = jnp.einsum("bcp,pk->bck", u, pattern.astype(jnp.float32))
+    return y.reshape(x.shape[0], -1)
+
+
+def ternary_dequant_ref(x: jax.Array, packed: jax.Array) -> jax.Array:
+    """Oracle for ternary_dequant_matmul: unpack then dense fp32 matmul."""
+    n = packed.shape[0] * 4
+    w = unpack2bit(packed, n).astype(jnp.float32)
+    return x.astype(jnp.float32) @ w

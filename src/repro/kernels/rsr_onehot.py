@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: RSR one-hot matmul (the paper's technique, TPU-native).
+
+Computes ``y = x @ W`` for a binary/ternary W represented **only by its RSR
+code arrays** (DESIGN.md §2).  Per k-column block b:
+
+    u_b = x · OneHot(codes[b])        (MXU matmul; one-hot built in-register
+                                       from the streamed k-bit codes)
+    y_b = u_b · pattern               (pattern = Bin_[k] or Tern_[k]; tiny)
+
+HBM traffic for the weight side is the code array alone — the TPU
+materialization of the paper's "index instead of matrix" insight.  The same
+kernel body serves three modes (chosen by what the wrapper feeds it):
+
+  * binary RSR        : one code array, pattern = Bin_[k]   (P = 2^k)
+  * ternary fused     : two code arrays (Prop 2.1), signed one-hot
+                        OH(pos) − OH(neg), pattern = Bin_[k]
+  * ternary direct    : one base-3 code array, pattern = Tern_[k] (P = 3^k)
+                        — beyond-paper, 1.6 bits/weight traffic.
+
+Grid: (batch tiles, block tiles, n tiles); the contraction (n) axis is the
+innermost, accumulated in a VMEM scratch ``u`` of shape (TBLK, TB, P) and
+projected through ``pattern`` on the final n step.
+
+Tiling notes (v5e): TN multiple of 128 feeds the MXU contraction dim aligned;
+P ≤ 256 keeps each one-hot (TN, P) tile ≤ 128 KB fp32 in VMEM; the unrolled
+python loop over TBLK blocks keeps per-iteration VMEM at one one-hot tile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["rsr_onehot_matmul"]
+
+
+def _kernel(x_ref, codes_ref, neg_ref, pat_ref, out_ref, u_ref, *,
+            n_steps: int, signed: bool):
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        u_ref[...] = jnp.zeros_like(u_ref)
+
+    x = x_ref[...].astype(jnp.float32)              # (TB, TN)
+    codes = codes_ref[...].astype(jnp.int32)        # (TBLK, TN)
+    neg = neg_ref[...].astype(jnp.int32) if signed else None
+    tblk, tn = codes.shape
+    p = u_ref.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (tn, p), 1)
+    for b in range(tblk):                           # static unroll
+        oh = (codes[b][:, None] == iota).astype(jnp.float32)
+        if signed:
+            oh = oh - (neg[b][:, None] == iota).astype(jnp.float32)
+        u_ref[b] += jnp.dot(x, oh, preferred_element_type=jnp.float32)
+
+    @pl.when(i == n_steps - 1)
+    def _project():
+        pat = pat_ref[...].astype(jnp.float32)      # (P, k)
+        u = u_ref[...]                              # (TBLK, TB, P)
+        y = jax.lax.dot_general(
+            u, pat, (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)     # (TBLK, TB, k)
+        tb = y.shape[1]
+        out_ref[...] = y.transpose(1, 0, 2).reshape(tb, -1).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tile_b", "tile_blk", "tile_n", "interpret"))
+def rsr_onehot_matmul(x: jax.Array,
+                      codes: jax.Array,
+                      pattern: jax.Array,
+                      neg_codes: Optional[jax.Array] = None,
+                      *,
+                      tile_b: int = 8,
+                      tile_blk: int = 8,
+                      tile_n: int = 256,
+                      interpret: bool = True) -> jax.Array:
+    """y[..B, nb*k] = x[..B, n] · W  with W given as RSR codes.
+
+    x        : (B, n) activations (any float dtype)
+    codes    : (nb, n) integer code array (pattern value per row per block)
+    pattern  : (P, k) Bin_[k] / Tern_[k] enumeration matrix
+    neg_codes: optional second code array -> signed one-hot (ternary fused)
+
+    B, nb, n must be multiples of the respective tiles (wrapper in ops.py
+    pads).  Returns (B, nb*k) float32.
+    """
+    b, n = x.shape
+    nb, n2 = codes.shape
+    assert n == n2, (n, n2)
+    p, k = pattern.shape
+    assert b % tile_b == 0 and nb % tile_blk == 0 and n % tile_n == 0, \
+        (b, nb, n, tile_b, tile_blk, tile_n)
+    n_steps = n // tile_n
+    signed = neg_codes is not None
+    if not signed:                       # dummy ref, never read
+        neg_codes = codes
+
+    grid = (b // tile_b, nb // tile_blk, n_steps)
+    kernel = functools.partial(_kernel, n_steps=n_steps, signed=signed)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, tile_n), lambda bi, ji, ii: (bi, ii)),
+            pl.BlockSpec((tile_blk, tile_n), lambda bi, ji, ii: (ji, ii)),
+            pl.BlockSpec((tile_blk, tile_n), lambda bi, ji, ii: (ji, ii)),
+            pl.BlockSpec((p, k), lambda bi, ji, ii: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, tile_blk * k),
+                               lambda bi, ji, ii: (bi, ji)),
+        out_shape=jax.ShapeDtypeStruct((b, nb * k), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((tile_blk, tile_b, p), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, codes, neg_codes, pattern)

@@ -1,0 +1,287 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT-lower + compile every (arch × shape × mesh) cell.
+
+For each cell this builds abstract inputs (ShapeDtypeStruct — zero
+allocation), the sharded step function (train_step / forward-prefill /
+decode_step), runs ``.lower().compile()`` against the production mesh, and
+records memory_analysis / cost_analysis / per-kind collective bytes +
+derived roofline terms into a JSON file under experiments/dryrun/.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b \
+        --shape train_4k --mesh pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+
+The XLA_FLAGS line above MUST precede any jax import (device count locks at
+first init); smoke tests / benches import repro modules directly and see 1
+device.
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import (ModelConfig, SHAPES, ShapeConfig, TrainConfig,
+                          get_config, list_archs, shape_applicable)
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as tfm
+from repro.parallel import sharding as shd
+from repro.roofline import analysis as roof
+from repro.roofline import flops as fl
+from repro.train import loop as train_loop
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "audio_stub":
+            batch = {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt),
+                     "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                     "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.frontend == "vision_stub":
+            batch["image_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_image_tokens, cfg.d_model), dt)
+        return batch
+    # decode: one new token against a seq_len KV cache
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+
+
+def abstract_state(cfg: ModelConfig, tcfg: TrainConfig):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(
+        functools.partial(train_loop.train_state_init, cfg, tcfg),
+        jax.random.PRNGKey(0))
+
+
+def abstract_serve(cfg: ModelConfig):
+    params = jax.eval_shape(functools.partial(tfm.init_params, cfg),
+                            jax.random.PRNGKey(0))
+    return jax.eval_shape(functools.partial(tfm.serve_params, cfg=cfg),
+                          params)
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+
+def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+               cfg_override=None):
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": why}
+    tcfg = TrainConfig(remat="block")
+    chips = int(np.prod(list(mesh.shape.values())))
+
+    with mesh:
+        if shape.kind == "train":
+            state_abs = abstract_state(cfg, tcfg)
+            batch_abs = input_specs(cfg, shape)
+            state_specs = {
+                "params": shd.param_pspecs(state_abs["params"], mesh),
+            }
+            from repro.train.optimizer import OptState
+            p_specs = state_specs["params"]
+            state_specs["opt"] = OptState(
+                step=jax.sharding.PartitionSpec(),
+                mu=p_specs, nu=p_specs)
+            batch_specs = shd.batch_pspecs(batch_abs, mesh)
+            step = functools.partial(train_loop.train_step, cfg=cfg,
+                                     tcfg=tcfg)
+            lowered = jax.jit(
+                step,
+                in_shardings=(shd.shardings(state_specs, mesh),
+                              shd.shardings(batch_specs, mesh)),
+                out_shardings=(shd.shardings(state_specs, mesh), None),
+                donate_argnums=(0,),
+            ).lower(state_abs, batch_abs)
+        elif shape.kind == "prefill":
+            sp_abs = abstract_serve(cfg)
+            batch_abs = input_specs(cfg, shape)
+            sp_specs = shd.param_pspecs(sp_abs, mesh, serve=True)
+            batch_specs = shd.batch_pspecs(batch_abs, mesh)
+
+            def prefill(params, batch):
+                logits, _ = tfm.forward(params, batch, cfg, quantize=False)
+                return logits
+
+            lowered = jax.jit(
+                prefill,
+                in_shardings=(shd.shardings(sp_specs, mesh),
+                              shd.shardings(batch_specs, mesh)),
+            ).lower(sp_abs, batch_abs)
+        else:                                       # decode
+            sp_abs = abstract_serve(cfg)
+            cache_abs = tfm.init_cache(cfg, shape.global_batch,
+                                       shape.seq_len, abstract=True)
+            tok_abs = input_specs(cfg, shape)["tokens"]
+            sp_specs = shd.param_pspecs(
+                sp_abs, mesh, serve=True,
+                replicate_small=shape.global_batch >= 16)
+            cache_specs = shd.cache_pspecs(cache_abs, mesh)
+            tok_spec = shd.batch_pspecs({"t": tok_abs}, mesh)["t"]
+
+            def serve_step(params, cache, tokens):
+                return tfm.decode_step(params, cache, tokens, cfg)
+
+            lowered = jax.jit(
+                serve_step,
+                in_shardings=(shd.shardings(sp_specs, mesh),
+                              shd.shardings(cache_specs, mesh),
+                              shd.shardings({"t": tok_spec}, mesh)["t"]),
+                donate_argnums=(1,),
+            ).lower(sp_abs, cache_abs, tok_abs)
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_info = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "peak_bytes": getattr(mem, "peak_memory_in_bytes",
+                              getattr(mem, "temp_size_in_bytes", 0)),
+        "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+    }
+    counts = fl.param_counts(
+        jax.eval_shape(functools.partial(tfm.init_params, cfg),
+                       jax.random.PRNGKey(0)), cfg)
+    mflops = fl.model_flops(cfg, shape, counts)
+    extra = 0.0
+    if shape.kind == "decode" and cfg.rsr_serve and cfg.quant != "none":
+        # scatter adds are invisible to XLA cost analysis — add per-chip
+        extra = fl.rsr_scatter_flops(abstract_serve(cfg), cfg,
+                                     shape.global_batch) / chips
+    # analytic per-chip byte floors (CPU-backend HLO inflates bytes ~2-3x by
+    # f32-converting every bf16 dot operand — native on TPU; see EXPERIMENTS)
+    def tree_bytes(t):
+        return float(sum(np.prod(l.shape) * jnp.dtype(l.dtype).itemsize
+                         for l in jax.tree.leaves(t)))
+    tp = mesh.shape.get("model", 1)
+    analytic = {}
+    if shape.kind == "train":
+        analytic["param_bytes_per_chip"] = tree_bytes(
+            state_abs["params"]) / chips
+    else:
+        analytic["param_bytes_per_chip"] = tree_bytes(sp_abs) / tp
+    if shape.kind == "decode":
+        analytic["cache_bytes_per_chip"] = tree_bytes(cache_abs) / chips
+        analytic["min_memory_s"] = (
+            analytic["param_bytes_per_chip"] +
+            analytic["cache_bytes_per_chip"]) / 819e9
+    hlo = compiled.as_text()
+    # scan-aware HLO cost model (XLA cost_analysis counts while bodies once —
+    # ~num_layers undercount on scanned stacks; see roofline/hlo_cost.py)
+    from repro.roofline.hlo_cost import analyze_hlo
+    hc = analyze_hlo(hlo)
+    rl = roof.Roofline(arch=arch, shape=shape_name, mesh=mesh_name,
+                       chips=chips,
+                       hlo_flops=hc["flops"] + extra,
+                       hlo_bytes=hc["bytes"],
+                       coll_bytes=hc["collectives"]["total"],
+                       model_flops=mflops / chips).finalize()
+    raw = roof.analyze(compiled, arch=arch, shape=shape_name,
+                       mesh_name=mesh_name, chips=chips, model_flops=mflops,
+                       hlo_text=hlo, extra_flops=extra)
+    coll = roof.collective_bytes(hlo)
+    return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "status": "ok", "chips": chips, "compile_s": compile_s,
+            "analytic": analytic,
+            "memory": mem_info,
+            "bytes_per_device": (mem_info["argument_bytes"] +
+                                 mem_info["temp_bytes"] +
+                                 mem_info["output_bytes"]) / chips,
+            "params_total": counts["total"],
+            "params_active": counts["active"],
+            "scan_loops": hc["loops"],
+            "collectives": {k: v for k, v in hc["collectives"].items()},
+            "collective_counts": coll["counts"],
+            "roofline": rl.to_dict(),
+            "roofline_raw_costanalysis": raw.to_dict()}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str):
+    os.makedirs(out_dir, exist_ok=True)
+    multi = mesh_kind == "multipod"
+    mesh = make_production_mesh(multi_pod=multi)
+    name = f"{arch}__{shape_name}__{mesh_kind}"
+    path = os.path.join(out_dir, name + ".json")
+    try:
+        rec = lower_cell(arch, shape_name, mesh,
+                         "2x16x16" if multi else "16x16")
+    except Exception as e:
+        rec = {"arch": arch, "shape": shape_name,
+               "mesh": "2x16x16" if multi else "16x16",
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = rec["status"]
+    extra = ""
+    if status == "ok":
+        r = rec["roofline"]
+        extra = (f" dom={r['dominant']} frac={r['roofline_fraction']:.3f} "
+                 f"compile={rec['compile_s']:.0f}s "
+                 f"bpd={rec['bytes_per_device']/2**30:.2f}GiB")
+    elif status == "error":
+        extra = " " + rec["error"][:160]
+    print(f"[dryrun] {name}: {status}{extra}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod",
+                                                      "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(OUT_DIR))
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = (["pod", "multipod"] if args.mesh == "both" else [args.mesh])
+    if args.all:
+        cells = [(a, s) for a in list_archs()[:10] for s in SHAPES]
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+
+    for arch, shape in cells:
+        for mk in meshes:
+            path = os.path.join(args.out, f"{arch}__{shape}__{mk}.json")
+            if args.skip_existing and os.path.exists(path):
+                rec = json.load(open(path))
+                if rec.get("status") in ("ok", "skipped"):
+                    print(f"[dryrun] {arch}__{shape}__{mk}: cached "
+                          f"({rec['status']})", flush=True)
+                    continue
+            run_cell(arch, shape, mk, args.out)
+
+
+if __name__ == "__main__":
+    main()

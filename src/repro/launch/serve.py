@@ -1,0 +1,76 @@
+"""Serving driver CLI: initialize (or load) ternary weights, preprocess to
+RSR indices, serve batched requests.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch falcon3-3b-1.58bit \
+        --reduced --requests 4
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.config import ServeConfig, get_config
+from repro.models import transformer as tfm
+from repro.serve.engine import BatchScheduler, Engine, Request
+from repro.train import checkpoint as ckpt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ckpt", default=None,
+                    help="restore trained params from this checkpoint dir")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--no-rsr", action="store_true",
+                    help="serve dense-dequant instead of RSR indices")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.no_rsr:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, rsr_serve=False)
+
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    if args.ckpt:
+        step = ckpt.latest_step(args.ckpt)
+        state_like = {"params": params}
+        params = ckpt.restore(args.ckpt, step, state_like)["params"]
+        print(f"restored params from {args.ckpt} step {step}")
+
+    t0 = time.time()
+    serve_tree = tfm.serve_params(params, cfg)
+    print(f"offline preprocessing: {time.time()-t0:.2f}s "
+          f"(mode={'RSR' if cfg.rsr_serve else 'dense-dequant'})")
+
+    engine = Engine(cfg, serve_tree,
+                    ServeConfig(max_seq_len=args.max_seq,
+                                batch_size=args.batch,
+                                temperature=args.temperature))
+    sched = BatchScheduler(engine)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        sched.submit(Request(
+            rid=i,
+            prompt=rng.integers(1, cfg.vocab_size, size=8).astype(np.int32),
+            max_new=args.max_new))
+    t0 = time.time()
+    done = sched.run()
+    dt = time.time() - t0
+    toks = sum(len(r.generated) for r in done)
+    print(f"served {len(done)} requests / {toks} tokens in {dt:.2f}s")
+    for r in done:
+        print(f"  req {r.rid}: {r.generated[:8]}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Training driver CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --reduced \
+        --steps 50 --batch 8 --seq 64
+
+On the production pod this runs the same code under the 16×16 (or 2×16×16)
+mesh with FSDP×TP sharding; on this container it runs the reduced config on
+the local device.  Fault tolerance (checkpoint/restart) is always on.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig, get_config
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models import transformer as tfm
+from repro.parallel import sharding as shd
+from repro.train import data as data_lib
+from repro.train.fault import FaultManager
+from repro.train.loop import train_state_init, train_step
+from repro.train.optimizer import OptState
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--optimizer", default="adamw", choices=["adamw", "lion"])
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "int8_ef"])
+    ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the 16x16 pod mesh (needs 256 devices)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                      warmup_steps=max(5, args.steps // 20),
+                      microbatches=args.microbatches,
+                      optimizer=args.optimizer,
+                      grad_compression=args.grad_compression,
+                      checkpoint_dir=args.ckpt)
+
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_local_mesh(1, 1))
+    print(f"arch={cfg.name} mesh={dict(mesh.shape)} steps={args.steps}")
+
+    state = train_state_init(cfg, tcfg, jax.random.PRNGKey(tcfg.seed))
+    p_specs = shd.param_pspecs(state["params"], mesh)
+    sspec = {"params": p_specs,
+             "opt": OptState(step=jax.sharding.PartitionSpec(),
+                             mu=p_specs, nu=p_specs)}
+    fm = FaultManager(args.ckpt, checkpoint_every=tcfg.checkpoint_every)
+    start = 0
+    if args.resume:
+        start, restored = fm.restore_latest(
+            state, shardings_tree=shd.shardings(sspec, mesh))
+        if restored is not None:
+            state = restored
+            print(f"resumed from step {start}")
+
+    with mesh:
+        stepper = jax.jit(functools.partial(train_step, cfg=cfg, tcfg=tcfg),
+                          in_shardings=(shd.shardings(sspec, mesh), None),
+                          out_shardings=(shd.shardings(sspec, mesh), None),
+                          donate_argnums=(0,))
+
+        def batch_fn(step):
+            return jax.tree.map(jnp.asarray, data_lib.synthetic_batch(
+                cfg, args.batch, args.seq, step))
+
+        t0 = time.time()
+
+        def on_metrics(step, m):
+            if step % 10 == 0:
+                print(f"step {step:5d} loss {float(m['loss']):.4f} "
+                      f"gnorm {float(m['grad_norm']):.2f} "
+                      f"({(time.time()-t0)/max(step-start,1):.2f}s/step)",
+                      flush=True)
+
+        state = fm.run(state, stepper, batch_fn, args.steps,
+                       state_like=state, on_metrics=on_metrics)
+    print("training complete; final checkpoint:",
+          fm.restore_latest(state)[0])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model zoo: composable attention/SSM/MoE layers + scan-stacked transformer."""

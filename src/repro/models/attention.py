@@ -1,0 +1,378 @@
+"""Attention variants: MHA/GQA/MQA, sliding-window (banded), MLA (DeepSeek-V2),
+and gated cross-attention (Llama-3.2-Vision) — each with a full-sequence path
+(train/prefill) and a KV-cache decode path.
+
+Full-sequence softmax attention is evaluated flash-style: an online-softmax
+scan over KV chunks (peak memory S×C instead of S×S).  Sliding-window
+attention uses a banded evaluation — per query chunk only the (window + C)
+wide KV band is touched, so FLOPs scale with S·window, not S².
+
+Decode caches:
+  gqa  : k, v (B, S_max, KVH, hd) + cross k/v for vlm layers
+  local: ring buffer (B, window, KVH, hd), written at pos % window
+  mla  : latent c_kv (B, S_max, kv_lora) + k_pe (B, S_max, rope_dim) — the
+         MLA compression is preserved in the cache, and decode uses the
+         *absorbed* form (W_UK folded into the query, W_UV into the output).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import modules as nn
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Core softmax attention (flash-style chunked)
+# ---------------------------------------------------------------------------
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+         window: int = 0, chunk: int = 1024,
+         q_offset: int = 0) -> jax.Array:
+    """q (B,Sq,H,dh), k/v (B,Sk,KVH,dh|dv) -> (B,Sq,H,dv).
+
+    Online-softmax over KV chunks; banded when window > 0.
+    q_offset: absolute position of q[0] (for decode / banded masks).
+    """
+    b, sq, h, dh = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    groups = h // kvh
+    scale = 1.0 / math.sqrt(dh)
+    q = (q * scale).astype(jnp.float32)
+
+    if sq * sk <= chunk * chunk or sk <= chunk:
+        # small: direct
+        kk = _repeat_kv(k, groups).astype(jnp.float32)
+        vv = _repeat_kv(v, groups).astype(jnp.float32)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kk)
+        s = s + _mask(sq, sk, causal, window, q_offset)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", p, vv).astype(v.dtype)
+
+    if window > 0:
+        return _banded(q, k, v, groups, window, chunk, q_offset, causal, dv)
+    return _flash(q, k, v, groups, causal, chunk, q_offset, dv)
+
+
+def _mask(sq, sk, causal, window, q_offset):
+    qi = jnp.arange(sq)[:, None] + q_offset
+    kj = jnp.arange(sk)[None, :]
+    m = jnp.zeros((sq, sk), jnp.float32)
+    if causal:
+        m = jnp.where(kj > qi, NEG_INF, m)
+    if window > 0:
+        m = jnp.where(kj <= qi - window, NEG_INF, m)
+    return m
+
+
+def _flash(q, k, v, groups, causal, chunk, q_offset, dv):
+    """Online-softmax scan over KV chunks."""
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    nchunks = -(-sk // chunk)
+    pad = nchunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, nchunks, chunk, k.shape[2], dh).astype(jnp.float32)
+    vc = v.reshape(b, nchunks, chunk, v.shape[2], dv).astype(jnp.float32)
+
+    def step(carry, inputs):
+        m_prev, l_prev, acc = carry
+        kj, vj, j0 = inputs
+        kk = _repeat_kv(kj, groups)
+        vv = _repeat_kv(vj, groups)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kk)          # (B,H,Sq,C)
+        qi = jnp.arange(sq)[:, None] + q_offset           # (Sq,1) abs q pos
+        kpos = j0 + jnp.arange(chunk)[None, :]            # (1,C) abs k pos
+        mask = kpos <= qi if causal else jnp.ones((sq, chunk), bool)
+        mask = mask & (kpos < sk)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vv)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, dv), jnp.float32)
+    kc_t = jnp.moveaxis(kc, 1, 0)
+    vc_t = jnp.moveaxis(vc, 1, 0)
+    offs = jnp.arange(nchunks) * chunk
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc_t, vc_t, offs))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return jnp.moveaxis(out, 1, 2).astype(v.dtype)       # (B,Sq,H,dv)
+
+
+def _banded(q, k, v, groups, window, chunk, q_offset, causal, dv):
+    """Sliding-window: per q-chunk touch only the (window+chunk) KV band."""
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    band = window + chunk                                  # kv span per q chunk
+    nq = -(-sq // chunk)
+    padq = nq * chunk - sq
+    if padq:
+        q = jnp.pad(q, ((0, 0), (0, padq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (band, chunk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (band, chunk), (0, 0), (0, 0)))
+
+    def one_chunk(i):
+        q_i = jax.lax.dynamic_slice_in_dim(q, i * chunk, chunk, axis=1)
+        # kv band covering positions [i*chunk - window, i*chunk + chunk)
+        start = i * chunk                                  # shifted by +band pad
+        k_i = jax.lax.dynamic_slice_in_dim(kp, start, band, axis=1)
+        v_i = jax.lax.dynamic_slice_in_dim(vp, start, band, axis=1)
+        kk = _repeat_kv(k_i, groups).astype(jnp.float32)
+        vv = _repeat_kv(v_i, groups).astype(jnp.float32)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q_i, kk)
+        qi = (i * chunk + jnp.arange(chunk))[:, None] + q_offset
+        kj = (i * chunk - window + jnp.arange(band))[None, :] + q_offset
+        mask = (kj >= 0) & (kj < sk + q_offset)
+        if causal:
+            mask = mask & (kj <= qi)
+        mask = mask & (kj > qi - window)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", p, vv)
+
+    out = jax.lax.map(one_chunk, jnp.arange(nq))           # (nq,B,C,H,dv)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, nq * chunk, h, dv)
+    return out[:, :sq].astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA/MQA layer (+ optional sliding window) — params & full/decode apply
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg: ModelConfig) -> dict:
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": nn.init_linear(ks[0], cfg.d_model, cfg.num_heads * hd,
+                             bias=cfg.qkv_bias, cfg=cfg),
+        "wk": nn.init_linear(ks[1], cfg.d_model, cfg.num_kv_heads * hd,
+                             bias=cfg.qkv_bias, cfg=cfg),
+        "wv": nn.init_linear(ks[2], cfg.d_model, cfg.num_kv_heads * hd,
+                             bias=cfg.qkv_bias, cfg=cfg),
+        "wo": nn.init_linear(ks[3], cfg.num_heads * hd, cfg.d_model, cfg=cfg),
+    }
+
+
+def gqa_apply(p: dict, x: jax.Array, *, cfg: ModelConfig, lin,
+              window: int = 0, positions: Optional[jax.Array] = None,
+              cache: Optional[dict] = None, pos: Optional[jax.Array] = None):
+    """Full-seq when cache is None, else single-step decode.
+
+    Returns (out, new_cache)."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    h, kvh = cfg.num_heads, cfg.num_kv_heads
+    q = lin(p["wq"], x).reshape(b, s, h, hd)
+    k = lin(p["wk"], x).reshape(b, s, kvh, hd)
+    v = lin(p["wv"], x).reshape(b, s, kvh, hd)
+
+    if cache is None:
+        if positions is None:
+            positions = jnp.arange(s)[None, :]
+        if not cfg.is_encoder:
+            q = nn.apply_rope(q, positions, theta=cfg.rope_theta)
+            k = nn.apply_rope(k, positions, theta=cfg.rope_theta)
+        out = sdpa(q, k, v, causal=cfg.causal, window=window)
+        return lin(p["wo"], out.reshape(b, s, h * hd)), None
+
+    # ---- decode: s == 1 ----
+    # Cache layout is (B, KVH, S, hd): the score dot contracts the LAST axis
+    # and the PV dot contracts S with no transposes — the (B,S,KVH,hd)
+    # layout cost two full-cache transpose copies per layer in the lowered
+    # HLO (256 MiB/layer on gemma decode; perf_iterations/iter3).
+    posv = pos if pos is not None else cache["pos"]
+    q = nn.apply_rope(q, posv[:, None], theta=cfg.rope_theta)
+    k = nn.apply_rope(k, posv[:, None], theta=cfg.rope_theta)
+    smax = cache["k"].shape[2]
+    if window > 0:
+        slot = (posv % smax)[0]
+    else:
+        slot = posv[0]
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.transpose(0, 2, 1, 3).astype(cache["k"].dtype),
+        slot, axis=2)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.transpose(0, 2, 1, 3).astype(cache["v"].dtype),
+        slot, axis=2)
+    # keep the cache in its storage dtype: upcasting here materializes an
+    # f32 copy of the whole cache (XLA hoists the convert out of the layer
+    # scan — measured 1.15 GB/step on gemma decode, perf_iterations/iter2).
+    groups = h // kvh
+    qg = (q / math.sqrt(hd)).astype(ck.dtype)      # (b,1,h,hd)
+    qg = qg.reshape(b, kvh, groups, hd)            # group by kv head
+    s_ = jnp.einsum("bhgd,bhkd->bhgk", qg, ck,
+                    preferred_element_type=jnp.float32)   # (b,kvh,g,S)
+    kpos = jnp.arange(smax)[None, :]
+    if window > 0:   # ring buffer: valid = last min(pos+1, window) slots
+        age = (posv[:, None] - kpos) % smax
+        valid = (age >= 0) & (age < jnp.minimum(posv[:, None] + 1, smax))
+        valid = valid & ((posv[:, None] - age) >= 0)
+        mask = valid
+    else:
+        mask = kpos <= posv[:, None]
+    s_ = jnp.where(mask[:, None, None, :], s_, NEG_INF)
+    pr = jax.nn.softmax(s_, axis=-1).astype(cv.dtype)
+    out = jnp.einsum("bhgk,bhkd->bhgd", pr, cv,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = lin(p["wo"], out.reshape(b, 1, h * hd))
+    return out, {"k": ck, "v": cv}
+
+
+def init_gqa_cache(cfg: ModelConfig, batch: int, max_seq: int, *,
+                   window: int = 0, abstract: bool = False):
+    hd = cfg.resolved_head_dim
+    slots = min(max_seq, window) if window > 0 else max_seq
+    shape = (batch, cfg.num_kv_heads, slots, hd)   # (B,H,S,D) — see decode
+    dt = jnp.dtype(cfg.dtype)
+    if abstract:
+        return {"k": jax.ShapeDtypeStruct(shape, dt),
+                "v": jax.ShapeDtypeStruct(shape, dt)}
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2) — latent KV cache, absorbed decode
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig) -> dict:
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": nn.init_linear(ks[0], cfg.d_model, h * (dn + dr), cfg=cfg),
+        "w_dkv": nn.init_linear(ks[1], cfg.d_model, r, cfg=cfg),
+        "w_kpe": nn.init_linear(ks[2], cfg.d_model, dr, cfg=cfg),
+        "kv_norm": nn.init_norm(r, cfg),
+        "w_uk": nn.init_linear(ks[3], r, h * dn, cfg=cfg),
+        "w_uv": nn.init_linear(ks[4], r, h * dv, cfg=cfg),
+        "wo": nn.init_linear(ks[5], h * dv, cfg.d_model, cfg=cfg),
+    }
+
+
+def mla_apply(p: dict, x: jax.Array, *, cfg: ModelConfig, lin,
+              cache: Optional[dict] = None, pos: Optional[jax.Array] = None):
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+
+    q = lin(p["wq"], x).reshape(b, s, h, dn + dr)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    c_kv = nn.norm_apply(p["kv_norm"], lin(p["w_dkv"], x), cfg=cfg)  # (b,s,r)
+    k_pe = lin(p["w_kpe"], x).reshape(b, s, 1, dr)
+
+    if cache is None:
+        positions = jnp.arange(s)[None, :]
+        q_pe = nn.apply_rope(q_pe, positions, theta=cfg.rope_theta)
+        k_pe = nn.apply_rope(k_pe, positions, theta=cfg.rope_theta)
+        k_nope = lin(p["w_uk"], c_kv).reshape(b, s, h, dn)
+        v = lin(p["w_uv"], c_kv).reshape(b, s, h, dv)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe, (b, s, h, dr))],
+                            axis=-1)
+        qq = jnp.concatenate([q_nope, q_pe], axis=-1)
+        out = sdpa(qq, k, v, causal=cfg.causal)
+        return lin(p["wo"], out.reshape(b, s, h * dv)), None
+
+    # ---- absorbed decode (s == 1) ----
+    posv = pos if pos is not None else cache["pos"]
+    q_pe = nn.apply_rope(q_pe, posv[:, None], theta=cfg.rope_theta)
+    k_pe = nn.apply_rope(k_pe, posv[:, None], theta=cfg.rope_theta)
+    slot = posv[0]
+    c_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), slot, axis=1)
+    pe_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_pe"], k_pe[:, :, 0].astype(cache["k_pe"].dtype), slot, axis=1)
+    # absorb W_UK into q:  q_lat[b,h,r] = Σ_dn q_nope · W_UK[r, h*dn]
+    # (cache stays in storage dtype — see gqa_apply decode note)
+    w_uk = p["w_uk"]["w"].reshape(r, h, dn)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(w_uk.dtype),
+                       w_uk, preferred_element_type=jnp.float32)
+    scale = 1.0 / math.sqrt(dn + dr)
+    s_lat = jnp.einsum("bhr,bkr->bhk", q_lat.astype(c_cache.dtype),
+                       c_cache, preferred_element_type=jnp.float32)
+    s_pe = jnp.einsum("bhd,bkd->bhk", q_pe[:, 0].astype(pe_cache.dtype),
+                      pe_cache, preferred_element_type=jnp.float32)
+    s_ = (s_lat + s_pe) * scale
+    mask = jnp.arange(c_cache.shape[1])[None, :] <= posv[:, None]
+    s_ = jnp.where(mask[:, None], s_, NEG_INF)
+    pr = jax.nn.softmax(s_, axis=-1).astype(c_cache.dtype)
+    o_lat = jnp.einsum("bhk,bkr->bhr", pr, c_cache,
+                       preferred_element_type=jnp.float32)
+    w_uv = p["w_uv"]["w"].reshape(r, h, dv)
+    out = jnp.einsum("bhr,rhd->bhd", o_lat.astype(w_uv.dtype), w_uv,
+                     preferred_element_type=jnp.float32)
+    out = lin(p["wo"], out.reshape(b, 1, h * dv).astype(x.dtype))
+    return out, {"c_kv": c_cache, "k_pe": pe_cache}
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_seq: int, *,
+                   abstract: bool = False):
+    dt = jnp.dtype(cfg.dtype)
+    s1 = (batch, max_seq, cfg.kv_lora_rank)
+    s2 = (batch, max_seq, cfg.qk_rope_head_dim)
+    if abstract:
+        return {"c_kv": jax.ShapeDtypeStruct(s1, dt),
+                "k_pe": jax.ShapeDtypeStruct(s2, dt)}
+    return {"c_kv": jnp.zeros(s1, dt), "k_pe": jnp.zeros(s2, dt)}
+
+
+# ---------------------------------------------------------------------------
+# Gated cross-attention (Llama-3.2-Vision style)
+# ---------------------------------------------------------------------------
+
+def init_cross(key, cfg: ModelConfig) -> dict:
+    p = init_gqa(key, cfg)
+    p["gate"] = jnp.zeros((), jnp.float32)
+    return p
+
+
+def cross_apply(p: dict, x: jax.Array, kv_feats: Optional[jax.Array], *,
+                cfg: ModelConfig, lin, cache: Optional[dict] = None):
+    """kv_feats (B, T_img, d) at prefill; cached k/v at decode."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    h, kvh = cfg.num_heads, cfg.num_kv_heads
+    q = lin(p["wq"], x).reshape(b, s, h, hd)
+    if cache is None:
+        k = lin(p["wk"], kv_feats).reshape(b, -1, kvh, hd)
+        v = lin(p["wv"], kv_feats).reshape(b, -1, kvh, hd)
+        new_cache = None
+    else:
+        k, v = cache["xk"], cache["xv"]
+        new_cache = cache
+    out = sdpa(q, k, v, causal=False)
+    out = lin(p["wo"], out.reshape(b, s, h * hd))
+    gate = jnp.tanh(p["gate"]).astype(x.dtype)
+    return out * gate, new_cache
+
+
+def init_cross_cache(cfg: ModelConfig, batch: int, *, abstract: bool = False):
+    hd = cfg.resolved_head_dim
+    shape = (batch, cfg.num_image_tokens, cfg.num_kv_heads, hd)
+    dt = jnp.dtype(cfg.dtype)
+    if abstract:
+        return {"xk": jax.ShapeDtypeStruct(shape, dt),
+                "xv": jax.ShapeDtypeStruct(shape, dt)}
+    return {"xk": jnp.zeros(shape, dt), "xv": jnp.zeros(shape, dt)}

@@ -1,0 +1,31 @@
+"""Modality frontend stubs.
+
+Per the assignment, [audio]/[vlm] archs specify the transformer BACKBONE only;
+the frontend supplies precomputed embeddings.  These helpers generate the
+stand-in inputs (concrete for smoke tests, abstract for the dry-run)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+def audio_frames(cfg: ModelConfig, batch: int, seq: int, *, key=None,
+                 abstract: bool = False):
+    """HuBERT-style precomputed frame embeddings (B, S, d)."""
+    shape = (batch, seq, cfg.d_model)
+    dt = jnp.dtype(cfg.dtype)
+    if abstract:
+        return jax.ShapeDtypeStruct(shape, dt)
+    return jax.random.normal(key, shape).astype(dt)
+
+
+def vision_patches(cfg: ModelConfig, batch: int, *, key=None,
+                   abstract: bool = False):
+    """Precomputed image patch embeddings (B, T_img, d)."""
+    shape = (batch, cfg.num_image_tokens, cfg.d_model)
+    dt = jnp.dtype(cfg.dtype)
+    if abstract:
+        return jax.ShapeDtypeStruct(shape, dt)
+    return jax.random.normal(key, shape).astype(dt)

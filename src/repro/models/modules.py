@@ -1,0 +1,240 @@
+"""Parameter-dict module library (functional, flax-free).
+
+Every layer is an (init, apply) pair over plain nested dicts of jnp arrays.
+
+Quantized linears have two parameterizations:
+  * train/QAT:  {'w': (n_in, n_out) [, 'b']} — forward applies BitNet-b1.58
+                straight-through absmean ternary quantization, so checkpoints
+                are RSR-preprocessable after training.
+  * serve/RSR:  {'codes': (nb, n_in) uint8, 'scale': (), [, 'b']} — the
+                paper's index replaces the weight matrix entirely.  Applied
+                via the scatter-form segmented sum (u buckets) + Tern_[k]
+                product: HLO work is O(B·n·m/k) — the paper's complexity —
+                and HBM weight traffic is the code array (1.6 bits/weight at
+                k=5).  The Pallas kernel (repro.kernels.rsr_onehot) is the
+                hardware artifact of the same contraction.
+
+``serve_params_from_train`` converts a trained pytree; ``abstract`` variants
+produce ShapeDtypeStructs for the dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core import binlib
+from repro.core.preprocess import preprocess_ternary_direct
+from repro.core.ternary import absmean_quantize, ste_ternary
+
+Param = dict
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear
+# ---------------------------------------------------------------------------
+
+def init_linear(key, n_in: int, n_out: int, *, bias: bool = False,
+                cfg: ModelConfig) -> Param:
+    scale = 1.0 / math.sqrt(n_in)
+    p = {"w": (jax.random.normal(key, (n_in, n_out)) * scale).astype(_dtype(cfg))}
+    if bias:
+        p["b"] = jnp.zeros((n_out,), _dtype(cfg))
+    return p
+
+
+def linear_apply(p: Param, x: jax.Array, *, cfg: ModelConfig,
+                 quantize: bool = True) -> jax.Array:
+    """Train/dense path; STE ternary quant when cfg.quant == 'ternary'."""
+    if "codes" in p:                      # serve pytree routed here defensively
+        return rsr_linear_apply(p, x, cfg=cfg)
+    w = p["w"]
+    if quantize and cfg.quant == "ternary":
+        w = ste_ternary(w.astype(jnp.float32)).astype(w.dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# --- RSR serve parameterization --------------------------------------------
+
+def rsr_num_blocks(n_out: int, k: int) -> int:
+    return -(-n_out // k)
+
+
+def serve_linear_params(p: Param, *, cfg: ModelConfig) -> Param:
+    """Trained {'w'} -> RSR index {'codes','scale'[,'b']} (Algorithm 1).
+
+    The serve graph carries the packed base-3 code array (1.6 bits/weight;
+    the Pallas kernel's native input).  The paper's (sigma, L) form is
+    recoverable offline (sigma = argsort(codes), L = cumsum(hist(codes))) and
+    drives the core/benchmark paths; evaluation-strategy measurements for the
+    serve graph are in EXPERIMENTS.md SS Perf iter 5-6: the Eq. 5 prefix-sum
+    lowering costs ~20x more HBM traffic under XLA (log-depth cumsum
+    materialization), so the graph uses the bucket-scatter contraction.
+    """
+    w = p["w"].astype(jnp.float32)
+    wt, gamma = absmean_quantize(w)
+    idx = preprocess_ternary_direct(wt, cfg.rsr_k)
+    out = {"codes": idx.codes, "scale": gamma}
+    if "b" in p:
+        out["b"] = p["b"]
+    return out
+
+
+def abstract_serve_linear(n_in: int, n_out: int, *, bias: bool = False,
+                          cfg: ModelConfig) -> Param:
+    nb = rsr_num_blocks(n_out, cfg.rsr_k)
+    p = {"codes": jax.ShapeDtypeStruct((nb, n_in), jnp.uint8),
+         "scale": jax.ShapeDtypeStruct((), jnp.float32)}
+    if bias:
+        p["b"] = jax.ShapeDtypeStruct((n_out,), jnp.float32)
+    return p
+
+
+def rsr_linear_apply(p: Param, x: jax.Array, *, cfg: ModelConfig) -> jax.Array:
+    """Serve path: segmented sums via bucket scatter-add + Tern_[k] product.
+
+    The scatter is vmapped over the block axis (an operand batch dim).
+    Evaluation-strategy log (EXPERIMENTS.md SS Perf): the scatter updates
+    tensor is the irreducible HLO-level cost of the segmented sum; the
+    (sigma, L) gather/prefix-sum form measured ~20x worse (cumsum
+    materialization) and the chunked one-hot form ~2x worse (one-hot
+    materialization).  Keeping the buckets VMEM-resident requires the custom
+    kernel (kernels/rsr_onehot.py), which consumes these same code arrays.
+
+    x (..., n_in) -> (..., n_out);  n_out recovered from the bias shape.
+    """
+    codes = p["codes"]                            # (nb, n)
+    nb, n = codes.shape
+    k = cfg.rsr_k
+    num_p = 3 ** k
+    lead = x.shape[:-1]
+    xb = x.reshape(-1, n).astype(jnp.float32)
+    b = xb.shape[0]
+
+    def per_block(codes_b):                       # (n,) -> (b, P)
+        u = jnp.zeros((b, num_p), jnp.float32)
+        return u.at[:, codes_b.astype(jnp.int32)].add(xb)
+
+    u = jax.vmap(per_block)(codes)                # (nb, b, P)
+    y = jnp.einsum("cbp,pk->bck", u, binlib.tern_matrix(k, jnp.float32))
+    y = y.reshape(b, nb * k)
+    n_out = p["b"].shape[0] if "b" in p else nb * k
+    y = y[:, :n_out] * p["scale"]
+    if "b" in p:
+        y = y + p["b"]
+    return y.reshape(*lead, -1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(d: int, cfg: ModelConfig) -> Param:
+    p = {"scale": jnp.ones((d,), _dtype(cfg))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), _dtype(cfg))
+    return p
+
+
+def norm_apply(p: Param, x: jax.Array, *, cfg: ModelConfig,
+               eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"] + p["bias"]).astype(x.dtype)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * p["scale"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg: ModelConfig) -> Param:
+    tbl = jax.random.normal(key, (cfg.vocab_size, cfg.d_model)) * 0.02
+    return {"table": tbl.astype(_dtype(cfg))}
+
+
+def embed_apply(p: Param, tokens: jax.Array, *, cfg: ModelConfig) -> jax.Array:
+    if tokens.ndim == 2 and tokens.shape[-1] == 1:
+        # decode path: one-hot matmul lookup — with a vocab-sharded table this
+        # is a partial matmul + tiny psum instead of an all-gather of the
+        # whole table (perf_iterations/iter1).
+        oh = jax.nn.one_hot(tokens, p["table"].shape[0],
+                            dtype=p["table"].dtype)
+        x = oh @ p["table"]
+    else:
+        x = jnp.take(p["table"], tokens, axis=0)
+    if cfg.family in ("dense", "hybrid") and cfg.tie_embeddings:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)  # gemma scaling
+    return x
+
+
+def head_apply(embed_p: Param, head_p: Optional[Param], x: jax.Array, *,
+               cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings or head_p is None:
+        return x @ embed_p["table"].T
+    return x @ head_p["w"]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, theta: float) -> jax.Array:
+    """x (..., S, H, hd), positions (..., S) -> rotated x (half-split layout)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                      # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFN (dense MLP / GLU)
+# ---------------------------------------------------------------------------
+
+def init_ffn(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Param:
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"wi": init_linear(k1, cfg.d_model, d_ff, cfg=cfg),
+         "wo": init_linear(k2, d_ff, cfg.d_model, cfg=cfg)}
+    if cfg.glu:
+        p["wg"] = init_linear(k3, cfg.d_model, d_ff, cfg=cfg)
+    return p
+
+
+def _act(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(kind)
+
+
+def ffn_apply(p: Param, x: jax.Array, *, cfg: ModelConfig,
+              apply_linear=None) -> jax.Array:
+    lin = apply_linear or (lambda q, v: linear_apply(q, v, cfg=cfg))
+    h = _act(lin(p["wi"], x), cfg.act)
+    if "wg" in p:
+        h = h * lin(p["wg"], x)
+    return lin(p["wo"], h)

@@ -1,0 +1,208 @@
+"""Mixture-of-Experts FFN: top-k routing, GShard grouped capacity dispatch,
+optional shared experts (DeepSeek-V2 style), load-balancing aux loss.
+
+Dispatch is the canonical GShard einsum form grouped by batch row: tokens stay
+sharded on the data axis (groups = batch), experts shard on the model axis
+(EP).  The (g, s, e, c) combine tensor contracts against token activations,
+which under pjit lowers to the expected all-to-all between the data-sharded
+token layout and the expert-sharded compute layout.
+
+Capacity C = ceil(S · top_k / E · capacity_factor); overflow tokens drop (their
+combine weight is zero) — standard GShard semantics.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import modules as nn
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / math.sqrt(d)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "router": {"w": (jax.random.normal(ks[0], (d, e)) * scale
+                         ).astype(jnp.float32)},
+        "wi": (jax.random.normal(ks[1], (e, d, f)) * scale).astype(dt),
+        "wg": (jax.random.normal(ks[2], (e, d, f)) * scale).astype(dt),
+        "wo": (jax.random.normal(ks[3], (e, f, d)) / math.sqrt(f)).astype(dt),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = nn.init_ffn(ks[4], cfg,
+                                  d_ff=cfg.moe_d_ff * cfg.num_shared_experts)
+    return p
+
+
+def capacity(cfg: ModelConfig, s: int) -> int:
+    return max(1, int(math.ceil(
+        s * cfg.num_experts_per_tok / cfg.num_experts * cfg.capacity_factor)))
+
+
+GROUP_SIZE = 256     # GShard token-group size (bounds the (g,s,e,c) tensors)
+
+
+def _group_tokens(x: jax.Array) -> tuple[jax.Array, tuple]:
+    """(B, S, d) -> (G, gs, d) with gs <= GROUP_SIZE; returns (grouped, meta)."""
+    b, s, d = x.shape
+    t = b * s
+    gs = min(GROUP_SIZE, t)
+    pad = (-t) % gs
+    flat = x.reshape(t, d)
+    if pad:
+        flat = jnp.pad(flat, ((0, pad), (0, 0)))
+    return flat.reshape(-1, gs, d), (b, s, t, pad)
+
+
+def _ungroup(y: jax.Array, meta: tuple) -> jax.Array:
+    b, s, t, pad = meta
+    flat = y.reshape(-1, y.shape[-1])
+    if pad:
+        flat = flat[:t]
+    return flat.reshape(b, s, -1)
+
+
+def moe_apply(p: dict, x_in: jax.Array, *, cfg: ModelConfig, lin,
+              quantize_experts: bool = True):
+    """x (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    x, meta = _group_tokens(x_in)
+    g, s, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    c = capacity(cfg, s)
+
+    logits = (x.astype(jnp.float32) @ p["router"]["w"])       # (g,s,e)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, k)               # (g,s,k)
+    top_w = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) assignment within its expert queue
+    oh = jax.nn.one_hot(top_idx, e, dtype=jnp.float32)        # (g,s,k,e)
+    flat = oh.reshape(g, s * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                     # exclusive
+    pos = pos.reshape(g, s, k, e)
+    within = (pos < c) & (oh > 0)
+    pos_c = jax.nn.one_hot(jnp.sum(pos * oh, -1).astype(jnp.int32), c,
+                           dtype=jnp.float32)                 # (g,s,k,c)
+    # combine[g,s,e,c]: routing weight of token (g,s) at slot (e,c)
+    combine = jnp.einsum("gske,gskc->gsec",
+                         oh * top_w[..., None] * within, pos_c)
+    dispatch = (combine > 0).astype(x.dtype)
+
+    # dispatch -> expert compute -> combine (EP all-to-all happens here)
+    xe = jnp.einsum("gsec,gsd->egcd", dispatch, x)            # (e,g,c,d)
+    if cfg.quant == "ternary" and quantize_experts:
+        from repro.core.ternary import ste_ternary
+        # per-expert absmean scale (matches the per-expert serve indices)
+        qt = lambda w: jax.vmap(
+            lambda we: ste_ternary(we.astype(jnp.float32)))(w).astype(w.dtype)
+    else:
+        qt = lambda w: w
+    hi = jnp.einsum("egcd,edf->egcf", xe, qt(p["wi"]))
+    hg = jnp.einsum("egcd,edf->egcf", xe, qt(p["wg"]))
+    h = nn._act(hi, cfg.act) * hg
+    ye = jnp.einsum("egcf,efd->egcd", h, qt(p["wo"]))
+    y = jnp.einsum("egcd,gsec->gsd", ye, combine.astype(x.dtype))
+
+    if "shared" in p:
+        y = y + nn.ffn_apply(p["shared"], x, cfg=cfg, apply_linear=lin)
+
+    # GShard load-balance loss: E · Σ_e f_e · P_e
+    me = probs.mean(axis=(0, 1))                              # (e,)
+    fe = oh.sum(axis=2).mean(axis=(0, 1))                     # fraction routed
+    aux = e * jnp.sum(me * fe)
+    return _ungroup(y, meta), aux
+
+
+# --- serve parameterization (RSR codes per expert) --------------------------
+
+def serve_moe_params(p: dict, *, cfg: ModelConfig) -> dict:
+    """Expert banks -> per-expert RSR indices (vmapped Algorithm 1)."""
+    def conv(bank):                                           # (e, n, m)
+        def one(w):
+            sp = nn.serve_linear_params({"w": w}, cfg=cfg)
+            return sp["codes"], sp["scale"]
+        codes, scales = jax.vmap(one)(bank)
+        return {"codes": codes, "scale": scales}
+
+    out = {"router": p["router"],
+           "wi": conv(p["wi"]), "wg": conv(p["wg"]), "wo": conv(p["wo"])}
+    if "shared" in p:
+        out["shared"] = {k: nn.serve_linear_params(v, cfg=cfg)
+                         for k, v in p["shared"].items()}
+    return out
+
+
+def abstract_serve_moe(cfg: ModelConfig) -> dict:
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+    nb_f = nn.rsr_num_blocks(f, cfg.rsr_k)
+    nb_d = nn.rsr_num_blocks(d, cfg.rsr_k)
+
+    def bank(nb, n):
+        return {"codes": jax.ShapeDtypeStruct((e, nb, n), jnp.uint8),
+                "scale": jax.ShapeDtypeStruct((e,), jnp.float32)}
+
+    out = {"router": {"w": jax.ShapeDtypeStruct((d, e), jnp.float32)},
+           "wi": bank(nb_f, d), "wg": bank(nb_f, d), "wo": bank(nb_d, f)}
+    if cfg.num_shared_experts:
+        ff = cfg.moe_d_ff * cfg.num_shared_experts
+        out["shared"] = {
+            "wi": nn.abstract_serve_linear(d, ff, cfg=cfg),
+            "wg": nn.abstract_serve_linear(d, ff, cfg=cfg),
+            "wo": nn.abstract_serve_linear(ff, d, cfg=cfg)}
+    return out
+
+
+def moe_apply_serve(p: dict, x_in: jax.Array, *, cfg: ModelConfig):
+    """Decode-path MoE with RSR expert banks.
+
+    Routing identical to moe_apply; expert matmuls run through the RSR
+    scatter contraction per expert (vmapped over the expert axis).
+    """
+    x, meta = _group_tokens(x_in)
+    g, s, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    c = capacity(cfg, s)
+    logits = (x.astype(jnp.float32) @ p["router"]["w"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, k)
+    top_w = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+    oh = jax.nn.one_hot(top_idx, e, dtype=jnp.float32)
+    flat = oh.reshape(g, s * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat
+    pos = pos.reshape(g, s, k, e)
+    within = (pos < c) & (oh > 0)
+    pos_c = jax.nn.one_hot(jnp.sum(pos * oh, -1).astype(jnp.int32), c,
+                           dtype=jnp.float32)
+    combine = jnp.einsum("gske,gskc->gsec", oh * top_w[..., None] * within,
+                         pos_c)
+    dispatch = (combine > 0).astype(x.dtype)
+    xe = jnp.einsum("gsec,gsd->egcd", dispatch, x)            # (e,g,c,d)
+
+    def expert(idx2, xi, n_out):
+        pp = {"codes": idx2[0], "scale": idx2[1],
+              "b": jnp.zeros((n_out,), jnp.float32)}
+        return nn.rsr_linear_apply(pp, xi, cfg=cfg)
+
+    f = cfg.moe_d_ff
+    xef = xe.reshape(e, -1, d)
+    hi = jax.vmap(lambda cs, xi: expert(cs, xi, f))(
+        (p["wi"]["codes"], p["wi"]["scale"]), xef)
+    hg = jax.vmap(lambda cs, xi: expert(cs, xi, f))(
+        (p["wg"]["codes"], p["wg"]["scale"]), xef)
+    h = nn._act(hi, cfg.act) * hg
+    ye = jax.vmap(lambda cs, xi: expert(cs, xi, d))(
+        (p["wo"]["codes"], p["wo"]["scale"]), h)
+    ye = ye.reshape(e, g, c, d)
+    y = jnp.einsum("egcd,gsec->gsd", ye, combine.astype(x.dtype))
+    if "shared" in p:
+        lin = lambda q, v: nn.rsr_linear_apply(q, v, cfg=cfg)
+        h2 = nn._act(lin(p["shared"]["wi"], x), cfg.act) * \
+            lin(p["shared"]["wg"], x)
+        y = y + lin(p["shared"]["wo"], h2)
+    return _ungroup(y, meta), jnp.zeros((), jnp.float32)

@@ -1,0 +1,266 @@
+"""State-space mixers: Mamba-2 (SSD, arXiv:2405.21060) and RG-LRU (Griffin,
+arXiv:2402.19427).
+
+Both provide a full-sequence path (train/prefill) and an O(1)-per-token decode
+path with explicit recurrent state — which is what makes the long_500k decode
+shape runnable for these families (state size is context-independent).
+
+Mamba-2 sequence path = chunked SSD: intra-chunk quadratic (attention-like)
+term + inter-chunk linear recurrence over chunk states (lax.scan).
+RG-LRU sequence path = associative scan over the diagonal linear recurrence.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import modules as nn
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD)
+# ---------------------------------------------------------------------------
+
+def init_mamba2(key, cfg: ModelConfig) -> dict:
+    d_in = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    ks = jax.random.split(key, 7)
+    cw = 1.0 / math.sqrt(cfg.conv_width)
+
+    def conv_params(dim):
+        return (jax.random.normal(jax.random.fold_in(ks[1], dim),
+                                  (cfg.conv_width, dim)) * cw
+                ).astype(jnp.float32)
+
+    return {
+        # one projection PER ROLE (z/x/B/C/dt) and one depthwise conv per
+        # conv'd role: the reference fused in_proj + concat'd conv force a
+        # split/concat of TP-sharded activations, i.e. a resharding
+        # collective-permute of the whole residual stream per layer per
+        # direction (measured 3×4 GiB/layer-step on mamba2 train_4k,
+        # EXPERIMENTS §Perf).  Role-separated params shard independently and
+        # the layer lowers with zero resharding.
+        "z_proj": nn.init_linear(ks[0], cfg.d_model, d_in, cfg=cfg),
+        "x_proj": nn.init_linear(ks[2], cfg.d_model, d_in, cfg=cfg),
+        "b_proj": nn.init_linear(ks[3], cfg.d_model, n, cfg=cfg),
+        "c_proj": nn.init_linear(ks[4], cfg.d_model, n, cfg=cfg),
+        "dt_proj": nn.init_linear(ks[5], cfg.d_model, h, cfg=cfg),
+        "conv_wx": conv_params(d_in),
+        "conv_bx": jnp.zeros((d_in,), jnp.float32),
+        "conv_wb": conv_params(n),
+        "conv_bb": jnp.zeros((n,), jnp.float32),
+        "conv_wc": conv_params(n),
+        "conv_bc2": jnp.zeros((n,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": nn.init_norm(d_in, cfg),
+        "out_proj": nn.init_linear(ks[6], d_in, cfg.d_model, cfg=cfg),
+    }
+
+
+def _causal_conv_seq(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv, x (B,S,C), w (W,C) -> (B,S,C)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunked(xh, dt, A, B, C, chunk: int):
+    """Chunked SSD.  xh (b,s,h,p), dt (b,s,h), A (h,), B/C (b,s,n).
+
+    Returns y (b,s,h,p) and final state (b,h,p,n).
+    """
+    b, s, h, p = xh.shape
+    n = B.shape[-1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    L = chunk
+    xc = xh.reshape(b, nc, L, h, p)
+    dtc = dt.reshape(b, nc, L, h)
+    Bc = B.reshape(b, nc, L, n)
+    Cc = C.reshape(b, nc, L, n)
+
+    dA = dtc * (-jnp.exp(A))[None, None, None, :]          # (b,nc,L,h) ≤ 0
+    cs = jnp.cumsum(dA, axis=2)                            # within-chunk cumsum
+    xdt = xc * dtc[..., None]
+
+    # intra-chunk: y[l] = Σ_{m<=l} exp(cs[l]-cs[m]) (C[l]·B[m]) xdt[m]
+    mask = jnp.tril(jnp.ones((L, L), bool))[None, None, :, :, None]
+    delta = cs[:, :, :, None, :] - cs[:, :, None, :, :]           # (b,nc,L,M,h)
+    decay = jnp.exp(jnp.where(mask, delta, -jnp.inf))
+    cb = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)
+    att = cb[..., None] * decay
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", att, xdt)
+
+    # chunk states: state_c = Σ_m exp(cs[L-1]-cs[m]) B[m] ⊗ xdt[m]
+    tail = jnp.exp(cs[:, :, -1:, :] - cs)                  # (b,nc,L,h)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", Bc, tail, xdt)
+
+    # inter-chunk recurrence over chunk index
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                 # (b,nc,h)
+
+    def step(carry, inp):
+        st_prev = carry                                    # (b,h,p,n)
+        st_c, dec_c = inp
+        st_new = st_prev * dec_c[..., None, None] + st_c
+        return st_new, st_prev
+
+    st0 = jnp.zeros((b, h, p, n), xh.dtype)
+    final, prevs = jax.lax.scan(
+        step, st0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prevs, 0, 1)                # (b,nc,h,p,n)
+
+    # inter-chunk output: y[l] += exp(cs[l]) C[l] · state_prev
+    y_inter = jnp.einsum("bcln,bclh,bchpn->bclhp",
+                         Cc, jnp.exp(cs), prev_states)
+    y = (y_intra + y_inter).reshape(b, nc * L, h, p)[:, :s]
+    return y, final
+
+
+def mamba2_apply(p: dict, x: jax.Array, *, cfg: ModelConfig, lin,
+                 cache: Optional[dict] = None,
+                 pos: Optional[jax.Array] = None):
+    """x (B,S,d) -> (B,S,d).  cache = {'state': (B,H,P,N), 'conv': (B,W-1,C)}."""
+    b, s, _ = x.shape
+    d_in, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ph = cfg.ssm_head_dim
+    z = lin(p["z_proj"], x)
+    xin = lin(p["x_proj"], x).astype(jnp.float32)
+    Bv = lin(p["b_proj"], x).astype(jnp.float32)
+    Cv = lin(p["c_proj"], x).astype(jnp.float32)
+    dt = lin(p["dt_proj"], x)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])     # (b,s,h)
+
+    if cache is None:
+        xin = _causal_conv_seq(xin, p["conv_wx"], p["conv_bx"])
+        Bv = _causal_conv_seq(Bv, p["conv_wb"], p["conv_bb"])
+        Cv = _causal_conv_seq(Cv, p["conv_wc"], p["conv_bc2"])
+        new_conv = None
+    else:
+        def conv_step(buf, cur, w, bb):
+            window = jnp.concatenate([buf, cur], axis=1)          # (b,W,C)
+            out = jax.nn.silu(
+                jnp.einsum("bwc,wc->bc", window, w) + bb)[:, None]
+            return out, window[:, 1:]
+        xin, cx = conv_step(cache["conv_x"], xin, p["conv_wx"], p["conv_bx"])
+        Bv, cb = conv_step(cache["conv_b"], Bv, p["conv_wb"], p["conv_bb"])
+        Cv, cc = conv_step(cache["conv_c"], Cv, p["conv_wc"], p["conv_bc2"])
+        new_conv = {"conv_x": cx, "conv_b": cb, "conv_c": cc}
+    xh = xin.reshape(b, s, h, ph)
+
+    if cache is None:
+        y, _ = _ssd_chunked(xh, dt, p["A_log"], Bv, Cv, cfg.ssm_chunk)
+        new_cache = None
+    else:
+        # single-step recurrence: st = st*exp(dt*A) + dt * B ⊗ x
+        dA = jnp.exp(dt[:, 0] * (-jnp.exp(p["A_log"]))[None])       # (b,h)
+        st = cache["state"] * dA[..., None, None] + jnp.einsum(
+            "bh,bn,bhp->bhpn", dt[:, 0], Bv[:, 0], xh[:, 0])
+        y = jnp.einsum("bn,bhpn->bhp", Cv[:, 0], st)[:, None]       # (b,1,h,p)
+        new_cache = {"state": st, **new_conv}
+
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    y = nn.norm_apply(p["norm"], y * jax.nn.silu(z), cfg=cfg)       # gated norm
+    return lin(p["out_proj"], y), new_cache
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int, *, abstract: bool = False):
+    h, ph, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    w1 = cfg.conv_width - 1
+    shapes = {"state": (batch, h, ph, n),
+              "conv_x": (batch, w1, cfg.d_inner),
+              "conv_b": (batch, w1, n),
+              "conv_c": (batch, w1, n)}
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(v, jnp.float32)
+                for k, v in shapes.items()}
+    return {k: jnp.zeros(v, jnp.float32) for k, v in shapes.items()}
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (Griffin / RecurrentGemma)
+# ---------------------------------------------------------------------------
+
+_LRU_C = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig) -> dict:
+    d_rnn = cfg.d_rnn or cfg.d_model
+    ks = jax.random.split(key, 7)
+    # Λ init so that a = sigmoid(Λ)^c ∈ [0.9, 0.999]
+    u = jax.random.uniform(ks[4], (d_rnn,), minval=0.9, maxval=0.999)
+    lam = jnp.log((u ** (1.0 / _LRU_C)) / (1 - u ** (1.0 / _LRU_C)))
+    return {
+        "wx": nn.init_linear(ks[0], cfg.d_model, d_rnn, cfg=cfg),
+        "wgate": nn.init_linear(ks[1], cfg.d_model, d_rnn, cfg=cfg),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, d_rnn)) *
+                   (1.0 / math.sqrt(cfg.conv_width))).astype(jnp.float32),
+        "conv_b": jnp.zeros((d_rnn,), jnp.float32),
+        "w_a": nn.init_linear(ks[3], d_rnn, d_rnn, cfg=cfg),   # recurrence gate
+        "w_i": nn.init_linear(ks[5], d_rnn, d_rnn, cfg=cfg),   # input gate
+        "lam": lam.astype(jnp.float32),
+        "out": nn.init_linear(ks[6], d_rnn, cfg.d_model, cfg=cfg),
+    }
+
+
+def rglru_apply(p: dict, x: jax.Array, *, cfg: ModelConfig, lin,
+                cache: Optional[dict] = None,
+                pos: Optional[jax.Array] = None):
+    """Griffin recurrent block. cache = {'h': (B,d_rnn), 'conv': (B,W-1,d_rnn)}."""
+    b, s, _ = x.shape
+    gate = jax.nn.gelu(lin(p["wgate"], x))
+    u = lin(p["wx"], x).astype(jnp.float32)
+
+    if cache is None:
+        u = _causal_conv_seq(u, p["conv_w"], p["conv_b"])
+        new_conv = None
+    else:
+        window = jnp.concatenate([cache["conv"], u], axis=1)
+        u = jax.nn.silu(
+            jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"])[:, None]
+        new_conv = window[:, 1:]
+
+    r = jax.nn.sigmoid(lin(p["w_a"], u))                   # recurrence gate
+    i = jax.nn.sigmoid(lin(p["w_i"], u))                   # input gate
+    log_a = -_LRU_C * r * jax.nn.softplus(-p["lam"])       # log σ(Λ)^(c·r)
+    a = jnp.exp(log_a)
+    bt = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * u)
+
+    if cache is None:
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, b2 + a2 * b1
+        A, Bs = jax.lax.associative_scan(combine, (a, bt), axis=1)
+        h = Bs                                             # h_0 = 0
+        new_cache = None
+    else:
+        h = a[:, 0] * cache["h"] + bt[:, 0]
+        new_cache = {"h": h, "conv": new_conv}
+        h = h[:, None]
+
+    y = (h.astype(x.dtype) * gate)
+    return lin(p["out"], y), new_cache
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, *, abstract: bool = False):
+    d_rnn = cfg.d_rnn or cfg.d_model
+    s1 = (batch, d_rnn)
+    s2 = (batch, cfg.conv_width - 1, d_rnn)
+    if abstract:
+        return {"h": jax.ShapeDtypeStruct(s1, jnp.float32),
+                "conv": jax.ShapeDtypeStruct(s2, jnp.float32)}
+    return {"h": jnp.zeros(s1, jnp.float32), "conv": jnp.zeros(s2, jnp.float32)}

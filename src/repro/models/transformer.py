@@ -1,0 +1,415 @@
+"""Model assembly: heterogeneous layer stacks under lax.scan.
+
+Layers are grouped into *superblocks* following cfg.block_pattern (e.g.
+recurrentgemma (rec, rec, attn), llama-vision (attn×4, xattn)); parameters of
+each pattern slot are stacked over superblocks and the stack is scanned —
+keeping HLO size O(pattern) instead of O(num_layers), which is what makes the
+512-device dry-run compiles tractable.  Layout:
+
+    params = {embed, [head], [head_layers...], blocks: (slot -> stacked),
+              [tail_layers...], final_norm}
+
+``first_dense_layers`` (DeepSeek-V2) live in head_layers (explicit); a
+non-divisible pattern remainder lives in tail_layers (explicit).
+
+Two parameterizations share all apply code via the `lin` dispatcher:
+  train/QAT : linear leaves {'w'} — STE ternary quant in forward.
+  serve/RSR : linear leaves {'codes','scale'} — the paper's index, applied via
+              repro.models.modules.rsr_linear_apply.
+``serve_params`` converts a trained tree (offline, Algorithm 1 per matrix);
+running it under jax.eval_shape yields the dry-run's abstract serve tree.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as attn
+from repro.models import modules as nn
+from repro.models import moe as moe_lib
+from repro.models import ssm
+
+
+# ---------------------------------------------------------------------------
+# Layer kinds
+# ---------------------------------------------------------------------------
+
+def layer_kinds(cfg: ModelConfig) -> list[str]:
+    pat = cfg.block_pattern
+    return [pat[i % len(pat)] for i in range(cfg.num_layers)]
+
+
+def _use_moe(cfg: ModelConfig, layer_idx: int) -> bool:
+    return cfg.num_experts > 0 and layer_idx >= cfg.first_dense_layers
+
+
+def _lin(cfg: ModelConfig, quantize: bool = True):
+    """Parameterization-dispatching linear apply."""
+    def apply(p, x):
+        if "codes" in p:
+            return nn.rsr_linear_apply(p, x, cfg=cfg)
+        return nn.linear_apply(p, x, cfg=cfg, quantize=quantize)
+    return apply
+
+
+# ---------------------------------------------------------------------------
+# Single layer
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig, kind: str, use_moe: bool) -> dict:
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"ln1": nn.init_norm(cfg.d_model, cfg)}
+    if kind == "attn":
+        p["attn"] = (attn.init_mla(ks[0], cfg) if cfg.attention == "mla"
+                     else attn.init_gqa(ks[0], cfg))
+    elif kind == "xattn":
+        p["attn"] = attn.init_cross(ks[0], cfg)
+    elif kind == "rec":
+        p["mixer"] = ssm.init_rglru(ks[0], cfg)
+    elif kind == "mamba":
+        p["mixer"] = ssm.init_mamba2(ks[0], cfg)
+        return p                                   # mamba blocks: mixer only
+    else:
+        raise ValueError(kind)
+    p["ln2"] = nn.init_norm(cfg.d_model, cfg)
+    p["moe" if use_moe else "ffn"] = (
+        moe_lib.init_moe(ks[1], cfg) if use_moe else nn.init_ffn(ks[1], cfg))
+    return p
+
+
+def apply_layer(p: dict, x: jax.Array, *, kind: str, cfg: ModelConfig,
+                lin, image_embeds=None, cache: Optional[dict] = None,
+                pos: Optional[jax.Array] = None):
+    """Returns (x, aux_loss, new_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = nn.norm_apply(p["ln1"], x, cfg=cfg)
+    new_cache = cache
+    if kind == "attn":
+        window = cfg.window
+        if cfg.attention == "mla":
+            out, new_cache = attn.mla_apply(p["attn"], h, cfg=cfg, lin=lin,
+                                            cache=cache, pos=pos)
+        else:
+            out, new_cache = attn.gqa_apply(p["attn"], h, cfg=cfg, lin=lin,
+                                            window=window, cache=cache,
+                                            pos=pos)
+    elif kind == "xattn":
+        out, new_cache = attn.cross_apply(p["attn"], h, image_embeds, cfg=cfg,
+                                          lin=lin, cache=cache)
+    elif kind in ("rec", "mamba"):
+        fn = ssm.rglru_apply if kind == "rec" else ssm.mamba2_apply
+        out, new_cache = fn(p["mixer"], h, cfg=cfg, lin=lin, cache=cache,
+                            pos=pos)
+    else:
+        raise ValueError(kind)
+    x = x + out
+    if kind == "mamba":
+        return x, aux, new_cache
+
+    h = nn.norm_apply(p["ln2"], x, cfg=cfg)
+    if "moe" in p:
+        if isinstance(p["moe"].get("wi"), dict):   # serve (RSR) parameterization
+            out, aux = moe_lib.moe_apply_serve(p["moe"], h, cfg=cfg)
+        else:
+            out, aux = moe_lib.moe_apply(p["moe"], h, cfg=cfg, lin=lin)
+    else:
+        out = nn.ffn_apply(p["ffn"], h, cfg=cfg, apply_linear=lin)
+    return x + out, aux, new_cache
+
+
+def init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_seq: int, *,
+                     abstract: bool = False):
+    if kind == "attn":
+        if cfg.attention == "mla":
+            return attn.init_mla_cache(cfg, batch, max_seq, abstract=abstract)
+        return attn.init_gqa_cache(cfg, batch, max_seq, window=cfg.window,
+                                   abstract=abstract)
+    if kind == "xattn":
+        return attn.init_cross_cache(cfg, batch, abstract=abstract)
+    if kind == "rec":
+        return ssm.init_rglru_cache(cfg, batch, abstract=abstract)
+    if kind == "mamba":
+        return ssm.init_mamba2_cache(cfg, batch, abstract=abstract)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+def _layer_split(cfg: ModelConfig):
+    """-> (head_kinds, pattern, n_super, tail_kinds)."""
+    kinds = layer_kinds(cfg)
+    nh = cfg.first_dense_layers
+    head = kinds[:nh]
+    rest = kinds[nh:]
+    pat = cfg.block_pattern
+    n_super = len(rest) // len(pat)
+    tail = rest[n_super * len(pat):]
+    return head, pat, n_super, tail
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    head_kinds, pat, n_super, tail_kinds = _layer_split(cfg)
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {"embed": nn.init_embed(keys[0], cfg),
+                              "final_norm": nn.init_norm(cfg.d_model, cfg)}
+    if not cfg.tie_embeddings:
+        params["head"] = nn.init_linear(keys[1], cfg.d_model, cfg.vocab_size,
+                                        cfg=cfg)
+    params["head_layers"] = [
+        init_layer(jax.random.fold_in(keys[2], i), cfg, kind, use_moe=False)
+        for i, kind in enumerate(head_kinds)]
+    blocks = {}
+    for j, kind in enumerate(pat):
+        lk = jax.random.split(jax.random.fold_in(keys[3], j), max(n_super, 1))
+        um = _use_moe(cfg, cfg.first_dense_layers + j)
+        blocks[f"slot{j}"] = jax.vmap(
+            lambda k: init_layer(k, cfg, kind, use_moe=um))(lk[:n_super]) \
+            if n_super > 0 else None
+    params["blocks"] = {k: v for k, v in blocks.items() if v is not None}
+    params["tail_layers"] = [
+        init_layer(jax.random.fold_in(keys[4], i), cfg, kind,
+                   use_moe=_use_moe(cfg, cfg.num_layers - len(tail_kinds) + i))
+        for i, kind in enumerate(tail_kinds)]
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(params: dict, batch: dict, cfg: ModelConfig, *,
+            quantize: bool = True, remat: bool = False,
+            return_hidden: bool = False) -> tuple:
+    """-> (logits (B,S,V), aux_loss[, final hidden states (B,S,d)])."""
+    lin = _lin(cfg, quantize)
+    head_kinds, pat, n_super, tail_kinds = _layer_split(cfg)
+    image_embeds = batch.get("image_embeds")
+
+    if "embeds" in batch:                        # modality frontend stub
+        x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+    else:
+        x = nn.embed_apply(params["embed"], batch["tokens"], cfg=cfg)
+
+    aux = jnp.zeros((), jnp.float32)
+    for p, kind in zip(params["head_layers"], head_kinds):
+        x, a, _ = apply_layer(p, x, kind=kind, cfg=cfg, lin=lin,
+                              image_embeds=image_embeds)
+        aux = aux + a
+
+    if n_super > 0:
+        def superblock(carry, sb_params):
+            x, aux = carry
+            for j, kind in enumerate(pat):
+                x, a, _ = apply_layer(sb_params[f"slot{j}"], x, kind=kind,
+                                      cfg=cfg, lin=lin,
+                                      image_embeds=image_embeds)
+                aux = aux + a
+            return (x, aux), None
+        if remat:
+            superblock = jax.checkpoint(superblock)
+        (x, aux), _ = jax.lax.scan(superblock, (x, aux), params["blocks"])
+
+    for p, kind in zip(params["tail_layers"], tail_kinds):
+        x, a, _ = apply_layer(p, x, kind=kind, cfg=cfg, lin=lin,
+                              image_embeds=image_embeds)
+        aux = aux + a
+
+    x = nn.norm_apply(params["final_norm"], x, cfg=cfg)
+    logits = nn.head_apply(params["embed"], params.get("head"), x, cfg=cfg)
+    if return_hidden:
+        return logits.astype(jnp.float32), aux, x
+    return logits.astype(jnp.float32), aux
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig, *,
+            quantize: bool = True, remat: bool = False,
+            aux_weight: float = 0.01):
+    """Vocab-parallel cross entropy.
+
+    ``take_along_axis`` over the vocab dim of sharded logits makes GSPMD
+    all-gather the FULL logits tensor (measured: 196 GiB/chip/step f32 on
+    mamba2 train_4k, twice — fwd + bwd scatter-add; EXPERIMENTS §Perf).
+    Megatron-style alternative:  nll = logsumexp(logits) − ⟨h, E[label]⟩ —
+    logsumexp reduces the sharded vocab axis with a local reduce + tiny
+    psum, and the label's output-embedding row is a table gather (one
+    table-sized all-gather per step instead of a logits-sized one).
+    """
+    logits, aux, h = forward(params, batch, cfg, quantize=quantize,
+                             remat=remat, return_hidden=True)
+    labels = batch["labels"]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)        # (B,S)
+    if cfg.tie_embeddings or "head" not in params:
+        emb = jnp.take(params["embed"]["table"], labels, axis=0)
+    else:                                                     # head.w (d,V)
+        emb = jnp.moveaxis(jnp.take(params["head"]["w"], labels, axis=1),
+                           0, -1)                             # (B,S,d)
+    label_logit = jnp.einsum("bsd,bsd->bs", h.astype(jnp.float32),
+                             emb.astype(jnp.float32))
+    nll = lse - label_logit
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss + aux_weight * aux, (loss, aux)
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, *,
+               abstract: bool = False) -> dict:
+    head_kinds, pat, n_super, tail_kinds = _layer_split(cfg)
+
+    def mk(kind):
+        return init_layer_cache(cfg, kind, batch, max_seq, abstract=abstract)
+
+    blocks = {}
+    for j, kind in enumerate(pat):
+        if n_super > 0:
+            one = mk(kind)
+            if abstract:
+                blocks[f"slot{j}"] = jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct((n_super, *s.shape),
+                                                   s.dtype), one)
+            else:
+                blocks[f"slot{j}"] = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (n_super, *a.shape)).copy(),
+                    one)
+    pos = (jax.ShapeDtypeStruct((batch,), jnp.int32) if abstract
+           else jnp.zeros((batch,), jnp.int32))
+    return {"head": [mk(k) for k in head_kinds],
+            "blocks": blocks,
+            "tail": [mk(k) for k in tail_kinds],
+            "pos": pos}
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array,
+                cfg: ModelConfig) -> tuple:
+    """One token per sequence. tokens (B, 1) -> (logits (B,V), new cache)."""
+    lin = _lin(cfg, quantize=False)
+    head_kinds, pat, n_super, tail_kinds = _layer_split(cfg)
+    pos = cache["pos"]
+    x = nn.embed_apply(params["embed"], tokens, cfg=cfg)
+
+    new_head = []
+    for p, kind, c in zip(params["head_layers"], head_kinds, cache["head"]):
+        x, _, nc = apply_layer(p, x, kind=kind, cfg=cfg, lin=lin, cache=c,
+                               pos=pos)
+        new_head.append(nc)
+
+    new_blocks = {}
+    if n_super > 0:
+        def superblock(x, scanned):
+            sb_params, sb_cache = scanned
+            new_c = {}
+            for j, kind in enumerate(pat):
+                x, _, nc = apply_layer(sb_params[f"slot{j}"], x, kind=kind,
+                                       cfg=cfg, lin=lin,
+                                       cache=sb_cache[f"slot{j}"], pos=pos)
+                new_c[f"slot{j}"] = nc
+            return x, new_c
+        x, new_blocks = jax.lax.scan(superblock, x,
+                                     (params["blocks"], cache["blocks"]))
+
+    new_tail = []
+    for p, kind, c in zip(params["tail_layers"], tail_kinds, cache["tail"]):
+        x, _, nc = apply_layer(p, x, kind=kind, cfg=cfg, lin=lin, cache=c,
+                               pos=pos)
+        new_tail.append(nc)
+
+    x = nn.norm_apply(params["final_norm"], x, cfg=cfg)
+    logits = nn.head_apply(params["embed"], params.get("head"), x, cfg=cfg)
+    new_cache = {"head": new_head, "blocks": new_blocks, "tail": new_tail,
+                 "pos": pos + 1}
+    return logits[:, 0].astype(jnp.float32), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Serve parameterization (offline conversion; abstract via eval_shape)
+# ---------------------------------------------------------------------------
+
+_NO_QUANT_KEYS = {"embed", "head", "router", "kv_norm", "ln1", "ln2", "norm",
+                  "final_norm"}
+# MLA up-projections are consumed per-head inside the absorbed-decode einsums
+# (q·W_UK, o·W_UV) rather than as vector-matrix products, so the RSR index
+# does not apply to them at serve time; they serve as dense dequant (γ·W_t).
+# See DESIGN.md §4 (arch-applicability).
+_DEQUANT_ONLY_KEYS = {"w_uk", "w_uv"}
+
+
+def _vmap_leading(fn, arr, ndim_base: int):
+    if arr.ndim == ndim_base:
+        return fn(arr)
+    return jax.vmap(lambda a: _vmap_leading(fn, a, ndim_base))(arr)
+
+
+def serve_params(params: dict, cfg: ModelConfig) -> dict:
+    """Trained tree -> RSR serve tree (Algorithm 1 offline, per matrix)."""
+    from repro.core.preprocess import preprocess_ternary_direct
+    from repro.core.ternary import absmean_quantize
+
+    def dequant(p):                               # dense-serve baseline:
+        def one(w):                               # serve γ·W_t as plain bf16
+            wt, gamma = absmean_quantize(w.astype(jnp.float32))
+            return (gamma * wt).astype(jnp.dtype(cfg.dtype))
+        out = {"w": _vmap_leading(one, p["w"], 2)}
+        if "b" in p:
+            out["b"] = p["b"]
+        return out
+
+    def conv_linear(p):                           # {'w'[,b]} possibly stacked
+        from repro.models.modules import serve_linear_params
+
+        def one(w):
+            sp = serve_linear_params({"w": w}, cfg=cfg)
+            return sp["codes"], sp["scale"]
+        codes, scale = _vmap_leading(lambda w: one(w), p["w"], 2)
+        out = {"codes": codes, "scale": scale}
+        # bias always present: its shape statically encodes the true n_out
+        # (codes cover ceil(n_out/k)*k padded columns)
+        if "b" in p:
+            out["b"] = p["b"].astype(jnp.float32)
+        else:
+            out["b"] = jnp.zeros(p["w"].shape[:-2] + (p["w"].shape[-1],),
+                                 jnp.float32)
+        return out
+
+    def conv_bank(bank):                          # raw (..., n, m) expert bank
+        from repro.models.modules import serve_linear_params
+
+        def one(w):
+            sp = serve_linear_params({"w": w}, cfg=cfg)
+            return sp["codes"], sp["scale"]
+        codes, scale = _vmap_leading(lambda w: one(w), bank, 2)
+        return {"codes": codes, "scale": scale}
+
+    def walk(node, name: str):
+        if isinstance(node, dict):
+            if name in _NO_QUANT_KEYS:
+                return node
+            if "w" in node and name not in _NO_QUANT_KEYS:
+                if cfg.quant == "none":
+                    return node
+                if name in _DEQUANT_ONLY_KEYS:
+                    return dequant(node)
+                return conv_linear(node) if cfg.rsr_serve else dequant(node)
+            if "router" in node:                  # moe dict
+                out = {"router": node["router"]}
+                for nm in ("wi", "wg", "wo"):
+                    out[nm] = conv_bank(node[nm]) if cfg.rsr_serve \
+                        else node[nm]
+                if "shared" in node:
+                    out["shared"] = {k2: walk(v2, k2)
+                                     for k2, v2 in node["shared"].items()}
+                return out
+            return {k: walk(v, k) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v, name) for v in node]
+        return node
+
+    return walk(params, "")

@@ -1,0 +1,84 @@
+"""Experimental GPipe-style pipeline parallelism over the "pod" axis.
+
+The production dry-run maps "pod" to data parallelism (DESIGN.md §3); this
+module provides the alternative: split the layer stack into one stage per
+pod and stream microbatches through a shard_map ppermute ring.
+
+Schedule (GPipe, fill-drain): with S stages and M microbatches, step t ∈
+[0, S+M-1) has stage s processing microbatch (t - s); activations hop
+stage→stage via collective-permute each step.  Bubble fraction =
+(S-1)/(S+M-1) — the classic trade documented for operators choosing between
+pod-DP (no bubble, gradient all-reduce over ICI/DCN) and pod-PP (bubble,
+point-to-point activations only).
+
+`pipeline_apply` is deliberately minimal — layer_fn is any
+(stage_params, x) -> x; correctness is tested against the sequential stack
+on an 8-device mesh (tests/test_parallel.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def pipeline_apply(stage_params, x: jax.Array, layer_fn, mesh: Mesh, *,
+                   axis: str = "pod", microbatches: int = 4) -> jax.Array:
+    """y = stage_S(...stage_1(x)) with stages sharded over ``axis``.
+
+    stage_params: pytree whose leaves have leading dim = n_stages (stacked
+    per-stage parameters; stage s uses leaf[s]).
+    x: (B, ...) global batch; B must divide by microbatches.
+    """
+    n_stages = mesh.shape[axis]
+    b = x.shape[0]
+    assert b % microbatches == 0, (b, microbatches)
+    mb = b // microbatches
+
+    def body(params_local, x_local):
+        # params_local: this stage's params (leading dim 1) ; x_local: full
+        # batch slice replicated — each stage computes only its microbatch.
+        params_me = jax.tree.map(lambda a: a[0], params_local)
+        sid = jax.lax.axis_index(axis)
+        xs = x_local.reshape(microbatches, mb, *x_local.shape[1:])
+
+        n_ticks = n_stages + microbatches - 1
+        buf = jnp.zeros_like(xs[0])
+        outs = jnp.zeros_like(xs)
+
+        def tick(t, carry):
+            buf, outs = carry
+            m_idx = t - sid                       # microbatch at this stage
+            active = (m_idx >= 0) & (m_idx < microbatches)
+            # stage 0 injects fresh microbatches; others take the ring input
+            inject = xs[jnp.clip(m_idx, 0, microbatches - 1)]
+            cur = jnp.where(sid == 0, inject, buf)
+            y = layer_fn(params_me, cur)
+            y = jnp.where(active, y, buf)
+            # last stage records output; others forward along the ring
+            outs = jax.lax.cond(
+                active & (sid == n_stages - 1),
+                lambda o: o.at[jnp.clip(m_idx, 0, microbatches - 1)].set(y),
+                lambda o: o, outs)
+            buf = jax.lax.ppermute(
+                y, axis, [(i, (i + 1) % n_stages) for i in range(n_stages)])
+            return buf, outs
+
+        _, outs = jax.lax.fori_loop(0, n_ticks, tick, (buf, outs))
+        # only the last stage holds real outputs; broadcast them back
+        outs = jax.lax.psum(
+            jnp.where(sid == n_stages - 1, outs, jnp.zeros_like(outs)), axis)
+        return outs.reshape(b, *x.shape[1:])
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis), P()),      # stage-stacked params sharded on axis
+        out_specs=P(),
+        check_rep=False)(stage_params, x)
+
+
+def bubble_fraction(n_stages: int, microbatches: int) -> float:
+    return (n_stages - 1) / (n_stages + microbatches - 1)

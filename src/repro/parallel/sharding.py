@@ -1,0 +1,272 @@
+"""Sharding rules: path-pattern -> PartitionSpec over the production mesh.
+
+Mesh axes: ("pod", "data", "model") multi-pod or ("data", "model") single-pod.
+
+Parallelism mapping (DESIGN.md §3):
+  DP    batch on ("pod","data")
+  FSDP  weight dim-0 on "data" (ZeRO-3-style; XLA inserts the all-gathers,
+        optimizer states inherit the shard => ZeRO-1 for free)
+  TP    attention heads / FFN inner / vocab on "model"
+  EP    MoE expert axis on "model"
+  SP    sequence dim of long activations on "model" between attention blocks
+        (applied via activation constraints in the step functions)
+RSR serve indices shard like the weights they replace: the block axis (nb,
+which tiles the output features) goes on "model".
+
+Rules are (regex over the '/'-joined param path, spec for the *base* rank);
+stacked scan leaves (extra leading layer axis) are handled by left-padding the
+spec with None.  An axis is applied only if it divides the dim size —
+otherwise that dim falls back to replication (e.g. MQA kv=1 heads).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_pspecs", "batch_pspecs", "cache_pspecs", "shardings",
+           "dp_axes", "logical_rules", "constrain"]
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# ---------------------------------------------------------------------------
+# Rule table: (path regex, base spec).  "dp"/"fsdp"/"tp" are placeholders
+# resolved against the mesh.  First match wins.
+# ---------------------------------------------------------------------------
+
+def logical_rules() -> list[tuple[str, tuple]]:
+    return [
+        # embeddings / head: vocab on "model" ONLY — an FSDP factor on the
+        # d dim makes the head matmul contract over a sharded axis, and XLA
+        # partial-matmuls + ALL-REDUCES the full (B,S,V) logits (measured
+        # 192 GiB/chip-step on granite train) instead of gathering the
+        # ~150 MiB table (EXPERIMENTS §Perf iter 8).
+        (r"embed/table$",            ("tp", None)),
+        (r"head/w$",                 (None, "tp")),
+        # norms & scalars
+        (r"(ln1|ln2|norm|final_norm|kv_norm)/(scale|bias)$", (None,)),
+        (r"gate$",                   ()),
+        # attention (gqa / mla / cross)
+        (r"attn/w[qkv]/w$",          ("fsdp", "tp")),
+        (r"attn/w[qkv]/b$",          ("tp",)),
+        (r"attn/wo/w$",              ("tp", "fsdp")),
+        (r"attn/wo/b$",              (None,)),
+        (r"attn/w_dkv/w$",           ("fsdp", None)),
+        (r"attn/w_kpe/w$",           ("fsdp", None)),
+        (r"attn/w_u[kv]/w$",         (None, "tp")),
+        (r"attn/w_u[kv]/(perm|seg)$", ("tp", None)),
+        # dense FFN
+        (r"ffn/w[ig]/w$",            ("fsdp", "tp")),
+        (r"ffn/wo/w$",               ("tp", "fsdp")),
+        (r"ffn/w[igo]/b$",           (None,)),
+        # MoE (EP on model)
+        (r"moe/router/w$",           (None, None)),
+        (r"moe/w[ig]$",              ("tp", "fsdp", None)),
+        (r"moe/wo$",                 ("tp", None, "fsdp")),
+        (r"moe/w[igo]/(perm|seg)$",  ("tp", None, None)),
+        (r"moe/w[igo]/scale$",       ("tp",)),
+        (r"moe/shared/w[igo]/w$",    ("fsdp", "tp")),
+        # mamba2
+        (r"mixer/(z|x|b|c|dt)_proj/w$", ("fsdp", "tp")),
+        (r"mixer/out_proj/w$",       ("tp", "fsdp")),
+        (r"mixer/conv_w[xbc]$",      (None, "tp")),
+        (r"mixer/conv_b(x|b|c2)$",   ("tp",)),
+        (r"mixer/(A_log|D|dt_bias|lam)$", (None,)),
+        # rg-lru
+        (r"mixer/(wx|wgate)/w$",     ("fsdp", "tp")),
+        (r"mixer/w_[ai]/w$",         ("tp", "fsdp")),
+        (r"mixer/out/w$",            ("tp", "fsdp")),
+        # RSR serve leaves (σ/L block axis tiles the output features)
+        (r"(perm|seg|codes)$",       ("tp", None)),
+        (r"scale$",                  ()),
+        (r"/b$",                     ("tp",)),
+        # fallback: replicate
+        (r".*",                      None),
+    ]
+
+
+def _resolve_axis(tag, mesh: Mesh):
+    if tag is None:
+        return None
+    if tag == "tp":
+        return "model" if "model" in mesh.axis_names else None
+    if tag == "fsdp":
+        return "data" if "data" in mesh.axis_names else None
+    if tag == "dp":
+        return dp_axes(mesh)
+    return tag
+
+
+def _axis_size(ax, mesh: Mesh) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        return int(np.prod([mesh.shape[a] for a in ax]))
+    return mesh.shape[ax]
+
+
+def _fit_spec(base: tuple, shape: tuple, mesh: Mesh) -> P:
+    """Left-pad to rank, resolve placeholders, drop non-dividing axes."""
+    base = tuple(base)
+    if len(base) < len(shape):
+        base = (None,) * (len(shape) - len(base)) + base
+    base = base[-len(shape):] if len(base) > len(shape) else base
+    out = []
+    for dim, tag in zip(shape, base):
+        ax = _resolve_axis(tag, mesh)
+        if ax is not None and dim % _axis_size(ax, mesh) == 0 and dim > 0:
+            out.append(ax)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+SERVE_REPLICATE_BYTES = 4 * 2 ** 20   # replicate serve leaves under 4 MiB
+
+
+def param_pspecs(params_abstract, mesh: Mesh, *, serve: bool = False,
+                 replicate_small: bool = True):
+    """Abstract param tree -> PartitionSpec tree (path-rule matching).
+
+    serve=True applies the decode policy:
+      * drop the FSDP ("data") factor — no optimizer state to shard, and
+        FSDP all-gathers dominate the tiny step (125 MiB/step on the lm head
+        alone, perf_iterations/iter2);
+      * replicate small leaves (< SERVE_REPLICATE_BYTES): sharding a 1 MiB
+        gate matrix buys nothing and costs a psum per layer per step
+        (recurrentgemma decode was collective-dominated through its RG-LRU
+        gate psums, perf_iterations/iter3).
+    """
+    rules = [(re.compile(rx), spec) for rx, spec in logical_rules()]
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        if serve:
+            nbytes = int(np.prod(leaf.shape)) * jax.numpy.dtype(
+                leaf.dtype).itemsize
+            # codes are exempt: sharding the RSR block axis is what
+            # parallelizes the segmented-sum scatter — replicated codes make
+            # XLA split the scatter over the contraction dim instead, which
+            # costs an all-reduce of u per linear (perf_iterations/iter4:
+            # 26.6 MiB f32 AR per layer on recurrentgemma decode) AND
+            # un-shards the 4 B/elem scatter-updates traffic.
+            # batch-dependent policy: replicating a small weight trades
+            # 16x its read traffic for removing a per-layer psum — a win at
+            # batch >= ~16 (rgemma decode_32k), a 2x net LOSS at B=1
+            # long-context decode (mamba long_500k, perf_iterations log).
+            small = nbytes < SERVE_REPLICATE_BYTES
+            is_index = ps.endswith(("codes", "perm", "seg"))
+            if replicate_small and small and not is_index:
+                return P()
+        for rx, spec in rules:
+            if rx.search(ps):
+                if spec is None:
+                    return P()
+                use = spec
+                if serve:
+                    use = tuple(None if t == "fsdp" else t for t in spec)
+                return _fit_spec(use, leaf.shape, mesh)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, params_abstract)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_pspecs(batch_abstract, mesh: Mesh, *, seq_shard: bool = False):
+    """Inputs: batch dim on DP axes; optional sequence sharding (SP)."""
+    dp = dp_axes(mesh)
+    tp = "model" if "model" in mesh.axis_names else None
+
+    def one(path, leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if len(shape) >= 1 and shape[0] % _axis_size(dp, mesh) == 0:
+            spec[0] = dp
+        if seq_shard and len(shape) >= 2 and tp and shape[1] % \
+                _axis_size(tp, mesh) == 0:
+            spec[1] = tp
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, batch_abstract)
+
+
+def cache_pspecs(cache_abstract, mesh: Mesh):
+    """Decode-state sharding.
+
+    KV-type caches (k/v/c_kv/k_pe/xk/xv) shard the SEQUENCE dim on "model":
+    heads rarely divide tp (GQA kv=8 < 16, MQA kv=1), and head-dim sharding
+    forces involuntary resharding copies of the whole cache every step
+    (measured: 35× cache re-read, perf_iterations/iter0).  Seq-sharding turns
+    decode attention into partial-softmax shards + two tiny all-reduces.
+    Recurrent states shard their feature axis on "model"; batch on DP
+    everywhere it divides.
+    """
+    dp = dp_axes(mesh)
+    tp = "model" if "model" in mesh.axis_names else None
+    dpsz = _axis_size(dp, mesh)
+    tpsz = _axis_size(tp, mesh) if tp else 1
+
+    KV_BHSD = {"k", "v"}             # (B, KVH, S, hd): seq at bdim+2
+    KV_BSD = {"c_kv", "k_pe", "xk", "xv"}   # (B, S, ...): seq at bdim+1
+    FEAT_NAMES = {"state", "h", "conv", "conv_x", "conv_b", "conv_c"}
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        name = ps.rsplit("/", 1)[-1]
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        off = 1 if "blocks" in ps and len(shape) >= 2 else 0
+        bdim = off
+        if len(shape) > bdim and shape[bdim] % dpsz == 0 and shape[bdim] > 1:
+            spec[bdim] = dp
+        if tp:
+            seq_ax = None
+            if name in KV_BHSD and len(shape) >= bdim + 3:
+                # prefer head sharding when kvh divides tp; else shard seq
+                if shape[bdim + 1] % tpsz == 0 and shape[bdim + 1] >= tpsz:
+                    spec[bdim + 1] = tp
+                else:
+                    seq_ax = bdim + 2
+            elif name in KV_BSD and len(shape) >= bdim + 2:
+                seq_ax = bdim + 1
+            if seq_ax is not None and shape[seq_ax] % tpsz == 0 and \
+                    shape[seq_ax] >= tpsz:
+                spec[seq_ax] = tp                     # sequence dim
+            if name in FEAT_NAMES:
+                for cand in range(bdim + 1, len(shape)):
+                    if shape[cand] % tpsz == 0 and shape[cand] >= tpsz:
+                        spec[cand] = tp               # feature/heads dim
+                        break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_abstract)
+
+
+def shardings(tree_pspecs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(x, mesh: Mesh, spec: P):
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

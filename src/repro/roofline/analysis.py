@@ -1,0 +1,178 @@
+"""Roofline analysis from compiled artifacts (no hardware required).
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs      / (chips × PEAK_FLOPS_BF16)
+    memory     = HLO_bytes      / (chips × HBM_BW)
+    collective = collective_B   / (chips × ICI_BW_PER_LINK)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.  Calibration
+(tests/test_roofline.py) shows XLA reports these PER DEVICE for an SPMD
+module — they are used as-is.
+
+Collective bytes are NOT in cost_analysis: we parse the optimized HLO text.
+XLA prints collective operands untyped (just %name), so we read the *result*
+shape of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction plus its replica_groups=[n,g] group size, and
+convert to per-device wire bytes with the standard ring formulas:
+
+    all-gather      out·(g-1)/g          reduce-scatter  out·(g-1)
+    all-reduce      2·size·(g-1)/g       all-to-all      size·(g-1)/g
+    collective-permute  size
+
+Two adjustments recorded per cell: (a) XLA assigns zero FLOPs to scatter ops,
+so RSR-serve cells add the analytic segmented-sum adds (batch × Σ codes.size,
+MoE banks weighted by top_k/E) via ``extra_flops``; (b) useful_ratio uses
+MODEL_FLOPS/chips against the per-device HLO FLOPs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Optional
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# a typed shape like bf16[128,4096]{1,0} or f32[]
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# instruction: [ROOT] %name = <result types> <opcode>(
+_INSTR_RE = re.compile(
+    r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _wire_bytes(kind: str, result_bytes: float, g: int) -> float:
+    """Per-device ring wire bytes for a collective with group size g."""
+    if g <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return result_bytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return result_bytes * (g - 1)
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * (g - 1) / g
+    if kind == "all-to-all":
+        return result_bytes * (g - 1) / g
+    return result_bytes          # collective-permute
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device wire bytes per collective kind from optimized HLO text."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    count = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = _INSTR_RE.match(s)
+        if not m:
+            continue
+        result_part, kind = m.group(1), m.group(2)
+        if "-done(" in s:        # -done carries no new transfer
+            continue
+        rbytes = sum(_shape_bytes(dt, dims)
+                     for dt, dims in _SHAPE_RE.findall(result_part))
+        gm = _GROUPS_RE.search(s)
+        g = int(gm.group(2)) if gm else 2
+        out[kind] += _wire_bytes(kind, rbytes, g)
+        count[kind] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = count
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    """All *_flops/*_bytes fields are PER CHIP; *_s are per-chip step times."""
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    model_flops: float          # 6·N·D (or serve equivalent), per chip
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    def finalize(self) -> "Roofline":
+        self.compute_s = self.hlo_flops / hw.PEAK_FLOPS_BF16
+        self.memory_s = self.hlo_bytes / hw.HBM_BW
+        self.collective_s = self.coll_bytes / hw.ICI_BW_PER_LINK
+        return self
+
+    @property
+    def dominant(self) -> str:
+        vals = {"compute": self.compute_s, "memory": self.memory_s,
+                "collective": self.collective_s}
+        return max(vals, key=vals.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """model-FLOPs-time / dominant-term-time (≈ achievable MFU bound)."""
+        ideal = self.model_flops / hw.PEAK_FLOPS_BF16
+        return ideal / self.bound_s if self.bound_s else 0.0
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(dominant=self.dominant, useful_ratio=self.useful_ratio,
+                 roofline_fraction=self.roofline_fraction,
+                 bound_s=self.bound_s)
+        return d
+
+
+def extract_cost(compiled) -> tuple[float, float]:
+    """(flops, bytes) from compiled.cost_analysis(), tolerant of formats."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    return flops, byts
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_name: str, chips: int,
+            model_flops: float, hlo_text: Optional[str] = None,
+            extra_flops: float = 0.0) -> Roofline:
+    """cost_analysis / collective_bytes are already per device (see header);
+    model_flops is global and is normalized here.  extra_flops: per-device
+    analytic additions (e.g. scatter adds XLA does not count)."""
+    flops, byts = extract_cost(compiled)
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    return Roofline(arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+                    hlo_flops=flops + extra_flops, hlo_bytes=byts,
+                    coll_bytes=coll["total"],
+                    model_flops=model_flops / chips).finalize()

@@ -1,0 +1,65 @@
+"""Model-FLOPs accounting: MODEL_FLOPS = 6·N·D (train) / 2·N_active·D (fwd),
+with the MoE active fraction applied to expert banks (6·N_active·D).
+
+N comes from the abstract train-param tree (path-aware so expert banks can be
+scaled by top_k/E); D = tokens processed by the step.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.config import ModelConfig, ShapeConfig
+
+
+def param_counts(params_abstract, cfg: ModelConfig) -> dict:
+    """{'total': N, 'active': N_active (MoE-weighted), 'embed': ...}."""
+    total = active = embed = 0
+    frac = (cfg.num_experts_per_tok / cfg.num_experts
+            if cfg.num_experts else 1.0)
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_abstract)[0]:
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        n = int(np.prod(leaf.shape))
+        total += n
+        is_embed = "embed" in keys or "head" in keys
+        if is_embed:
+            embed += n
+        if "moe" in keys and any(k in ("wi", "wg", "wo") for k in keys) \
+                and "shared" not in keys:
+            active += int(n * frac)
+        else:
+            active += n
+    return {"total": total, "active": active, "embed": embed}
+
+
+def rsr_scatter_flops(serve_abstract, cfg: ModelConfig, batch: int) -> float:
+    """Analytic adds of the RSR segmented-sum scatters (XLA counts scatter as
+    0 FLOPs): batch × Σ codes.size, MoE banks weighted by top_k/E."""
+    total = 0.0
+    frac = (cfg.num_experts_per_tok / cfg.num_experts
+            if cfg.num_experts else 1.0)
+    for path, leaf in jax.tree_util.tree_flatten_with_path(serve_abstract)[0]:
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        if keys[-1] != "codes":
+            continue
+        n = int(np.prod(leaf.shape))
+        if "moe" in keys and "shared" not in keys:
+            n = int(n * frac)
+        total += n
+    return float(total) * batch
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig, counts: dict) -> float:
+    """Useful model FLOPs for one step of this shape.
+
+    train  : 6 · N_active · tokens       (fwd+bwd)
+    prefill: 2 · N_active · tokens
+    decode : 2 · N_active · batch        (one token per sequence)
+    (attention score FLOPs excluded — standard 6ND convention.)
+    """
+    n = counts["active"]
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch

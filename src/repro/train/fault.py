@@ -1,0 +1,135 @@
+"""Fault tolerance & elasticity for long-running multi-pod jobs.
+
+The container is single-process, so multi-host failure handling is expressed
+as policy + mechanism with the failure *signals* injectable (and covered by
+tests via injection):
+
+  * ``FaultManager.run`` — supervised step loop: periodic async checkpoints,
+    automatic restore-and-resume on exceptions (falling back across corrupt
+    checkpoints), bounded restart budget.
+  * ``Heartbeat`` / ``StragglerPolicy`` — per-host heartbeat table; hosts
+    silent for > timeout are declared dead (triggering elastic downsize);
+    hosts persistently slower than ``straggler_factor`` × median step time
+    are flagged for eviction — mirroring the Borg/TPU-pod babysitter design.
+  * Elastic resize = restore the latest checkpoint onto a *new* mesh:
+    checkpoints are stored mesh-independent (see checkpoint.py), so resuming
+    on fewer/more data-parallel replicas is a restore with different
+    shardings + a deterministic data stream keyed by step (see data.py).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.train import checkpoint as ckpt
+
+
+@dataclass
+class Heartbeat:
+    timeout_s: float = 60.0
+    last_seen: dict = field(default_factory=dict)
+
+    def beat(self, host: int, t: Optional[float] = None):
+        self.last_seen[host] = time.monotonic() if t is None else t
+
+    def dead_hosts(self, now: Optional[float] = None) -> list[int]:
+        now = time.monotonic() if now is None else now
+        return [h for h, t in self.last_seen.items()
+                if now - t > self.timeout_s]
+
+
+@dataclass
+class StragglerPolicy:
+    """Flag hosts whose step time is persistently above factor × median."""
+    factor: float = 1.5
+    window: int = 20
+    times: dict = field(default_factory=dict)
+
+    def record(self, host: int, step_time: float):
+        self.times.setdefault(host, []).append(step_time)
+        self.times[host] = self.times[host][-self.window:]
+
+    def stragglers(self) -> list[int]:
+        if len(self.times) < 2:
+            return []
+        med = np.median([np.median(v) for v in self.times.values()])
+        return [h for h, v in self.times.items()
+                if len(v) >= self.window // 2 and np.median(v) > self.factor * med]
+
+
+class FaultManager:
+    """Supervised training loop with checkpoint/restart semantics."""
+
+    def __init__(self, ckpt_dir: str, *, checkpoint_every: int = 100,
+                 keep: int = 3, max_restarts: int = 5):
+        self.ckpt_dir = ckpt_dir
+        self.every = checkpoint_every
+        self.keep = keep
+        self.max_restarts = max_restarts
+        self.restarts = 0
+        self._pending = None
+
+    # -- checkpoint mechanics -------------------------------------------------
+    def maybe_save(self, step: int, state, *, blocking: bool = False):
+        if step % self.every == 0 and step > 0:
+            if self._pending is not None and not self._pending.done():
+                self._pending.result()            # backpressure: 1 in flight
+            self._pending = None
+            res = ckpt.save(self.ckpt_dir, step, state, keep=self.keep,
+                            blocking=blocking)
+            if not blocking:
+                self._pending = res
+
+    def finalize(self):
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def restore_latest(self, state_like, shardings_tree=None):
+        """Restore newest valid checkpoint, falling back across corrupt ones.
+
+        Returns (step, state) or (0, None) when nothing restorable."""
+        for step in sorted(ckpt.all_steps(self.ckpt_dir), reverse=True):
+            try:
+                state = ckpt.restore(self.ckpt_dir, step, state_like,
+                                     shardings_tree=shardings_tree)
+                return step, state
+            except Exception:
+                continue
+        return 0, None
+
+    # -- supervised loop ------------------------------------------------------
+    def run(self, init_state, step_fn: Callable, batch_fn: Callable,
+            total_steps: int, *, state_like=None, shardings_tree=None,
+            on_metrics: Optional[Callable] = None):
+        """step_fn(state, batch) -> (state, metrics); batch_fn(step) -> batch.
+
+        Any exception triggers restore-from-checkpoint and resume; the data
+        stream is step-addressed so no batch is skipped or repeated."""
+        state = init_state
+        step = 0
+        while step < total_steps:
+            try:
+                batch = batch_fn(step)
+                state, metrics = step_fn(state, batch)
+                if on_metrics:
+                    on_metrics(step, metrics)
+                step += 1
+                self.maybe_save(step, state)
+            except KeyboardInterrupt:
+                raise
+            except Exception:
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise
+                rstep, rstate = self.restore_latest(
+                    state_like if state_like is not None else state,
+                    shardings_tree)
+                if rstate is None:
+                    raise
+                step, state = rstep, rstate
+        self.finalize()
+        return state

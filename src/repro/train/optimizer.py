@@ -1,0 +1,96 @@
+"""Optimizers (AdamW, Lion) as pure pytree transforms — no optax dependency.
+
+State layout mirrors the param tree, so GSPMD shards optimizer moments
+exactly like the FSDP-sharded params (ZeRO-1: each data shard owns the
+moments of its param shard — no replication of optimizer state anywhere).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict          # unused (zeros-like scalars) for lion
+
+
+def init_opt_state(params, tcfg: TrainConfig) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    if tcfg.optimizer == "lion":
+        nu = jax.tree.map(lambda p: jnp.zeros((), jnp.float32), params)
+    else:
+        nu = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=nu)
+
+
+def lr_schedule(tcfg: TrainConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to 10%."""
+    warm = jnp.minimum(step / jnp.maximum(tcfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - tcfg.warmup_steps) /
+                 jnp.maximum(tcfg.total_steps - tcfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.1 + 0.45 * (1 + jnp.cos(jnp.pi * t))
+    return tcfg.learning_rate * warm * cos
+
+
+def _decay_mask(path) -> bool:
+    """Weight decay only on matrices (skip norms, biases, scalars)."""
+    names = {getattr(p, "key", None) for p in path}
+    return not ({"scale", "bias", "b", "gate", "lam", "A_log", "D",
+                 "dt_bias"} & names)
+
+
+def apply_updates(params, grads, state: OptState, tcfg: TrainConfig):
+    """-> (new_params, new_state, grad_norm)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, tcfg.grad_clip / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * clip, grads)
+    lr = lr_schedule(tcfg, state.step)
+    b1, b2 = tcfg.b1, tcfg.b2
+    step1 = state.step + 1
+
+    if tcfg.optimizer == "lion":
+        def upd(path, p, g, m):
+            u = jnp.sign(b1 * m + (1 - b1) * g)
+            if _decay_mask(path):
+                u = u + tcfg.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * u
+            new_m = b2 * m + (1 - b2) * g
+            return new_p.astype(p.dtype), new_m
+        out = jax.tree_util.tree_map_with_path(upd, params, grads, state.mu)
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda o: o[1], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, OptState(step1, new_mu, state.nu), gnorm
+
+    # AdamW
+    bc1 = 1 - b1 ** step1.astype(jnp.float32)
+    bc2 = 1 - b2 ** step1.astype(jnp.float32)
+
+    def upd(path, p, g, m, v):
+        m1 = b1 * m + (1 - b1) * g
+        v1 = b2 * v + (1 - b2) * jnp.square(g)
+        u = (m1 / bc1) / (jnp.sqrt(v1 / bc2) + 1e-8)
+        if _decay_mask(path):
+            u = u + tcfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m1, v1
+
+    out = jax.tree_util.tree_map_with_path(upd, params, grads, state.mu,
+                                           state.nu)
+    is3 = lambda x: isinstance(x, tuple) and len(x) == 3
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=is3)
+    new_mu = jax.tree.map(lambda o: o[1], out, is_leaf=is3)
+    new_nu = jax.tree.map(lambda o: o[2], out, is_leaf=is3)
+    return new_params, OptState(step1, new_mu, new_nu), gnorm
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))

@@ -1,0 +1,173 @@
+"""Core RSR/RSR++ correctness: paper worked examples + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (bin_matrix, decompose_ternary, fold_bin_product,
+                        index_nbytes, optimal_k_rsr, optimal_k_rsrpp,
+                        preprocess_binary, preprocess_ternary,
+                        preprocess_ternary_direct, random_binary,
+                        random_ternary, recompose_ternary, rsr_matmul_binary,
+                        rsr_matmul_ternary, rsr_matmul_ternary_direct,
+                        segmented_sum, tern_matrix)
+
+# ---- paper §3.1 example -----------------------------------------------------
+
+PAPER_B = jnp.array([
+    [0, 1, 1, 1, 0, 1],
+    [0, 0, 0, 1, 1, 1],
+    [0, 1, 1, 1, 1, 0],
+    [1, 1, 0, 0, 1, 0],
+    [0, 0, 1, 1, 0, 1],
+    [0, 0, 0, 0, 1, 0]], dtype=jnp.int8)
+
+
+def test_paper_example_blocking_permutation_segmentation():
+    idx = preprocess_binary(PAPER_B, 2)
+    assert idx.num_blocks == 3
+    # block 1 row codes: rows (01,00,01,11,00,00) -> values (1,0,1,3,0,0)
+    np.testing.assert_array_equal(idx.codes[0], [1, 0, 1, 3, 0, 0])
+    # σ (Example 3.3, 0-indexed): rows in sorted order = [2,5,6,1,3,4] - 1
+    np.testing.assert_array_equal(idx.perm[0], [1, 4, 5, 0, 2, 3])
+    # Full Segmentation (paper Fig 2, 0-indexed + sentinel): [0,3,5,5,6]
+    np.testing.assert_array_equal(idx.seg[0], [0, 3, 5, 5, 6])
+
+
+def test_paper_example_product():
+    """v·B for the paper's §3 matrix — every impl, RSR and RSR++."""
+    v = jnp.array([3., 2., 4., 5., 9., 1.])
+    want = v @ PAPER_B.astype(jnp.float32)
+    idx = preprocess_binary(PAPER_B, 2)
+    for impl in ("segments", "scatter", "onehot"):
+        for pp in (False, True):
+            got = rsr_matmul_binary(v, idx, impl=impl, plus_plus=pp)
+            np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_segmented_sum_matches_definition():
+    """Def 4.1 directly: u[j] = Σ v_π over segment j (incl. empty segments)."""
+    idx = preprocess_binary(PAPER_B, 2)
+    v = jnp.array([3., 2., 4., 5., 9., 1.])
+    u = segmented_sum(v, idx.perm, idx.seg)
+    vp = np.asarray(v)[np.asarray(idx.perm[0])]
+    want = [vp[0:3].sum(), vp[3:5].sum(), 0.0, vp[5:6].sum()]
+    np.testing.assert_allclose(u[0], want, rtol=1e-6)
+
+
+# ---- Prop 2.1 ---------------------------------------------------------------
+
+def test_ternary_decomposition_roundtrip():
+    a = random_ternary(jax.random.PRNGKey(0), (33, 17))
+    b1, b2 = decompose_ternary(a)
+    assert set(np.unique(b1)) <= {0, 1} and set(np.unique(b2)) <= {0, 1}
+    np.testing.assert_array_equal(recompose_ternary(b1, b2), a)
+    assert not bool(jnp.any((b1 == 1) & (b2 == 1)))
+
+
+# ---- Bin_[k] / Tern_[k] -----------------------------------------------------
+
+def test_bin_matrix_enumerates_all_patterns():
+    for k in range(1, 8):
+        b = np.asarray(bin_matrix(k))
+        assert b.shape == (2 ** k, k)
+        vals = (b * (2 ** np.arange(k - 1, -1, -1))).sum(1)
+        np.testing.assert_array_equal(vals, np.arange(2 ** k))
+
+
+def test_tern_matrix_enumerates_all_patterns():
+    for k in range(1, 6):
+        t = np.asarray(tern_matrix(k))
+        assert t.shape == (3 ** k, k)
+        digits = np.where(t == -1, 2, t)
+        vals = (digits * (3 ** np.arange(k - 1, -1, -1))).sum(1)
+        np.testing.assert_array_equal(vals, np.arange(3 ** k))
+
+
+# ---- Algorithm 3 (RSR++) ----------------------------------------------------
+
+@given(st.sampled_from([1, 3, 5, 7]), st.sampled_from([1, 4]))
+@settings(max_examples=8, deadline=None)
+def test_fold_equals_bin_product(k, rows):
+    u = jax.random.normal(jax.random.PRNGKey(k * 131 + rows), (rows, 2 ** k))
+    np.testing.assert_allclose(fold_bin_product(u), u @ bin_matrix(k),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fold_rejects_non_power_of_two():
+    with pytest.raises(ValueError):
+        fold_bin_product(jnp.ones((4, 7)))
+
+
+# ---- property tests: every implementation == naive matmul -------------------
+
+@given(n=st.sampled_from([3, 8, 16, 33]), m=st.sampled_from([1, 7, 24]),
+       k=st.sampled_from([1, 2, 4]), batch=st.sampled_from([1, 2]),
+       impl=st.sampled_from(["segments", "scatter", "onehot"]))
+@settings(max_examples=15, deadline=None)
+def test_binary_rsr_equals_naive(n, m, k, batch, impl):
+    key = jax.random.PRNGKey(n * 7919 + m * 131 + k)
+    b = random_binary(key, (n, m))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (batch, n))
+    idx = preprocess_binary(b, k)
+    want = v @ b.astype(jnp.float32)
+    got = rsr_matmul_binary(v, idx, impl=impl, plus_plus=(k <= 4))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@given(n=st.sampled_from([4, 9, 32]), m=st.sampled_from([2, 11, 20]),
+       k=st.sampled_from([1, 3, 5]),
+       impl=st.sampled_from(["segments", "scatter", "onehot"]))
+@settings(max_examples=15, deadline=None)
+def test_ternary_rsr_equals_naive(n, m, k, impl):
+    key = jax.random.PRNGKey(n * 104729 + m * 31 + k)
+    a = random_ternary(key, (n, m))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, n))
+    want = v @ a.astype(jnp.float32)
+    got = rsr_matmul_ternary(v, preprocess_ternary(a, k), impl=impl)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+    got_d = rsr_matmul_ternary_direct(v, preprocess_ternary_direct(a, k),
+                                      impl=impl)
+    np.testing.assert_allclose(got_d, want, rtol=2e-4, atol=2e-4)
+
+
+@given(n=st.sampled_from([8, 24]), dt=st.sampled_from(["float32", "bfloat16"]))
+@settings(max_examples=4, deadline=None)
+def test_rsr_dtype_support(n, dt):
+    a = random_ternary(jax.random.PRNGKey(n), (n, n))
+    v = jax.random.normal(jax.random.PRNGKey(n + 1), (n,)).astype(dt)
+    got = rsr_matmul_ternary(v, preprocess_ternary(a, 3))
+    want = v.astype(jnp.float32) @ a.astype(jnp.float32)
+    tol = 5e-2 if dt == "bfloat16" else 1e-4
+    np.testing.assert_allclose(got.astype(jnp.float32), want, rtol=tol,
+                               atol=tol)
+
+
+# ---- complexity knobs -------------------------------------------------------
+
+def test_optimal_k_grows_with_n():
+    ks = [optimal_k_rsrpp(2 ** e) for e in range(8, 17, 2)]
+    assert ks == sorted(ks)
+    assert optimal_k_rsr(2 ** 13) >= 6
+
+
+def test_index_space_below_dense_float():
+    """Theorem 3.6 / Fig 5: index bytes << n·m float bytes for large n."""
+    n = 1024
+    a = random_ternary(jax.random.PRNGKey(0), (n, n))
+    k = optimal_k_rsrpp(n)
+    idx = preprocess_ternary(a, k)
+    dense_f32 = n * n * 4
+    assert index_nbytes(idx, "paper") < dense_f32
+    # the packed-codes form beats even int8 dense storage
+    assert index_nbytes(idx, "codes") < n * n
+
+
+def test_gradients_flow_through_rsr():
+    """The index is static; d(v·A)/dv must equal Aᵀ row sums."""
+    a = random_ternary(jax.random.PRNGKey(5), (16, 12))
+    idx = preprocess_ternary(a, 3)
+    g = jax.grad(lambda v: rsr_matmul_ternary(v, idx).sum())(
+        jnp.ones((16,)))
+    np.testing.assert_allclose(g, a.astype(jnp.float32).sum(1), rtol=1e-5)

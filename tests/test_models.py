@@ -1,0 +1,134 @@
+"""Per-arch smoke tests (reduced configs) + decode/serve parity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SHAPES, get_config, list_archs, shape_applicable
+from repro.models import frontend
+from repro.models import transformer as tfm
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 16
+
+
+def make_batch(cfg, b=B, s=S):
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                              cfg.vocab_size)
+    batch = {"labels": toks}
+    if cfg.frontend == "audio_stub":
+        batch["embeds"] = frontend.audio_frames(cfg, b, s, key=KEY)
+    else:
+        batch["tokens"] = toks
+    if cfg.frontend == "vision_stub":
+        batch["image_embeds"] = frontend.vision_patches(cfg, b, key=KEY)
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_smoke_forward(arch):
+    """One forward/loss step on the reduced config: shapes + finiteness."""
+    cfg = get_config(arch).reduced()
+    params = tfm.init_params(cfg, KEY)
+    batch = make_batch(cfg)
+    logits, aux = tfm.forward(params, batch, cfg)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+    loss, (ce, _) = tfm.loss_fn(params, batch, cfg)
+    assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("arch", ["gemma-2b", "qwen2-72b", "mamba2-780m",
+                                  "recurrentgemma-2b", "granite-moe-3b-a800m"])
+def test_arch_smoke_train_grad(arch):
+    """Gradients exist and are finite for every trainable leaf."""
+    cfg = get_config(arch).reduced()
+    params = tfm.init_params(cfg, KEY)
+    batch = make_batch(cfg)
+    g = jax.grad(lambda p: tfm.loss_fn(p, batch, cfg)[0])(params)
+    for path, leaf in jax.tree_util.tree_flatten_with_path(g)[0]:
+        assert np.isfinite(np.asarray(leaf, dtype=np.float32)).all(), path
+
+
+@pytest.mark.parametrize("arch", ["gemma-2b", "mamba2-780m",
+                                  "recurrentgemma-2b"])
+def test_decode_matches_prefill(arch):
+    cfg = get_config(arch).reduced()
+    params = tfm.init_params(cfg, KEY)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    sp = tfm.serve_params(params, dataclasses.replace(cfg, rsr_serve=False))
+    full, _ = tfm.forward(sp, {"tokens": toks}, cfg, quantize=False)
+    cache = tfm.init_cache(cfg, B, max_seq=S + 4)
+    for t in range(S):
+        lg, cache = tfm.decode_step(sp, cache, toks[:, t:t + 1], cfg)
+    np.testing.assert_allclose(lg, full[:, -1], rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ["gemma-2b", "mamba2-780m",
+                                  "deepseek-v2-lite-16b",
+                                  "granite-moe-3b-a800m"])
+def test_rsr_serve_matches_dense_serve(arch):
+    """The paper's technique end-to-end: RSR-indexed decode == dense-dequant
+    decode (same ternary function, two evaluation strategies)."""
+    cfg = dataclasses.replace(get_config(arch).reduced(),
+                              capacity_factor=64.0)
+    params = tfm.init_params(cfg, KEY)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, 8), 0,
+                              cfg.vocab_size)
+    sp_d = tfm.serve_params(params, dataclasses.replace(cfg, rsr_serve=False))
+    sp_r = tfm.serve_params(params, cfg)
+    c1 = tfm.init_cache(cfg, B, max_seq=12)
+    c2 = tfm.init_cache(cfg, B, max_seq=12)
+    for t in range(8):
+        lg1, c1 = tfm.decode_step(sp_d, c1, toks[:, t:t + 1], cfg)
+        lg2, c2 = tfm.decode_step(sp_r, c2, toks[:, t:t + 1], cfg)
+    scale = np.abs(np.asarray(lg1)).max() + 1e-6
+    assert np.abs(np.asarray(lg1) - np.asarray(lg2)).max() / scale < 2e-4
+
+
+def test_window_attention_restricts_context():
+    """With window w, token i must be independent of tokens < i - w + 1."""
+    cfg = dataclasses.replace(get_config("recurrentgemma-2b").reduced(),
+                              quant="none")
+    params = tfm.init_params(cfg, KEY)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 24), 0,
+                              cfg.vocab_size)
+    l1, _ = tfm.forward(params, {"tokens": toks}, cfg, quantize=False)
+    # RG-LRU layers carry unbounded state; and stacked window layers widen
+    # the receptive field (2 layers see 2*(w-1) back) — so use ONE attn
+    # layer, where position 23 cannot see position 0 with window 16:
+    cfg2 = dataclasses.replace(cfg, block_pattern=("attn",),
+                               num_layers=1)
+    params2 = tfm.init_params(cfg2, KEY)
+    toksB = toks.at[0, 0].set((int(toks[0, 0]) + 1) % cfg.vocab_size)
+    a, _ = tfm.forward(params2, {"tokens": toks}, cfg2, quantize=False)
+    b, _ = tfm.forward(params2, {"tokens": toksB}, cfg2, quantize=False)
+    # last position is > window away from position 0 -> logits must match
+    assert cfg2.window < 24 - 1
+    np.testing.assert_allclose(a[0, -1], b[0, -1], rtol=1e-4, atol=1e-4)
+    # but an in-window position must differ
+    assert np.abs(np.asarray(a[0, 1]) - np.asarray(b[0, 1])).max() > 1e-6
+
+
+def test_mamba2_state_decode_long_context_constant_memory():
+    """SSM decode state is context-independent (enables long_500k)."""
+    cfg = get_config("mamba2-780m").reduced()
+    c1 = tfm.init_cache(cfg, 1, max_seq=100)
+    c2 = tfm.init_cache(cfg, 1, max_seq=100000)
+    s1 = sum(np.asarray(l).nbytes for l in jax.tree.leaves(c1["blocks"]))
+    s2 = sum(np.asarray(l).nbytes for l in jax.tree.leaves(c2["blocks"]))
+    assert s1 == s2
+
+
+def test_shape_applicability_rules():
+    assert not shape_applicable(get_config("hubert-xlarge"),
+                                SHAPES["decode_32k"])[0]
+    assert not shape_applicable(get_config("qwen2-72b"),
+                                SHAPES["long_500k"])[0]
+    assert shape_applicable(get_config("mamba2-780m"),
+                            SHAPES["long_500k"])[0]
+    assert shape_applicable(get_config("recurrentgemma-2b"),
+                            SHAPES["long_500k"])[0]

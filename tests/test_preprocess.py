@@ -1,0 +1,78 @@
+"""Preprocessing invariants (Algorithm 1) as hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (binary_row_codes, preprocess_binary,
+                        preprocess_ternary_direct, random_binary,
+                        random_ternary)
+
+
+@given(n=st.sampled_from([2, 9, 24]), m=st.sampled_from([1, 8, 19]),
+       k=st.sampled_from([1, 2, 5]))
+@settings(max_examples=12, deadline=None)
+def test_permutation_sorts_codes_stably(n, m, k):
+    b = random_binary(jax.random.PRNGKey(n * 31 + m), (n, m))
+    idx = preprocess_binary(b, k)
+    for i in range(idx.num_blocks):
+        perm = np.asarray(idx.perm[i])
+        codes = np.asarray(idx.codes[i]).astype(np.int64)
+        sorted_codes = codes[perm]
+        # Def 3.2: ascending binary row order
+        assert (np.diff(sorted_codes) >= 0).all()
+        # permutation is a bijection
+        assert sorted(perm.tolist()) == list(range(n))
+        # stability: equal codes keep original order
+        for v in np.unique(codes):
+            rows = perm[sorted_codes == v]
+            assert (np.diff(rows) > 0).all()
+
+
+@given(n=st.sampled_from([2, 9, 24]), m=st.sampled_from([1, 8, 19]),
+       k=st.sampled_from([1, 2, 5]))
+@settings(max_examples=12, deadline=None)
+def test_full_segmentation_semantics(n, m, k):
+    """Def 3.4/Fig 2: seg[j] = first sorted index with pattern j; empty
+    patterns collapse; sentinel = n; counts = histogram (Prop 3.5)."""
+    b = random_binary(jax.random.PRNGKey(n * 131 + m + k), (n, m))
+    idx = preprocess_binary(b, k)
+    for i in range(idx.num_blocks):
+        seg = np.asarray(idx.seg[i])
+        codes = np.asarray(idx.codes[i]).astype(np.int64)
+        assert seg.shape == (2 ** k + 1,)
+        assert seg[0] == 0 and seg[-1] == n
+        assert (np.diff(seg) >= 0).all()
+        hist = np.bincount(codes, minlength=2 ** k)
+        np.testing.assert_array_equal(np.diff(seg), hist)   # Prop 3.5
+
+
+@given(n=st.sampled_from([2, 16]), m=st.sampled_from([3, 13]),
+       k=st.sampled_from([1, 3]))
+@settings(max_examples=8, deadline=None)
+def test_codes_recover_sigma_and_L(n, m, k):
+    """codes ↔ (σ, L) mutual recoverability (DESIGN §2 storage claim)."""
+    b = random_binary(jax.random.PRNGKey(n + m * 7 + k), (n, m))
+    idx = preprocess_binary(b, k)
+    perm2 = np.argsort(np.asarray(idx.codes), axis=-1, kind="stable")
+    np.testing.assert_array_equal(perm2, np.asarray(idx.perm))
+
+
+@given(n=st.sampled_from([5, 18]), k=st.sampled_from([2, 3]))
+@settings(max_examples=6, deadline=None)
+def test_column_padding_is_inert(n, k):
+    """Zero-padded columns (m % k != 0) never contribute to the product."""
+    m = k + 1 if k > 1 else 1     # force padding
+    a = random_ternary(jax.random.PRNGKey(n * 3 + k), (n, m))
+    idx = preprocess_ternary_direct(a, k)
+    v = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    from repro.core import rsr_matmul_ternary_direct
+    got = rsr_matmul_ternary_direct(v, idx)
+    assert got.shape == (m,)
+    np.testing.assert_allclose(got, v @ a.astype(jnp.float32), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_row_codes_big_endian():
+    block = jnp.array([[1, 0, 1, 1]], dtype=jnp.int8)
+    assert int(binary_row_codes(block)[0]) == 0b1011   # paper Def 3.2 example

@@ -1,0 +1,116 @@
+"""Roofline machinery: HLO collective parser + cost_analysis calibration."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+from repro.roofline import hw
+from repro.roofline.analysis import (Roofline, collective_bytes, _wire_bytes)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SYNTH_HLO = """
+HloModule test
+ENTRY %main {
+  %ag = f32[128,256]{1,0} all-gather(%x), channel_id=1, replica_groups=[2,4]<=[8], dimensions={0}
+  %ar = bf16[1024]{0} all-reduce(%y), channel_id=2, replica_groups=[1,8]<=[8], to_apply=%add
+  %rs = f32[16,16]{1,0} reduce-scatter(%z), channel_id=3, replica_groups=[4,2]<=[8], dimensions={0}
+  %cp = u8[1000]{0} collective-permute(%w), channel_id=4, source_target_pairs={{0,1}}
+  ROOT %a2a = f32[64]{0} all-to-all(%v), channel_id=5, replica_groups=[2,4]<=[8], dimensions={0}
+}
+"""
+
+
+def test_collective_parser_counts_and_bytes():
+    out = collective_bytes(SYNTH_HLO)
+    c = out["counts"]
+    assert c == {"all-gather": 1, "all-reduce": 1, "reduce-scatter": 1,
+                 "all-to-all": 1, "collective-permute": 1}
+    assert out["all-gather"] == 128 * 256 * 4 * 3 / 4          # (g-1)/g, g=4
+    assert out["all-reduce"] == 2 * 1024 * 2 * 7 / 8           # g=8
+    assert out["reduce-scatter"] == 16 * 16 * 4 * 1            # (g-1), g=2
+    assert out["collective-permute"] == 1000
+    assert out["all-to-all"] == 64 * 4 * 3 / 4
+    assert out["total"] == sum(out[k] for k in c)
+
+
+def test_wire_bytes_formulas():
+    assert _wire_bytes("all-gather", 100, 1) == 0
+    assert _wire_bytes("all-reduce", 100, 2) == 100.0
+    assert _wire_bytes("collective-permute", 100, 2) == 100
+
+
+def test_roofline_terms_and_dominance():
+    r = Roofline(arch="a", shape="s", mesh="m", chips=256,
+                 hlo_flops=197e12, hlo_bytes=0.0, coll_bytes=0.0,
+                 model_flops=98.5e12).finalize()
+    assert r.compute_s == 1.0 and r.dominant == "compute"
+    assert abs(r.roofline_fraction - 0.5) < 1e-9
+    r2 = Roofline(arch="a", shape="s", mesh="m", chips=1,
+                  hlo_flops=0.0, hlo_bytes=819e9, coll_bytes=50e9,
+                  model_flops=1.0).finalize()
+    assert r2.dominant == "memory" and abs(r2.memory_s - 1.0) < 1e-9
+    assert abs(r2.collective_s - 1.0) < 1e-9
+
+
+_CALIBRATE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P, NamedSharding
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    xs = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    ws = jax.ShapeDtypeStruct((512, 1024), jnp.float32)
+    co = jax.jit(lambda x, w: x @ w,
+                 in_shardings=(NamedSharding(mesh, P("data", None)),
+                               NamedSharding(mesh, P(None, "model")))
+                 ).lower(xs, ws).compile()
+    ca = co.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca["flops"])
+    per_dev = 2 * 256 * 512 * 1024 / 8
+    # cost_analysis must be per-device (within 10%)
+    assert abs(flops - per_dev) / per_dev < 0.1, (flops, per_dev)
+    print("CALIBRATION_OK")
+""")
+
+
+def test_cost_analysis_is_per_device():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", _CALIBRATE],
+                       capture_output=True, text=True, env=env, timeout=300)
+    assert "CALIBRATION_OK" in r.stdout, r.stdout[-1500:] + r.stderr[-2000:]
+
+
+_HLO_COST_CALIBRATE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    from repro.roofline.hlo_cost import analyze_hlo
+
+    # scan of 13 matmuls: flops must be trip-count-corrected exactly
+    def f(x, ws):
+        def body(c, w):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+    co = jax.jit(f).lower(jax.ShapeDtypeStruct((128, 128), jnp.float32),
+                          jax.ShapeDtypeStruct((13, 128, 128), jnp.float32)
+                          ).compile()
+    r = analyze_hlo(co.as_text())
+    want = 13 * 2 * 128 ** 3
+    assert abs(r["flops"] - want) / want < 0.01, (r["flops"], want)
+    assert r["loops"] and r["loops"][0][0] == 13
+    print("HLO_COST_OK")
+""")
+
+
+def test_hlo_cost_model_trip_count_exact():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", _HLO_COST_CALIBRATE],
+                       capture_output=True, text=True, env=env, timeout=300)
+    assert "HLO_COST_OK" in r.stdout, r.stdout[-1500:] + r.stderr[-2000:]
