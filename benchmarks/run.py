@@ -17,6 +17,12 @@ column carries the headline quantity of that figure (speedup, ratio, k*).
                 no GPU here — v5e is the target)             (paper Tab. 1)
   engine_e2e    end-to-end reduced-model decode: RSR serve
                 vs dense serve through the Engine            (paper §5.3)
+  serve_bench   the serve-path perf trajectory: per-linear
+                latency (dense vs scatter vs Pallas vs
+                Pallas+packed) at true model layer shapes,
+                engine decode tokens/s per backend, and the
+                packed-code bits/weight budget — written to
+                BENCH_serve.json (tracked per PR)
 """
 from __future__ import annotations
 
@@ -227,11 +233,161 @@ def engine_e2e():
     emit("engine_e2e_rsr", t1, f"dense_us={t2:.0f};outputs_equal=True")
 
 
+def serve_bench(json_path: str = "BENCH_serve.json", smoke: bool = False):
+    """Serve-path trajectory benchmark -> BENCH_serve.json.
+
+    Two model configs; per quantized linear: dense-dequant matmul vs RSR
+    scatter vs Pallas kernel vs Pallas + packed-code streaming, at the decode
+    (batch=1) and small-prefill (batch=8) regimes; end-to-end Engine decode
+    tokens/s per backend.  On CPU the Pallas rows run the interpreter — a
+    functional trajectory number, not TPU perf (the roofline projection for
+    TPU is table1_tpu); on a TPU runtime the same harness measures the
+    compiled kernel unchanged.  --smoke shrinks shapes/reps for CI.
+    """
+    import dataclasses
+    import json
+    import jax
+    import jax.numpy as jnp
+    from repro.config import ServeConfig, get_config
+    from repro.core import (pack_code_words, preprocess_ternary_direct,
+                            random_ternary)
+    from repro.core.preprocess import code_traffic_bits_per_weight
+    from repro.kernels.dispatch import rsr_serve_matmul, select_backend
+    from repro.models import transformer as tfm
+    from repro.serve.engine import Engine
+
+    reps = 2 if smoke else 5
+    result = {
+        "meta": {
+            "schema": "bench_serve_v1",
+            "host_backend": jax.default_backend(),
+            "resolved_rsr_backend": select_backend(),
+            "smoke": smoke,
+            "rsr_k": 5,
+            "code_bits_per_weight_packed": code_traffic_bits_per_weight(5),
+            "code_bits_per_weight_budget": 2.0,
+            "note": ("pallas rows on CPU run the Pallas interpreter "
+                     "(functional serve-path trajectory, not TPU perf; "
+                     "table1_tpu holds the TPU roofline projection)"),
+        },
+        "models": {},
+    }
+
+    def time_linear(n, m, batch):
+        a = random_ternary(jax.random.PRNGKey(n + m), (n, m))
+        idx = preprocess_ternary_direct(a, 5)
+        packed = pack_code_words(idx.codes)
+        x = jax.random.normal(jax.random.PRNGKey(1), (batch, n))
+        w_dense = a.astype(jnp.bfloat16)
+        # every variant jitted end-to-end (all rows measure compiled
+        # steady-state latency, not eager padding/dispatch overhead) with
+        # the backend pinned per row — labels stay honest even with
+        # REPRO_RSR_BACKEND set in the environment
+        kb = "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
+        variants = {
+            "dense": jax.jit(lambda v, c, p: v.astype(jnp.bfloat16)
+                             @ w_dense),
+            "scatter": jax.jit(lambda v, c, p: rsr_serve_matmul(
+                v, c, k=5, n_out=m, backend="scatter")),
+            "pallas": jax.jit(lambda v, c, p: rsr_serve_matmul(
+                v, c, k=5, n_out=m, backend=kb)),
+            "pallas_packed": jax.jit(lambda v, c, p: rsr_serve_matmul(
+                v, c, k=5, packed=p, n_out=m, backend=kb)),
+        }
+        row = {"shape": [n, m], "batch": batch}
+        for vname, fn in variants.items():
+            fn(x, idx.codes, packed)[0].block_until_ready()  # compile
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                fn(x, idx.codes, packed).block_until_ready()
+            row[f"{vname}_us"] = (time.perf_counter() - t0) / reps * 1e6
+        return row
+
+    for name in ("falcon3-3b-1.58bit", "gemma-2b"):
+        cfg_full = get_config(name)
+        d, ff = cfg_full.d_model, cfg_full.d_ff
+        if smoke:
+            d, ff = 256, 512
+        shapes = [(d, d), (d, ff), (ff, d)]
+        per_linear = [time_linear(n, m, b)
+                      for (n, m) in shapes for b in ((1,) if smoke
+                                                     else (1, 8))]
+        for row in per_linear:
+            emit(f"serve_linear_{name}_n{row['shape'][0]}m{row['shape'][1]}"
+                 f"b{row['batch']}", row["pallas_packed_us"],
+                 f"dense_us={row['dense_us']:.0f};"
+                 f"scatter_us={row['scatter_us']:.0f};"
+                 f"pallas_us={row['pallas_us']:.0f}")
+
+        # end-to-end engine decode at reduced scale (CPU-tractable)
+        cfg = dataclasses.replace(cfg_full.reduced(), vocab_size=256,
+                                  num_layers=2)
+        params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+        serve_rsr = tfm.serve_params(params, cfg)
+        serve_dense = tfm.serve_params(
+            params, dataclasses.replace(cfg, rsr_serve=False))
+        scfg = ServeConfig(max_seq_len=64, batch_size=2)
+        prompts = jnp.ones((2, 8), jnp.int32)
+        engine_rows = {}
+        outs = {}
+        # the engine rows pin backends via cfg.rsr_backend; the operator env
+        # var outranks that (dispatch resolution order), so clear it for the
+        # duration or a set REPRO_RSR_BACKEND would silently measure one
+        # backend under all three labels
+        import os
+        env_backend = os.environ.pop("REPRO_RSR_BACKEND", None)
+        try:
+            for label, tree, backend in (
+                    ("dense", serve_dense, "auto"),
+                    ("rsr_scatter", serve_rsr, "scatter"),
+                    ("rsr_pallas", serve_rsr, "auto")):
+                e = Engine(dataclasses.replace(cfg, rsr_backend=backend),
+                           tree, scfg)
+                outs[label] = e.generate(prompts, 8)        # compile + check
+                engine_rows[label] = e.decode_throughput(
+                    steps=4 if smoke else 16)
+        finally:
+            if env_backend is not None:
+                os.environ["REPRO_RSR_BACKEND"] = env_backend
+        equal = bool(np.array_equal(outs["dense"], outs["rsr_pallas"]) and
+                     np.array_equal(outs["dense"], outs["rsr_scatter"]))
+        result["models"][name] = {
+            "per_linear": per_linear,
+            "engine_decode": {
+                "batch": scfg.batch_size,
+                "reduced_dims": {"d_model": cfg.d_model, "d_ff": cfg.d_ff,
+                                 "num_layers": cfg.num_layers},
+                "outputs_equal_across_backends": equal,
+                **{f"{k}_tokens_per_s": round(v["tokens_per_s"], 2)
+                   for k, v in engine_rows.items()},
+                **{f"{k}_us_per_step": round(v["us_per_step"], 1)
+                   for k, v in engine_rows.items()},
+            },
+        }
+        emit(f"serve_engine_{name}",
+             engine_rows["rsr_pallas"]["us_per_step"],
+             f"tokens_per_s={engine_rows['rsr_pallas']['tokens_per_s']:.1f};"
+             f"dense_tokens_per_s="
+             f"{engine_rows['dense']['tokens_per_s']:.1f};"
+             f"outputs_equal={equal}")
+        assert equal, "serve backends must decode identical tokens"
+
+    assert result["meta"]["code_bits_per_weight_packed"] <= 2.0
+    with open(json_path, "w") as f:
+        json.dump(result, f, indent=1, sort_keys=True)
+    print(f"wrote {json_path}", flush=True)
+    return result
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--large", action="store_true",
                     help="paper-scale n (2^11..2^15); slow on 1 core")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: small shapes / few reps for serve_bench")
+    ap.add_argument("--json", default="BENCH_serve.json",
+                    help="serve_bench output path")
     args = ap.parse_args()
     ns = [2 ** e for e in ((11, 12, 13, 14, 15) if args.large
                            else (9, 10, 11, 12))]
@@ -245,6 +401,7 @@ def main() -> None:
         "fig6": fig6_llm,
         "table1": table1_tpu,
         "engine": engine_e2e,
+        "serve": lambda: serve_bench(args.json, smoke=args.smoke),
     }
     for name, fn in tables.items():
         if args.only and args.only not in name:

@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 suite + serve-path smoke benchmark.
+#
+#   scripts/ci.sh            # full tier-1 + smoke bench
+#   scripts/ci.sh --fast     # tier-1 only
+#
+# The smoke benchmark exercises the real serve path (dispatch -> Pallas
+# kernel, interpret mode on CPU) at small shapes and asserts backend
+# equality; the committed BENCH_serve.json is produced by the full run
+# (`python benchmarks/run.py --only serve`) and tracked per PR.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+if [[ "${1:-}" != "--fast" ]]; then
+    echo "== serve smoke benchmark =="
+    PYTHONPATH="src:." python benchmarks/run.py --only serve --smoke \
+        --json /tmp/BENCH_serve_smoke.json
+fi
+
+echo "CI OK"

@@ -74,6 +74,8 @@ class ModelConfig:
     quant: str = "ternary"            # none | ternary (QAT train, RSR serve)
     rsr_k: int = 5                    # ternary-direct block width at serve
     rsr_serve: bool = True            # serve linears via RSR indices
+    rsr_backend: str = "auto"         # auto | pallas | pallas_interpret |
+                                      # scatter (kernels.dispatch resolution)
     quant_head: bool = False          # keep embed/lm_head full precision
 
     # --- misc ---

@@ -3,10 +3,13 @@ from repro.core.api import default_k, preprocess, rsr_matmul, RSR_TPU_K
 from repro.core.binlib import bin_matrix, tern_matrix, binary_row_codes, \
     ternary_row_codes
 from repro.core.preprocess import (BinaryRSRIndex, TernaryDirectIndex,
-                                   TernaryRSRIndex, index_nbytes,
+                                   TernaryRSRIndex,
+                                   code_traffic_bits_per_weight, index_nbytes,
                                    optimal_k_rsr, optimal_k_rsrpp,
-                                   preprocess_binary, preprocess_ternary,
-                                   preprocess_ternary_direct)
+                                   pack_code_words, preprocess_binary,
+                                   preprocess_ternary,
+                                   preprocess_ternary_direct,
+                                   unpack_code_words)
 from repro.core.rsr import (rsr_matmul_binary, rsr_matmul_ternary,
                             rsr_matmul_ternary_direct, segmented_sum,
                             segmented_sum_onehot, segmented_sum_scatter)

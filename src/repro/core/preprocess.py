@@ -39,6 +39,7 @@ __all__ = [
     "BinaryRSRIndex", "TernaryRSRIndex", "TernaryDirectIndex",
     "preprocess_binary", "preprocess_ternary", "preprocess_ternary_direct",
     "optimal_k_rsr", "optimal_k_rsrpp", "index_nbytes", "pad_columns",
+    "pack_code_words", "unpack_code_words", "code_traffic_bits_per_weight",
 ]
 
 
@@ -177,6 +178,64 @@ def preprocess_ternary_direct(a: jax.Array, k: int) -> TernaryDirectIndex:
     perm, seg = _segments_from_codes(codes, 3 ** k, n)
     codes = codes.astype(binlib.code_dtype(3 ** k))
     return TernaryDirectIndex(codes=codes, perm=perm, seg=seg, k=k, n=n, m=m)
+
+
+# ---------------------------------------------------------------------------
+# Packed-code streaming (serve-path HBM layout)
+# ---------------------------------------------------------------------------
+#
+# The per-row code arrays are uint8/uint16, but narrow integer arrays are a
+# poor HBM streaming format on TPU: Mosaic widens sub-32-bit lanes (and int8
+# sublane tiling pads to 32 rows), so an unpacked uint8 code stream costs
+# ≥8 bits per code word of traffic and often 32.  Packing 4 uint8 (or 2
+# uint16) codes per uint32 word along the contraction axis makes the streamed
+# bits exactly 8·itemsize per code = 8·itemsize/k bits per weight — 1.6
+# bits/weight at the serve default k=5 — and the kernel unpacks in-register
+# (shift+mask, VPU) right before building the one-hot.  Packing happens here,
+# once, offline, like the rest of Algorithm 1.
+
+def pack_code_words(codes: jax.Array) -> jax.Array:
+    """(nb, n) uint8/uint16 codes -> (nb, ceil(n/per)) uint32 words.
+
+    per = 4 // itemsize codes per word, little-endian within the word (code j
+    of a word occupies bits [j·8·itemsize, (j+1)·8·itemsize)).  The trailing
+    partial word is zero-padded — safe because every consumer zero-pads the
+    matching activation rows, so the padded codes' buckets accumulate 0.
+    """
+    itemsize = jnp.dtype(codes.dtype).itemsize
+    assert itemsize in (1, 2), codes.dtype
+    per = 4 // itemsize
+    nb, n = codes.shape
+    pad = (-n) % per
+    c = jnp.pad(codes, ((0, 0), (0, pad))).astype(jnp.uint32)
+    c = c.reshape(nb, -1, per)
+    shifts = (jnp.arange(per, dtype=jnp.uint32) * (8 * itemsize))[None, None]
+    # disjoint bitfields: sum == bitwise-or
+    return jnp.sum(c << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_code_words(words: jax.Array, n: int, code_bits: int) -> jax.Array:
+    """Inverse of pack_code_words (host-side oracle; the kernel's in-register
+    unpack is the same shift+mask)."""
+    per = 32 // code_bits
+    mask = jnp.uint32((1 << code_bits) - 1)
+    shifts = (jnp.arange(per, dtype=jnp.uint32) * code_bits)[None, None]
+    codes = (words[:, :, None] >> shifts) & mask
+    return codes.reshape(words.shape[0], -1)[:, :n]
+
+
+def code_traffic_bits_per_weight(k: int, *, code_itemsize: int = 1,
+                                 packed: bool = True,
+                                 num_arrays: int = 1) -> float:
+    """Weight-side HBM bits per represented weight for the one-hot kernel.
+
+    packed: 8·itemsize bits per code (the uint32 words carry no padding
+    beyond the trailing partial word); unpacked: 32 bits per code (Mosaic
+    i32 lane widening, the pessimistic honest number).  A code covers k
+    weights; ternary-fused streams num_arrays=2 code arrays.
+    """
+    bits_per_code = 8 * code_itemsize if packed else 32
+    return num_arrays * bits_per_code / k
 
 
 # ---------------------------------------------------------------------------

@@ -1,6 +1,14 @@
 """Pallas TPU kernels for the perf-critical compute: RSR one-hot matmul (the
 paper's technique) and the dense 2-bit dequant baseline.  Validated against
-ref.py oracles in interpret mode; TPU is the target hardware."""
+ref.py oracles in interpret mode; TPU is the target hardware.
+
+Layering: ``rsr_onehot`` is the raw kernel (strict tiles, packed-code
+streaming, fused epilogue); ``ops`` wraps it with padding + index-pytree
+dispatch for research use; ``dispatch`` is the serve hot path — backend
+selection (pallas / pallas_interpret / scatter), the tile autotune table,
+and the params-dict contract the model serve graph speaks."""
+from repro.kernels.dispatch import (rsr_serve_linear, rsr_serve_matmul,
+                                    select_backend, select_tiles)
 from repro.kernels.ops import rsr_matmul_kernel, ternary_matmul_kernel
 from repro.kernels.rsr_onehot import rsr_onehot_matmul
 from repro.kernels.ternary_dequant import ternary_dequant_matmul

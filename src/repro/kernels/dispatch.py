@@ -1,0 +1,261 @@
+"""Backend dispatch for quantized serve linears — the RSR hot path.
+
+Every quantized linear in the serve graph (`repro.models.modules
+.rsr_linear_apply`, the MoE expert banks, and the Engine's decode step) routes
+through :func:`rsr_serve_linear` here.  The dispatcher owns three decisions
+the call sites used to hardcode:
+
+1. **Backend selection** (:func:`select_backend`):
+
+   * ``pallas``           — compiled Pallas kernel; TPU runtime.
+   * ``pallas_interpret`` — the same kernel through the Pallas interpreter
+     (lowers to plain HLO); exact same dataflow, runs anywhere.  This is the
+     CPU default so every test and container run exercises the production
+     kernel path.
+   * ``scatter``          — pure-JAX vmapped bucket scatter-add fallback
+     (the strongest XLA-only contraction per EXPERIMENTS.md SS Perf); used
+     when the Pallas interpreter is unavailable or explicitly requested.
+
+   Resolution order: explicit argument > ``REPRO_RSR_BACKEND`` env var >
+   ``cfg.rsr_backend`` > auto (``pallas`` iff ``jax.default_backend() ==
+   "tpu"``, else ``pallas_interpret``).
+
+2. **Tile selection** (:func:`select_tiles`): a small static autotune table
+   keyed by the flattened batch-row regime.  The decode regime (B ≤ 8, the
+   LLM serving hot path and the paper's 5.24× vector-matrix target) takes the
+   minimum fp32 batch tile and a deep contraction tile so the code stream —
+   not the activation stream — dominates HBM traffic; prefill regimes widen
+   the batch tile to amortize the one-hot build across MXU rows.
+   ``autotune()`` measures the candidates and can refresh the table offline.
+
+3. **Epilogue fusion**: scale (absmean γ), bias, and output dtype are handed
+   to the kernel's final-step projection, so a serve linear is one kernel
+   launch plus a zero-copy n_out column slice.  The scatter fallback applies
+   the same epilogue in jnp.
+
+Serve params contract (produced by ``serve_linear_params``):
+
+    {"codes":  (nb, n) uint8/uint16      — per-row base-3 pattern values,
+     "packed": (nb, ceil(n/per)) uint32  — pack_code_words(codes); the ONLY
+                                           weight-side array the Pallas path
+                                           streams (≤ 8·itemsize/k ≈ 1.6
+                                           bits/weight at k=5),
+     "scale":  ()                        — absmean dequant γ,
+     "n_out":  (n_out, 0) marker        — static true output width (shape-
+                                           encoded: zero-size, jit/vmap-safe),
+     "b":      (n_out,) optional        — bias}
+"""
+from __future__ import annotations
+
+import functools
+import os
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binlib
+from repro.kernels.ops import _pad_to
+from repro.kernels.rsr_onehot import default_interpret, rsr_onehot_matmul
+
+__all__ = ["BACKENDS", "select_backend", "select_tiles", "rsr_serve_linear",
+           "rsr_serve_matmul", "autotune", "AUTOTUNE_TABLE"]
+
+BACKENDS = ("pallas", "pallas_interpret", "scatter")
+
+_ENV_VAR = "REPRO_RSR_BACKEND"
+
+
+def select_backend(requested: Optional[str] = None,
+                   cfg_default: Optional[str] = None) -> str:
+    """Resolve a backend name: explicit arg > $REPRO_RSR_BACKEND >
+    cfg.rsr_backend (``cfg_default``) > hardware auto — the env var is the
+    operator's override of a model config's pinned backend."""
+    for cand in (requested, os.environ.get(_ENV_VAR), cfg_default):
+        if cand and cand != "auto":
+            if cand not in BACKENDS:
+                raise ValueError(f"backend {cand!r} not in {BACKENDS}")
+            return cand
+    return "pallas" if not default_interpret() else "pallas_interpret"
+
+
+# ---------------------------------------------------------------------------
+# Tile autotune table
+# ---------------------------------------------------------------------------
+
+# regime rows: (name, max flattened batch rows, tile_b, tile_blk, tile_n).
+# Measured in interpret/roofline terms (BENCH_serve.json tracks the real
+# numbers per PR): decode wants the deepest n tile the VMEM budget allows so
+# each streamed code word amortizes over one batch row; prefill wants wide
+# batch tiles so the per-tile one-hot build amortizes over many rows.
+AUTOTUNE_TABLE = (
+    ("decode",  8,    8,   8, 512),
+    ("small",   64,   32,  8, 256),
+    ("prefill", None, 128, 8, 256),
+)
+
+
+def _round_up(v: int, mult: int) -> int:
+    return -(-v // mult) * mult
+
+
+def select_tiles(b: int, nb: int, n: int) -> tuple[int, int, int]:
+    """(tile_b, tile_blk, tile_n) for a (B rows, nb blocks, n contraction)
+    problem, from AUTOTUNE_TABLE with shape clamping (tiles never exceed the
+    padded problem: no wasted VMEM on reduced/smoke models)."""
+    for _, max_b, tile_b, tile_blk, tile_n in AUTOTUNE_TABLE:
+        if max_b is None or b <= max_b:
+            break
+    tile_b = min(tile_b, _round_up(b, 8))
+    tile_blk = min(tile_blk, _round_up(nb, 8))
+    tile_n = min(tile_n, _round_up(n, 128))
+    return tile_b, tile_blk, tile_n
+
+
+# ---------------------------------------------------------------------------
+# Implementations
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _scatter_matmul(xb: jax.Array, codes: jax.Array, k: int) -> jax.Array:
+    """Pure-JAX fallback: bucket scatter-add (the core oracle) + Tern_[k]
+    product.  (B, n) × (nb, n) codes -> (B, nb·k) fp32.  The scatter updates
+    tensor is the irreducible HLO cost of the segmented sum (EXPERIMENTS.md
+    SS Perf: the (σ, L) prefix-sum form measured ~20× worse under XLA, the
+    chunked one-hot form ~2× worse).
+    """
+    from repro.core.rsr import segmented_sum_scatter
+    u = segmented_sum_scatter(xb, codes, 3 ** k)  # (B, nb, P)
+    y = jnp.einsum("bcp,pk->bck", u, binlib.tern_matrix(k, jnp.float32))
+    return y.reshape(xb.shape[0], -1)
+
+
+def rsr_serve_matmul(xb: jax.Array, codes: jax.Array, *, k: int,
+                     packed: Optional[jax.Array] = None,
+                     scale: Optional[jax.Array] = None,
+                     bias: Optional[jax.Array] = None,
+                     n_out: Optional[int] = None,
+                     backend: Optional[str] = None,
+                     tiles: Optional[tuple[int, int, int]] = None
+                     ) -> jax.Array:
+    """(B, n) activations × ternary-direct code arrays -> (B, n_out) fp32.
+
+    The serve-graph contraction: backend-dispatched, fused epilogue.  `codes`
+    is always required (scatter fallback + n/nb shape source); the Pallas
+    path streams only `packed` when given.
+    """
+    b, n = xb.shape
+    nb, n_c = codes.shape
+    assert n_c == n, (n_c, n)
+    n_out = nb * k if n_out is None else n_out
+    backend = select_backend(backend)
+    xb = xb.astype(jnp.float32)
+
+    if backend == "scatter":
+        y = _scatter_matmul(xb, codes, k)
+        if scale is not None:
+            y = y * scale
+        y = y[:, :n_out]
+        if bias is not None:
+            y = y + bias
+        return y
+
+    tile_b, tile_blk, tile_n = tiles or select_tiles(b, nb, n)
+    x_p = _pad_to(_pad_to(xb, 0, tile_b), 1, tile_n)
+    pattern = binlib.tern_matrix(k)
+    nb_pad = _round_up(nb, tile_blk)
+    bias_full = None
+    if bias is not None:
+        bias_full = jnp.zeros((nb_pad * k,), jnp.float32).at[:n_out].set(bias)
+    if packed is not None:
+        per = 4 // jnp.dtype(codes.dtype).itemsize
+        words = _pad_to(_pad_to(packed, 0, tile_blk), 1, tile_n // per)
+        y = rsr_onehot_matmul(
+            x_p, words, pattern, scale=scale, bias=bias_full,
+            tile_b=tile_b, tile_blk=tile_blk, tile_n=tile_n,
+            packed=True, code_bits=8 * jnp.dtype(codes.dtype).itemsize,
+            interpret=(backend == "pallas_interpret"))
+    else:
+        c_p = _pad_to(_pad_to(codes, 0, tile_blk), 1, tile_n)
+        y = rsr_onehot_matmul(
+            x_p, c_p, pattern, scale=scale, bias=bias_full,
+            tile_b=tile_b, tile_blk=tile_blk, tile_n=tile_n,
+            interpret=(backend == "pallas_interpret"))
+    return y[:b, :n_out]
+
+
+def resolve_n_out(p: dict, k: int, nb: int,
+                  n_out: Optional[int] = None) -> int:
+    """True output width of a serve linear: explicit arg > the shape-encoded
+    ``n_out`` marker > bias width > padded nb·k (last resort; wrong whenever
+    n_out % k != 0 — the bug the marker exists to fix)."""
+    if n_out is not None:
+        return n_out
+    if "n_out" in p:
+        return p["n_out"].shape[-2]
+    if "b" in p:
+        return p["b"].shape[-1]
+    return nb * k
+
+
+def rsr_serve_linear(p: dict, x: jax.Array, *, cfg,
+                     n_out: Optional[int] = None,
+                     backend: Optional[str] = None) -> jax.Array:
+    """Serve-params dict × (..., n) activations -> (..., n_out) in x.dtype.
+
+    The single entry point every quantized serve linear routes through
+    (see module docstring for the params contract and backend semantics).
+    """
+    codes = p["codes"]
+    nb, n = codes.shape
+    k = cfg.rsr_k
+    n_out = resolve_n_out(p, k, nb, n_out)
+    lead = x.shape[:-1]
+    xb = x.reshape(-1, n)
+    y = rsr_serve_matmul(
+        xb, codes, k=k, packed=p.get("packed"),
+        scale=p.get("scale"), bias=p.get("b"), n_out=n_out,
+        backend=select_backend(backend,
+                               getattr(cfg, "rsr_backend", None)))
+    return y.reshape(*lead, n_out).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Offline autotune (refreshes AUTOTUNE_TABLE candidates with measurements)
+# ---------------------------------------------------------------------------
+
+def autotune(b: int, n: int, n_out: int, *, k: int = 5,
+             candidates=((8, 8, 256), (8, 8, 512), (32, 8, 256),
+                         (128, 8, 256)),
+             backend: Optional[str] = None, reps: int = 3) -> dict:
+    """Measure tile candidates for one (B, n, n_out) linear; returns
+    {tiles: best, us: best_us, rows: [(tiles, us), ...]}.  Offline tool —
+    the serve path reads the static table, this refreshes it per hardware."""
+    from repro.core import preprocess_ternary_direct, random_ternary
+    from repro.core.preprocess import pack_code_words
+    a = random_ternary(jax.random.PRNGKey(0), (n, n_out))
+    idx = preprocess_ternary_direct(a, k)
+    packed = pack_code_words(idx.codes)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, n))
+    nb = idx.codes.shape[0]
+    rows = []
+    seen = set()
+    for tb, tblk, tn in candidates:
+        # clamp (select_tiles-style) rather than skip, so small problems
+        # still get a non-empty candidate set; dedupe post-clamp
+        tiles = (min(tb, _round_up(b, 8)), min(tblk, _round_up(nb, 8)),
+                 min(tn, _round_up(n, 128)))
+        if tiles in seen:
+            continue
+        seen.add(tiles)
+        fn = lambda: rsr_serve_matmul(x, idx.codes, k=k, packed=packed,
+                                      n_out=n_out, backend=backend,
+                                      tiles=tiles)
+        fn().block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            fn().block_until_ready()
+        rows.append((tiles, (time.perf_counter() - t0) / reps * 1e6))
+    rows.sort(key=lambda r: r[1])
+    return {"tiles": rows[0][0], "us": rows[0][1], "rows": rows}

@@ -1,9 +1,15 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Jit'd public wrappers around the Pallas kernels (index-pytree interface).
 
 Handles shape padding to tile multiples (safe: activation rows pad with zeros,
 extra column blocks are sliced off the output), index-type dispatch, and the
-scale application of quantized linears.  ``interpret=True`` everywhere in this
-container (CPU); on a real TPU runtime the flag flips to False unchanged.
+scale application of quantized linears.  ``interpret=None`` auto-resolves:
+Pallas-compiled on a TPU runtime, interpreter (HLO simulation) elsewhere —
+no call-site flag flipping.
+
+This module keeps the research-facing interface (full RSR index pytrees, all
+three ternary modes).  The serve graph's params-dict hot path lives in
+:mod:`repro.kernels.dispatch`, which adds backend fallback, packed-code
+streaming, and the fused epilogue on top of the same kernel.
 """
 from __future__ import annotations
 
@@ -36,8 +42,11 @@ def rsr_matmul_kernel(v: jax.Array, idx: AnyIndex, *,
                       scale: Optional[jax.Array] = None,
                       fused_ternary: bool = True,
                       tile_b: int = 8, tile_blk: int = 8, tile_n: int = 256,
-                      interpret: bool = True) -> jax.Array:
-    """v (..., n) × indexed matrix -> (..., m) through the Pallas kernel."""
+                      interpret: Optional[bool] = None) -> jax.Array:
+    """v (..., n) × indexed matrix -> (..., m) through the Pallas kernel.
+
+    ``scale`` fuses into the kernel epilogue (single-pass modes); the Prop 2.1
+    two-pass mode applies it after the pos−neg combine."""
     lead = v.shape[:-1]
     n = v.shape[-1]
     x = v.reshape(-1, n)
@@ -71,18 +80,17 @@ def rsr_matmul_kernel(v: jax.Array, idx: AnyIndex, *,
     if neg_codes is not None:
         neg_codes = _pad_to(_pad_to(neg_codes, 0, tile_blk), 1, tile_n)
 
-    y = rsr_onehot_matmul(x, codes, pattern, neg_codes,
+    y = rsr_onehot_matmul(x, codes, pattern, neg_codes, scale=scale,
                           tile_b=tile_b, tile_blk=tile_blk, tile_n=tile_n,
                           interpret=interpret)
-    y = y[:b, :m].reshape(*lead, m)
-    return y * scale if scale is not None else y
+    return y[:b, :m].reshape(*lead, m)
 
 
 def ternary_matmul_kernel(v: jax.Array, packed: jax.Array, m: int, *,
                           scale: Optional[jax.Array] = None,
                           tile_b: int = 8, tile_m: int = 128,
                           tile_n: int = 256,
-                          interpret: bool = True) -> jax.Array:
+                          interpret: Optional[bool] = None) -> jax.Array:
     """Dense baseline: v (..., n) × unpack2bit(packed) -> (..., m)."""
     lead = v.shape[:-1]
     n = v.shape[-1]

@@ -17,6 +17,25 @@ kernel body serves three modes (chosen by what the wrapper feeds it):
   * ternary direct    : one base-3 code array, pattern = Tern_[k] (P = 3^k)
                         — beyond-paper, 1.6 bits/weight traffic.
 
+Packed-code streaming
+---------------------
+With ``packed=True`` the codes operand is the **word-packed** form produced by
+:func:`repro.core.preprocess.pack_code_words`: 4 uint8 codes (or 2 uint16
+codes) per uint32 word along the contraction (n) axis.  The kernel unpacks the
+words in-register with shifts/masks, so the HBM weight-side stream is exactly
+``32 / (codes_per_word · k)`` bits per weight — 8/k = 1.6 bits/weight at the
+serve default k=5 — instead of the ≥8 bits/weight an unpacked uint8 (padded to
+int8 sublane tiling, or widened to i32 lanes by Mosaic) code array costs.
+
+Fused epilogue
+--------------
+``scale`` (the absmean dequant γ) and ``bias`` fold into the final-step
+projection, so a quantized serve linear is ONE kernel launch: the projection
+through ``pattern`` produces the (TB, TBLK·k) output tile already scaled and
+biased, and the only work left outside is the static n_out column slice (the
+output shape of a pallas_call is fixed per-grid-cell, so the slice cannot move
+inside; it is a zero-copy XLA slice).
+
 Grid: (batch tiles, block tiles, n tiles); the contraction (n) axis is the
 innermost, accumulated in a VMEM scratch ``u`` of shape (TBLK, TB, P) and
 projected through ``pattern`` on the final n step.
@@ -24,6 +43,8 @@ projected through ``pattern`` on the final n step.
 Tiling notes (v5e): TN multiple of 128 feeds the MXU contraction dim aligned;
 P ≤ 256 keeps each one-hot (TN, P) tile ≤ 128 KB fp32 in VMEM; the unrolled
 python loop over TBLK blocks keeps per-iteration VMEM at one one-hot tile.
+Tile selection is owned by the autotune table in
+:mod:`repro.kernels.dispatch`, not hardcoded call sites.
 """
 from __future__ import annotations
 
@@ -35,11 +56,34 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["rsr_onehot_matmul"]
+__all__ = ["rsr_onehot_matmul", "default_interpret"]
+
+# jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x releases.
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
 
 
-def _kernel(x_ref, codes_ref, neg_ref, pat_ref, out_ref, u_ref, *,
-            n_steps: int, signed: bool):
+def default_interpret() -> bool:
+    """Pallas-compiled on TPU; interpret (HLO simulation) everywhere else."""
+    return jax.default_backend() != "tpu"
+
+
+def _unpack_words(words: jax.Array, code_bits: int) -> jax.Array:
+    """(TBLK, TNW) uint32 words -> (TBLK, TNW * codes_per_word) int32 codes.
+
+    Little-endian within the word, matching pack_code_words: code j of a word
+    lives at bits [j*code_bits, (j+1)*code_bits).
+    """
+    per = 32 // code_bits
+    mask = jnp.uint32((1 << code_bits) - 1)
+    shifts = (jnp.arange(per, dtype=jnp.uint32) * code_bits)[None, None, :]
+    codes = (words.astype(jnp.uint32)[:, :, None] >> shifts) & mask
+    return codes.reshape(words.shape[0], -1).astype(jnp.int32)
+
+
+def _kernel(x_ref, codes_ref, neg_ref, pat_ref, scale_ref, bias_ref, out_ref,
+            u_ref, *, n_steps: int, signed: bool, code_bits: int,
+            packed: bool, fuse_scale: bool, fuse_bias: bool):
     i = pl.program_id(2)
 
     @pl.when(i == 0)
@@ -47,8 +91,12 @@ def _kernel(x_ref, codes_ref, neg_ref, pat_ref, out_ref, u_ref, *,
         u_ref[...] = jnp.zeros_like(u_ref)
 
     x = x_ref[...].astype(jnp.float32)              # (TB, TN)
-    codes = codes_ref[...].astype(jnp.int32)        # (TBLK, TN)
-    neg = neg_ref[...].astype(jnp.int32) if signed else None
+    if packed:                                      # in-register unpack
+        codes = _unpack_words(codes_ref[...], code_bits)        # (TBLK, TN)
+        neg = _unpack_words(neg_ref[...], code_bits) if signed else None
+    else:
+        codes = codes_ref[...].astype(jnp.int32)    # (TBLK, TN)
+        neg = neg_ref[...].astype(jnp.int32) if signed else None
     tblk, tn = codes.shape
     p = u_ref.shape[-1]
     iota = jax.lax.broadcasted_iota(jnp.int32, (tn, p), 1)
@@ -66,58 +114,93 @@ def _kernel(x_ref, codes_ref, neg_ref, pat_ref, out_ref, u_ref, *,
             u, pat, (((2,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)     # (TBLK, TB, k)
         tb = y.shape[1]
-        out_ref[...] = y.transpose(1, 0, 2).reshape(tb, -1).astype(out_ref.dtype)
+        y = y.transpose(1, 0, 2).reshape(tb, -1)    # (TB, TBLK*k)
+        if fuse_scale:                              # epilogue: γ · y + b
+            y = y * scale_ref[0, 0]
+        if fuse_bias:
+            y = y + bias_ref[...]
+        out_ref[...] = y.astype(out_ref.dtype)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("tile_b", "tile_blk", "tile_n", "interpret"))
+    static_argnames=("tile_b", "tile_blk", "tile_n", "interpret",
+                     "code_bits", "packed", "out_dtype"))
 def rsr_onehot_matmul(x: jax.Array,
                       codes: jax.Array,
                       pattern: jax.Array,
                       neg_codes: Optional[jax.Array] = None,
                       *,
+                      scale: Optional[jax.Array] = None,
+                      bias: Optional[jax.Array] = None,
                       tile_b: int = 8,
                       tile_blk: int = 8,
                       tile_n: int = 256,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: Optional[bool] = None,
+                      code_bits: int = 8,
+                      packed: bool = False,
+                      out_dtype=jnp.float32) -> jax.Array:
     """y[..B, nb*k] = x[..B, n] · W  with W given as RSR codes.
 
     x        : (B, n) activations (any float dtype)
-    codes    : (nb, n) integer code array (pattern value per row per block)
+    codes    : (nb, n) integer code array (pattern value per row per block),
+               or with ``packed=True`` the (nb, n / (32 // code_bits)) uint32
+               word-packed form from ``pack_code_words``
     pattern  : (P, k) Bin_[k] / Tern_[k] enumeration matrix
     neg_codes: optional second code array -> signed one-hot (ternary fused)
+    scale    : optional scalar γ fused into the epilogue
+    bias     : optional (nb*k,) fp32 bias (zero-padded past n_out) fused into
+               the epilogue
+    interpret: None -> ``default_interpret()`` (compiled iff on TPU)
 
-    B, nb, n must be multiples of the respective tiles (wrapper in ops.py
-    pads).  Returns (B, nb*k) float32.
+    B, nb, n must be multiples of the respective tiles (wrappers in ops.py /
+    dispatch.py pad).  Returns (B, nb*k) ``out_dtype``.
     """
-    b, n = x.shape
-    nb, n2 = codes.shape
-    assert n == n2, (n, n2)
+    if interpret is None:
+        interpret = default_interpret()
+    b, n_x = x.shape
+    per_word = (32 // code_bits) if packed else 1
+    nb, nw = codes.shape
+    assert nw * per_word == n_x, (nw, per_word, n_x)
     p, k = pattern.shape
-    assert b % tile_b == 0 and nb % tile_blk == 0 and n % tile_n == 0, \
-        (b, nb, n, tile_b, tile_blk, tile_n)
-    n_steps = n // tile_n
+    tile_nw = tile_n // per_word
+    assert b % tile_b == 0 and nb % tile_blk == 0 and n_x % tile_n == 0 \
+        and tile_n % per_word == 0, (b, nb, n_x, tile_b, tile_blk, tile_n)
+    n_steps = n_x // tile_n
     signed = neg_codes is not None
     if not signed:                       # dummy ref, never read
         neg_codes = codes
+    fuse_scale = scale is not None
+    if not fuse_scale:
+        scale = jnp.ones((), jnp.float32)
+    scale = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    fuse_bias = bias is not None
+    if not fuse_bias:                    # dummy ref, never read
+        bias = jnp.zeros((1, tile_blk * k), jnp.float32)
+    else:
+        bias = jnp.asarray(bias, jnp.float32).reshape(1, nb * k)
 
     grid = (b // tile_b, nb // tile_blk, n_steps)
-    kernel = functools.partial(_kernel, n_steps=n_steps, signed=signed)
+    kernel = functools.partial(_kernel, n_steps=n_steps, signed=signed,
+                               code_bits=code_bits, packed=packed,
+                               fuse_scale=fuse_scale, fuse_bias=fuse_bias)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((tile_b, tile_n), lambda bi, ji, ii: (bi, ii)),
-            pl.BlockSpec((tile_blk, tile_n), lambda bi, ji, ii: (ji, ii)),
-            pl.BlockSpec((tile_blk, tile_n), lambda bi, ji, ii: (ji, ii)),
+            pl.BlockSpec((tile_blk, tile_nw), lambda bi, ji, ii: (ji, ii)),
+            pl.BlockSpec((tile_blk, tile_nw), lambda bi, ji, ii: (ji, ii)),
             pl.BlockSpec((p, k), lambda bi, ji, ii: (0, 0)),
+            pl.BlockSpec((1, 1), lambda bi, ji, ii: (0, 0)),
+            pl.BlockSpec((1, tile_blk * k),
+                         lambda bi, ji, ii: (0, ji) if fuse_bias else (0, 0)),
         ],
         out_specs=pl.BlockSpec((tile_b, tile_blk * k),
                                lambda bi, ji, ii: (bi, ji)),
-        out_shape=jax.ShapeDtypeStruct((b, nb * k), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((b, nb * k), out_dtype),
         scratch_shapes=[pltpu.VMEM((tile_blk, tile_b, p), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(x, codes, neg_codes, pattern)
+    )(x, codes, neg_codes, pattern, scale, bias)

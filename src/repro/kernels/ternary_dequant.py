@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.rsr_onehot import _CompilerParams
+
 __all__ = ["ternary_dequant_matmul"]
 
 
@@ -50,8 +52,13 @@ def _kernel(x_ref, packed_ref, out_ref, acc_ref, *, n_steps: int):
 def ternary_dequant_matmul(x: jax.Array, packed: jax.Array, *,
                            tile_b: int = 8, tile_m: int = 128,
                            tile_n: int = 256,
-                           interpret: bool = True) -> jax.Array:
-    """x (B, n) · unpack(packed) -> (B, m) float32.  packed: (n/4, m) uint8."""
+                           interpret: bool = None) -> jax.Array:
+    """x (B, n) · unpack(packed) -> (B, m) float32.  packed: (n/4, m) uint8.
+
+    interpret=None auto-resolves: compiled on TPU, interpreter elsewhere."""
+    if interpret is None:
+        from repro.kernels.rsr_onehot import default_interpret
+        interpret = default_interpret()
     b, n = x.shape
     n4, m = packed.shape
     assert n4 * 4 == n, (n4, n)
@@ -69,7 +76,7 @@ def ternary_dequant_matmul(x: jax.Array, packed: jax.Array, *,
         out_specs=pl.BlockSpec((tile_b, tile_m), lambda bi, mi, ni: (bi, mi)),
         out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
         scratch_shapes=[pltpu.VMEM((tile_b, tile_m), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, packed)

@@ -6,13 +6,18 @@ Quantized linears have two parameterizations:
   * train/QAT:  {'w': (n_in, n_out) [, 'b']} — forward applies BitNet-b1.58
                 straight-through absmean ternary quantization, so checkpoints
                 are RSR-preprocessable after training.
-  * serve/RSR:  {'codes': (nb, n_in) uint8, 'scale': (), [, 'b']} — the
-                paper's index replaces the weight matrix entirely.  Applied
-                via the scatter-form segmented sum (u buckets) + Tern_[k]
-                product: HLO work is O(B·n·m/k) — the paper's complexity —
-                and HBM weight traffic is the code array (1.6 bits/weight at
-                k=5).  The Pallas kernel (repro.kernels.rsr_onehot) is the
-                hardware artifact of the same contraction.
+  * serve/RSR:  {'codes': (nb, n_in) uint8/16, 'packed': (nb, ⌈n_in/per⌉)
+                uint32, 'scale': (), 'n_out': (n_out, 0) marker [, 'b']} —
+                the paper's index replaces the weight matrix entirely.
+                Applied through the backend dispatcher
+                (repro.kernels.dispatch.rsr_serve_linear): the Pallas one-hot
+                kernel streams the word-packed codes (≈1.6 bits/weight at
+                k=5) with scale/bias fused into its epilogue; a pure-JAX
+                bucket-scatter fallback serves non-Pallas contexts.  The
+                ``n_out`` entry is a zero-size shape marker carrying the true
+                output width statically (codes cover ⌈n_out/k⌉·k padded
+                columns, so n_out is NOT recoverable from the code array when
+                n_out % k != 0).
 
 ``serve_params_from_train`` converts a trained pytree; ``abstract`` variants
 produce ShapeDtypeStructs for the dry-run (no allocation).
@@ -27,8 +32,9 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.core import binlib
-from repro.core.preprocess import preprocess_ternary_direct
+from repro.core.preprocess import pack_code_words, preprocess_ternary_direct
 from repro.core.ternary import absmean_quantize, ste_ternary
+from repro.kernels.dispatch import rsr_serve_linear
 
 Param = dict
 
@@ -70,21 +76,32 @@ def rsr_num_blocks(n_out: int, k: int) -> int:
     return -(-n_out // k)
 
 
-def serve_linear_params(p: Param, *, cfg: ModelConfig) -> Param:
-    """Trained {'w'} -> RSR index {'codes','scale'[,'b']} (Algorithm 1).
+def rsr_packed_width(n_in: int, k: int) -> tuple[int, int]:
+    """(words, codes_per_word) of the word-packed code array for a linear."""
+    per = 4 // jnp.dtype(binlib.code_dtype(3 ** k)).itemsize
+    return -(-n_in // per), per
 
-    The serve graph carries the packed base-3 code array (1.6 bits/weight;
-    the Pallas kernel's native input).  The paper's (sigma, L) form is
-    recoverable offline (sigma = argsort(codes), L = cumsum(hist(codes))) and
-    drives the core/benchmark paths; evaluation-strategy measurements for the
-    serve graph are in EXPERIMENTS.md SS Perf iter 5-6: the Eq. 5 prefix-sum
-    lowering costs ~20x more HBM traffic under XLA (log-depth cumsum
-    materialization), so the graph uses the bucket-scatter contraction.
+
+def serve_linear_params(p: Param, *, cfg: ModelConfig) -> Param:
+    """Trained {'w'} -> RSR index {'codes','packed','scale','n_out'[,'b']}
+    (Algorithm 1 + packed-code layout).
+
+    ``codes`` is the per-row base-3 code array (the scatter fallback's input
+    and the σ/L-recoverable canonical form: σ = argsort(codes), L =
+    cumsum(hist(codes))); ``packed`` is pack_code_words(codes) — the ONLY
+    weight-side array the Pallas serve path streams from HBM (≈1.6
+    bits/weight at k=5).  ``n_out`` is a zero-size (n_out, 0) marker whose
+    shape carries the true output width through jit/vmap/scan statically.
+    Evaluation-strategy measurements live in EXPERIMENTS.md SS Perf iter 5-6:
+    the Eq. 5 prefix-sum lowering costs ~20x more HBM traffic under XLA, so
+    the non-kernel fallback uses the bucket-scatter contraction.
     """
     w = p["w"].astype(jnp.float32)
     wt, gamma = absmean_quantize(w)
     idx = preprocess_ternary_direct(wt, cfg.rsr_k)
-    out = {"codes": idx.codes, "scale": gamma}
+    out = {"codes": idx.codes, "packed": pack_code_words(idx.codes),
+           "scale": gamma,
+           "n_out": jnp.zeros((w.shape[1], 0), jnp.uint8)}
     if "b" in p:
         out["b"] = p["b"]
     return out
@@ -93,46 +110,26 @@ def serve_linear_params(p: Param, *, cfg: ModelConfig) -> Param:
 def abstract_serve_linear(n_in: int, n_out: int, *, bias: bool = False,
                           cfg: ModelConfig) -> Param:
     nb = rsr_num_blocks(n_out, cfg.rsr_k)
-    p = {"codes": jax.ShapeDtypeStruct((nb, n_in), jnp.uint8),
-         "scale": jax.ShapeDtypeStruct((), jnp.float32)}
+    nw, _ = rsr_packed_width(n_in, cfg.rsr_k)
+    p = {"codes": jax.ShapeDtypeStruct((nb, n_in),
+                                       binlib.code_dtype(3 ** cfg.rsr_k)),
+         "packed": jax.ShapeDtypeStruct((nb, nw), jnp.uint32),
+         "scale": jax.ShapeDtypeStruct((), jnp.float32),
+         "n_out": jax.ShapeDtypeStruct((n_out, 0), jnp.uint8)}
     if bias:
         p["b"] = jax.ShapeDtypeStruct((n_out,), jnp.float32)
     return p
 
 
-def rsr_linear_apply(p: Param, x: jax.Array, *, cfg: ModelConfig) -> jax.Array:
-    """Serve path: segmented sums via bucket scatter-add + Tern_[k] product.
-
-    The scatter is vmapped over the block axis (an operand batch dim).
-    Evaluation-strategy log (EXPERIMENTS.md SS Perf): the scatter updates
-    tensor is the irreducible HLO-level cost of the segmented sum; the
-    (sigma, L) gather/prefix-sum form measured ~20x worse (cumsum
-    materialization) and the chunked one-hot form ~2x worse (one-hot
-    materialization).  Keeping the buckets VMEM-resident requires the custom
-    kernel (kernels/rsr_onehot.py), which consumes these same code arrays.
-
-    x (..., n_in) -> (..., n_out);  n_out recovered from the bias shape.
-    """
-    codes = p["codes"]                            # (nb, n)
-    nb, n = codes.shape
-    k = cfg.rsr_k
-    num_p = 3 ** k
-    lead = x.shape[:-1]
-    xb = x.reshape(-1, n).astype(jnp.float32)
-    b = xb.shape[0]
-
-    def per_block(codes_b):                       # (n,) -> (b, P)
-        u = jnp.zeros((b, num_p), jnp.float32)
-        return u.at[:, codes_b.astype(jnp.int32)].add(xb)
-
-    u = jax.vmap(per_block)(codes)                # (nb, b, P)
-    y = jnp.einsum("cbp,pk->bck", u, binlib.tern_matrix(k, jnp.float32))
-    y = y.reshape(b, nb * k)
-    n_out = p["b"].shape[0] if "b" in p else nb * k
-    y = y[:, :n_out] * p["scale"]
-    if "b" in p:
-        y = y + p["b"]
-    return y.reshape(*lead, -1).astype(x.dtype)
+def rsr_linear_apply(p: Param, x: jax.Array, *, cfg: ModelConfig,
+                     n_out: Optional[int] = None) -> jax.Array:
+    """Serve path: x (..., n_in) -> (..., n_out) through the backend
+    dispatcher (repro.kernels.dispatch) — Pallas one-hot kernel with
+    packed-code streaming and fused scale/bias epilogue on the kernel
+    backends, vmapped bucket scatter-add on the fallback.  Backend and tile
+    choice are resolved per cfg.rsr_backend / shape (see dispatch module
+    docstring)."""
+    return rsr_serve_linear(p, x, cfg=cfg, n_out=n_out)
 
 
 # ---------------------------------------------------------------------------

@@ -122,13 +122,13 @@ def moe_apply(p: dict, x_in: jax.Array, *, cfg: ModelConfig, lin,
 # --- serve parameterization (RSR codes per expert) --------------------------
 
 def serve_moe_params(p: dict, *, cfg: ModelConfig) -> dict:
-    """Expert banks -> per-expert RSR indices (vmapped Algorithm 1)."""
+    """Expert banks -> per-expert RSR indices (vmapped Algorithm 1).
+
+    Each bank carries the full serve-linear dict (codes + packed kernel
+    stream + scale + n_out marker) stacked over the expert axis."""
     def conv(bank):                                           # (e, n, m)
-        def one(w):
-            sp = nn.serve_linear_params({"w": w}, cfg=cfg)
-            return sp["codes"], sp["scale"]
-        codes, scales = jax.vmap(one)(bank)
-        return {"codes": codes, "scale": scales}
+        return jax.vmap(
+            lambda w: nn.serve_linear_params({"w": w}, cfg=cfg))(bank)
 
     out = {"router": p["router"],
            "wi": conv(p["wi"]), "wg": conv(p["wg"]), "wo": conv(p["wo"])}
@@ -140,15 +140,14 @@ def serve_moe_params(p: dict, *, cfg: ModelConfig) -> dict:
 
 def abstract_serve_moe(cfg: ModelConfig) -> dict:
     e, d, f = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
-    nb_f = nn.rsr_num_blocks(f, cfg.rsr_k)
-    nb_d = nn.rsr_num_blocks(d, cfg.rsr_k)
 
-    def bank(nb, n):
-        return {"codes": jax.ShapeDtypeStruct((e, nb, n), jnp.uint8),
-                "scale": jax.ShapeDtypeStruct((e,), jnp.float32)}
+    def bank(n_in, n_out):
+        one = nn.abstract_serve_linear(n_in, n_out, cfg=cfg)
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((e, *s.shape), s.dtype), one)
 
     out = {"router": {"w": jax.ShapeDtypeStruct((d, e), jnp.float32)},
-           "wi": bank(nb_f, d), "wg": bank(nb_f, d), "wo": bank(nb_d, f)}
+           "wi": bank(d, f), "wg": bank(d, f), "wo": bank(f, d)}
     if cfg.num_shared_experts:
         ff = cfg.moe_d_ff * cfg.num_shared_experts
         out["shared"] = {
@@ -184,20 +183,21 @@ def moe_apply_serve(p: dict, x_in: jax.Array, *, cfg: ModelConfig):
     dispatch = (combine > 0).astype(x.dtype)
     xe = jnp.einsum("gsec,gsd->egcd", dispatch, x)            # (e,g,c,d)
 
-    def expert(idx2, xi, n_out):
-        pp = {"codes": idx2[0], "scale": idx2[1],
-              "b": jnp.zeros((n_out,), jnp.float32)}
-        return nn.rsr_linear_apply(pp, xi, cfg=cfg)
+    def expert(pp, xi, n_out):
+        # pp: one expert's serve dict (codes/packed/scale); explicit n_out
+        # (the stacked n_out marker vmaps fine, but being explicit keeps the
+        # per-expert closure shape-free)
+        return nn.rsr_linear_apply(pp, xi, cfg=cfg, n_out=n_out)
+
+    def bank_slice(bank):
+        return {k: bank[k] for k in ("codes", "packed", "scale")}
 
     f = cfg.moe_d_ff
     xef = xe.reshape(e, -1, d)
-    hi = jax.vmap(lambda cs, xi: expert(cs, xi, f))(
-        (p["wi"]["codes"], p["wi"]["scale"]), xef)
-    hg = jax.vmap(lambda cs, xi: expert(cs, xi, f))(
-        (p["wg"]["codes"], p["wg"]["scale"]), xef)
+    hi = jax.vmap(lambda pp, xi: expert(pp, xi, f))(bank_slice(p["wi"]), xef)
+    hg = jax.vmap(lambda pp, xi: expert(pp, xi, f))(bank_slice(p["wg"]), xef)
     h = nn._act(hi, cfg.act) * hg
-    ye = jax.vmap(lambda cs, xi: expert(cs, xi, d))(
-        (p["wo"]["codes"], p["wo"]["scale"]), h)
+    ye = jax.vmap(lambda pp, xi: expert(pp, xi, d))(bank_slice(p["wo"]), h)
     ye = ye.reshape(e, g, c, d)
     y = jnp.einsum("egcd,gsec->gsd", ye, combine.astype(x.dtype))
     if "shared" in p:

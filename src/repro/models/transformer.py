@@ -365,28 +365,20 @@ def serve_params(params: dict, cfg: ModelConfig) -> dict:
     def conv_linear(p):                           # {'w'[,b]} possibly stacked
         from repro.models.modules import serve_linear_params
 
-        def one(w):
-            sp = serve_linear_params({"w": w}, cfg=cfg)
-            return sp["codes"], sp["scale"]
-        codes, scale = _vmap_leading(lambda w: one(w), p["w"], 2)
-        out = {"codes": codes, "scale": scale}
-        # bias always present: its shape statically encodes the true n_out
-        # (codes cover ceil(n_out/k)*k padded columns)
+        # the vmapped conversion carries the whole serve dict — codes, the
+        # word-packed kernel stream, scale, and the zero-size n_out shape
+        # marker (which must gain the stacked leading dims like every other
+        # leaf so lax.scan over superblocks slices it consistently)
+        out = _vmap_leading(lambda w: serve_linear_params({"w": w}, cfg=cfg),
+                            p["w"], 2)
         if "b" in p:
             out["b"] = p["b"].astype(jnp.float32)
-        else:
-            out["b"] = jnp.zeros(p["w"].shape[:-2] + (p["w"].shape[-1],),
-                                 jnp.float32)
         return out
 
     def conv_bank(bank):                          # raw (..., n, m) expert bank
         from repro.models.modules import serve_linear_params
-
-        def one(w):
-            sp = serve_linear_params({"w": w}, cfg=cfg)
-            return sp["codes"], sp["scale"]
-        codes, scale = _vmap_leading(lambda w: one(w), bank, 2)
-        return {"codes": codes, "scale": scale}
+        return _vmap_leading(
+            lambda w: serve_linear_params({"w": w}, cfg=cfg), bank, 2)
 
     def walk(node, name: str):
         if isinstance(node, dict):

@@ -93,7 +93,11 @@ def collective_matmul(x: jax.Array, w: jax.Array, mesh: Mesh,
         idx = jax.lax.axis_index(axis)
         k_loc = x_loc.shape[-1]
         acc = jnp.zeros((x_loc.shape[0], w_loc.shape[1]), jnp.float32)
-        acc = jax.lax.pvary(acc, (axis,))   # carry varies over the ring axis
+        # carry varies over the ring axis; pvary only exists (and is only
+        # required by shard_map's varying-axes check) on newer jax
+        pvary = getattr(jax.lax, "pvary", None)
+        if pvary is not None:
+            acc = pvary(acc, (axis,))
         chunk = x_loc
 
         def step(i, carry):

@@ -124,13 +124,23 @@ def _dot_flops(line: str, result_text: str, shapes: dict) -> float:
             out_elems *= int(d)
     k = 1
     mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
-    # lhs operand: first %name inside the dot parens (operands are untyped)
-    mo = re.search(r"\bdot\(\s*%([\w.\-]+)", line)
-    if mc and mo and mo.group(1) in shapes:
-        lhs_dims = shapes[mo.group(1)]
-        for ci in (int(x) for x in mc.group(1).split(",") if x):
-            if ci < len(lhs_dims):
-                k *= lhs_dims[ci]
+    # lhs operand: either typed ("dot(f32[128,128]{1,0} %a, ...)" — newer HLO
+    # text) or untyped ("dot(%a, ...)"); prefer the inline shape, fall back
+    # to the %name shape table
+    mo = re.search(r"\bdot\(\s*(?:([a-z0-9]+\[[0-9,]*\])\S*\s+)?%([\w.\-]+)",
+                   line)
+    if mc and mo:
+        lhs_dims = None
+        if mo.group(1):
+            md = _SHAPE_RE.match(mo.group(1))
+            if md:
+                lhs_dims = [int(d) for d in md.group(2).split(",") if d]
+        if lhs_dims is None:
+            lhs_dims = shapes.get(mo.group(2))
+        if lhs_dims:
+            for ci in (int(x) for x in mc.group(1).split(",") if x):
+                if ci < len(lhs_dims):
+                    k *= lhs_dims[ci]
     return 2.0 * out_elems * k
 
 

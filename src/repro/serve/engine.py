@@ -1,18 +1,26 @@
 """Serving engine: RSR-indexed decode with batched request scheduling.
 
-The engine owns the serve-parameterized tree (RSR codes after offline
-``serve_params`` conversion), a pre-allocated KV cache, and a jitted
-single-token ``decode_step``.  Prefill is a jitted lax.scan of decode steps
+The engine owns the serve-parameterized tree (RSR codes + packed kernel
+streams after offline ``serve_params`` conversion), a pre-allocated KV cache,
+and a jitted single-token ``decode_step``.  Every quantized linear inside the
+decode graph routes through the backend dispatcher
+(``repro.kernels.dispatch``): the Pallas one-hot kernel on TPU (interpret
+mode elsewhere), decode-regime tiles from the autotune table (batch ≤ 8 is
+the vector-matrix hot path the paper's 5.24× claim targets), scale/bias fused
+into the kernel epilogue.  Prefill is a jitted lax.scan of decode steps
 (prompt tokens are forced, logits discarded) — simple, exact, and cache-
 filling; the large-batch prefill path for throughput serving is the plain
 ``forward`` (used by the dry-run prefill shapes).
 
 ``BatchScheduler`` packs incoming requests into fixed batch slots with
 per-slot position tracking — a minimal continuous-batching loop.
+``Engine.decode_throughput`` measures steady-state decode tokens/s through
+the jitted step — the headline number BENCH_serve.json tracks per PR.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Optional
 
 import jax
@@ -68,6 +76,26 @@ class Engine:
             key, sub = jax.random.split(key)
             tok = self.sample(logits, sub)
         return np.stack(out, axis=1)
+
+    def decode_throughput(self, steps: int = 16, warmup: int = 2) -> dict:
+        """Steady-state decode perf of the jitted step (compile excluded).
+
+        Returns {"tokens_per_s", "us_per_step", "batch", "steps"};
+        tokens/s counts all batch slots (batch · steps / wall time).
+        """
+        tok = jnp.ones((self.batch, 1), jnp.int32)
+        cache = self.cache
+        for _ in range(max(1, warmup)):     # ≥1: compile must stay untimed
+            logits, cache = self._decode(self.params, cache, tok)
+        logits.block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            logits, cache = self._decode(self.params, cache, tok)
+        logits.block_until_ready()
+        dt = time.perf_counter() - t0
+        return {"tokens_per_s": self.batch * steps / dt,
+                "us_per_step": dt / steps * 1e6,
+                "batch": self.batch, "steps": steps}
 
 
 @dataclasses.dataclass

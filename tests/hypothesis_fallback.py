@@ -1,0 +1,88 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The property tests only use ``@given`` with ``st.sampled_from`` strategies
+plus ``@settings(max_examples=..., deadline=None)``.  When hypothesis is
+available the real library is used (richer shrinking/reporting); this module
+degrades gracefully to a deterministic sweep over the strategy value space so
+the tier-1 suite runs in minimal containers:
+
+* each strategy contributes its full value list;
+* the cartesian product is enumerated in a fixed order and subsampled evenly
+  down to ``max_examples`` (default 16) — deterministic, no RNG;
+* both decorator orders (@given above @settings and vice versa) work, as in
+  hypothesis.
+
+Usage (top of a test module)::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:                      # minimal container
+        from hypothesis_fallback import given, settings, st
+"""
+from __future__ import annotations
+
+import itertools
+
+__all__ = ["given", "settings", "st", "strategies"]
+
+_DEFAULT_EXAMPLES = 16
+
+
+class _SampledFrom:
+    def __init__(self, values):
+        self.values = list(values)
+
+
+class _Strategies:
+    @staticmethod
+    def sampled_from(values):
+        return _SampledFrom(values)
+
+    @staticmethod
+    def booleans():
+        return _SampledFrom([False, True])
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _SampledFrom(range(min_value, max_value + 1))
+
+
+st = strategies = _Strategies()
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_):
+    def deco(fn):
+        fn._hf_max_examples = max_examples
+        return fn
+    return deco
+
+
+def _subsample(combos: list, cap: int) -> list:
+    if len(combos) <= cap:
+        return combos
+    step = len(combos) / cap
+    return [combos[int(i * step)] for i in range(cap)]
+
+
+def given(*arg_strats, **kw_strats):
+    strats = list(arg_strats) + list(kw_strats.values())
+    names = list(kw_strats)
+
+    def deco(fn):
+        # zero-arg wrapper (not functools.wraps: __wrapped__ would make
+        # pytest read the original signature and hunt for fixtures)
+        def run():
+            cap = getattr(run, "_hf_max_examples",
+                          getattr(fn, "_hf_max_examples", _DEFAULT_EXAMPLES))
+            combos = list(itertools.product(*(s.values for s in strats)))
+            for combo in _subsample(combos, cap):
+                pos = combo[:len(arg_strats)]
+                kws = dict(zip(names, combo[len(arg_strats):]))
+                fn(*pos, **kws)
+        run.__name__ = fn.__name__
+        run.__doc__ = fn.__doc__
+        run.__module__ = fn.__module__
+        run._hf_max_examples = getattr(fn, "_hf_max_examples", None) \
+            or _DEFAULT_EXAMPLES
+        return run
+    return deco

@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # minimal container: deterministic sweep
+    from hypothesis_fallback import given, settings, st
 
 from repro.core import (bin_matrix, decompose_ternary, fold_bin_product,
                         index_nbytes, optimal_k_rsr, optimal_k_rsrpp,

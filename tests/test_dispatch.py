@@ -1,0 +1,190 @@
+"""Backend dispatch + kernel parity: every serve-path backend, mode, and
+layout must agree with the core oracles (segments / scatter / onehot)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (pack_code_words, preprocess_binary,
+                        preprocess_ternary, preprocess_ternary_direct,
+                        random_binary, random_ternary, rsr_matmul_binary,
+                        rsr_matmul_ternary, rsr_matmul_ternary_direct,
+                        unpack_code_words)
+from repro.core.preprocess import code_traffic_bits_per_weight
+from repro.kernels import rsr_matmul_kernel
+from repro.kernels.dispatch import (AUTOTUNE_TABLE, resolve_n_out,
+                                    rsr_serve_linear, rsr_serve_matmul,
+                                    select_backend, select_tiles)
+from repro.models.modules import (abstract_serve_linear, rsr_linear_apply,
+                                  serve_linear_params)
+from repro.config import ModelConfig
+
+KEY = jax.random.PRNGKey(0)
+
+CFG = ModelConfig(name="t", family="dense", rsr_k=5)
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs core oracles across modes / shapes / dtypes (satellite: parity)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["binary", "ternary_fused", "ternary_direct"])
+@pytest.mark.parametrize("n,m", [(256, 64), (300, 70), (130, 17)])
+def test_kernel_matches_oracles_all_modes(mode, n, m):
+    """rsr_matmul_kernel == segments == scatter == onehot, including shapes
+    that are not tile multiples (padding correctness)."""
+    key = jax.random.fold_in(KEY, n * m + len(mode))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (3, n))
+    if mode == "binary":
+        w = random_binary(key, (n, m))
+        idx = preprocess_binary(w, 4)
+        oracle = lambda impl: rsr_matmul_binary(x, idx, impl=impl)
+    elif mode == "ternary_fused":
+        w = random_ternary(key, (n, m))
+        idx = preprocess_ternary(w, 4)
+        oracle = lambda impl: rsr_matmul_ternary(x, idx, impl=impl)
+    else:
+        w = random_ternary(key, (n, m))
+        idx = preprocess_ternary_direct(w, 5)
+        oracle = lambda impl: rsr_matmul_ternary_direct(x, idx, impl=impl)
+    got = rsr_matmul_kernel(x, idx)
+    want = x @ w.astype(jnp.float32)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    for impl in ("segments", "scatter", "onehot"):
+        np.testing.assert_allclose(got, oracle(impl), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mode", ["ternary_fused", "ternary_direct"])
+def test_kernel_dtypes_all_modes(mode, dtype):
+    a = random_ternary(jax.random.fold_in(KEY, 17), (256, 60))
+    x = jax.random.normal(jax.random.fold_in(KEY, 18), (4, 256)).astype(dtype)
+    idx = (preprocess_ternary(a, 6) if mode == "ternary_fused"
+           else preprocess_ternary_direct(a, 5))
+    got = rsr_matmul_kernel(x, idx)
+    want = x.astype(jnp.float32) @ a.astype(jnp.float32)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# Packed-code streaming
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m", [(256, 40), (257, 37), (96, 5)])
+def test_packed_kernel_matches_unpacked(n, m):
+    a = random_ternary(jax.random.fold_in(KEY, n + m), (n, m))
+    idx = preprocess_ternary_direct(a, 5)
+    packed = pack_code_words(idx.codes)
+    x = jax.random.normal(jax.random.fold_in(KEY, 3), (2, n))
+    y_packed = rsr_serve_matmul(x, idx.codes, k=5, packed=packed, n_out=m,
+                                backend="pallas_interpret")
+    y_plain = rsr_serve_matmul(x, idx.codes, k=5, n_out=m,
+                               backend="pallas_interpret")
+    y_scatter = rsr_serve_matmul(x, idx.codes, k=5, n_out=m,
+                                 backend="scatter")
+    want = x @ a.astype(jnp.float32)
+    np.testing.assert_allclose(y_packed, want, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(y_packed, y_plain, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(y_packed, y_scatter, rtol=1e-4, atol=1e-4)
+
+
+def test_pack_roundtrip_uint16():
+    codes = jax.random.randint(KEY, (3, 41), 0, 3 ** 6).astype(jnp.uint16)
+    words = pack_code_words(codes)
+    assert words.dtype == jnp.uint32 and words.shape == (3, 21)
+    np.testing.assert_array_equal(unpack_code_words(words, 41, 16), codes)
+
+
+def test_packed_traffic_within_budget():
+    """Acceptance: the packed-code kernel moves ≤ 2 bits/weight of codes."""
+    assert code_traffic_bits_per_weight(5) == pytest.approx(1.6)
+    assert code_traffic_bits_per_weight(5) <= 2.0
+
+
+# ---------------------------------------------------------------------------
+# Dispatch: backend resolution, tiles, epilogue, n_out
+# ---------------------------------------------------------------------------
+
+def test_select_backend_resolution(monkeypatch):
+    assert select_backend("scatter") == "scatter"
+    monkeypatch.setenv("REPRO_RSR_BACKEND", "scatter")
+    assert select_backend() == "scatter"
+    # operator env var overrides a config-pinned backend; explicit arg wins
+    assert select_backend(None, "pallas") == "scatter"
+    assert select_backend("pallas_interpret", "pallas") == "pallas_interpret"
+    monkeypatch.delenv("REPRO_RSR_BACKEND")
+    assert select_backend(None, "pallas") == "pallas"
+    assert select_backend() in ("pallas", "pallas_interpret")
+    with pytest.raises(ValueError):
+        select_backend("cuda")
+
+
+def test_select_tiles_regimes():
+    tb, tblk, tn = select_tiles(1, 800, 4096)      # decode: min batch tile
+    assert tb == 8 and tn == 512
+    tb2, _, _ = select_tiles(256, 800, 4096)       # prefill: wide batch tile
+    assert tb2 == AUTOTUNE_TABLE[-1][2]
+    tb3, tblk3, tn3 = select_tiles(2, 13, 64)      # smoke model: clamped
+    assert tb3 == 8 and tblk3 == 8 and tn3 == 128
+
+
+@pytest.mark.parametrize("backend", ["pallas_interpret", "scatter"])
+def test_fused_epilogue_scale_bias(backend):
+    a = random_ternary(jax.random.fold_in(KEY, 5), (128, 37))
+    sp = serve_linear_params({"w": jnp.asarray(a, jnp.float32) * 0.02},
+                             cfg=CFG)
+    sp["b"] = jax.random.normal(jax.random.fold_in(KEY, 6), (37,))
+    x = jax.random.normal(jax.random.fold_in(KEY, 7), (2, 4, 128))
+    got = rsr_serve_linear(sp, x, cfg=CFG, backend=backend)
+    # reconstruct the dequantized weight the serve params encode
+    from repro.core.ternary import absmean_quantize
+    wt, gamma = absmean_quantize(jnp.asarray(a, jnp.float32) * 0.02)
+    want = (x @ wt) * gamma + sp["b"]
+    assert got.shape == (2, 4, 37)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_n_out_marker_fixes_padded_width_bug():
+    """Without a bias, n_out % k != 0 used to silently return padded columns;
+    the explicit n_out marker restores the true width."""
+    w = jax.random.normal(KEY, (64, 37))           # 37 % 5 != 0
+    sp = serve_linear_params({"w": w}, cfg=CFG)
+    assert "b" not in sp
+    assert sp["n_out"].shape == (37, 0) and sp["n_out"].size == 0
+    x = jax.random.normal(jax.random.fold_in(KEY, 9), (3, 64))
+    y = rsr_linear_apply(sp, x, cfg=CFG)
+    assert y.shape == (3, 37)
+    # resolution order: explicit arg > marker > bias > padded nb*k
+    assert resolve_n_out(sp, 5, sp["codes"].shape[0]) == 37
+    assert resolve_n_out(sp, 5, sp["codes"].shape[0], n_out=35) == 35
+    assert resolve_n_out({}, 5, 8) == 40
+
+
+def test_abstract_serve_linear_matches_real():
+    """Dry-run abstract tree must mirror the real conversion exactly."""
+    w = jax.random.normal(KEY, (96, 23))
+    real = serve_linear_params({"w": w}, cfg=CFG)
+    abstract = abstract_serve_linear(96, 23, cfg=CFG)
+    assert set(real) == set(abstract)
+    for name, s in abstract.items():
+        assert real[name].shape == s.shape, name
+        assert real[name].dtype == s.dtype, name
+
+
+def test_backends_agree_under_jit_and_vmap():
+    """MoE-style usage: dispatch under jax.vmap over an expert axis."""
+    e, n, m = 3, 64, 16
+    ws = jax.random.normal(KEY, (e, n, m))
+    sp = jax.vmap(lambda w: serve_linear_params({"w": w}, cfg=CFG))(ws)
+    xs = jax.random.normal(jax.random.fold_in(KEY, 11), (e, 2, n))
+    outs = {}
+    for backend in ("pallas_interpret", "scatter"):
+        f = jax.vmap(lambda p, x: rsr_serve_linear(p, x, cfg=CFG, n_out=m,
+                                                   backend=backend))
+        outs[backend] = f({k: sp[k] for k in ("codes", "packed", "scale")},
+                          xs)
+    np.testing.assert_allclose(outs["pallas_interpret"], outs["scatter"],
+                               rtol=1e-4, atol=1e-4)

@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # minimal container: deterministic sweep
+    from hypothesis_fallback import given, settings, st
 
 from repro.core import (binary_row_codes, preprocess_binary,
                         preprocess_ternary_direct, random_binary,

@@ -60,8 +60,10 @@ _CALIBRATE = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P, NamedSharding
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    kw = {}
+    if hasattr(jax.sharding, "AxisType"):        # newer jax only
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * 2
+    mesh = jax.make_mesh((2, 4), ("data", "model"), **kw)
     xs = jax.ShapeDtypeStruct((256, 512), jnp.float32)
     ws = jax.ShapeDtypeStruct((512, 1024), jnp.float32)
     co = jax.jit(lambda x, w: x @ w,
