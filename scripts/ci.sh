@@ -4,10 +4,12 @@
 #   scripts/ci.sh            # full tier-1 + smoke bench
 #   scripts/ci.sh --fast     # tier-1 only
 #
-# The smoke benchmark exercises the real serve path (dispatch -> Pallas
-# kernel, interpret mode on CPU) at small shapes and asserts backend
-# equality; the committed BENCH_serve.json is produced by the full run
-# (`python benchmarks/run.py --only serve`) and tracked per PR.
+# The smoke benchmarks exercise the real serve path (dispatch -> Pallas
+# kernel, interpret mode on CPU) at small shapes: serve asserts backend
+# equality, prefill asserts chunked-prefill parity vs the scan reference
+# and scheduler-vs-per-request token equality.  The committed
+# BENCH_serve.json / BENCH_prefill.json are produced by the full runs
+# (`python benchmarks/run.py --only serve|prefill`) and tracked per PR.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -20,6 +22,9 @@ if [[ "${1:-}" != "--fast" ]]; then
     echo "== serve smoke benchmark =="
     PYTHONPATH="src:." python benchmarks/run.py --only serve --smoke \
         --json /tmp/BENCH_serve_smoke.json
+    echo "== prefill smoke benchmark =="
+    PYTHONPATH="src:." python benchmarks/run.py --only prefill --smoke \
+        --prefill-json /tmp/BENCH_prefill_smoke.json
 fi
 
 echo "CI OK"

@@ -161,6 +161,8 @@ class ServeConfig:
     batch_size: int = 8
     rsr_impl: str = "onehot"          # segments | scatter | onehot
     temperature: float = 0.0          # 0 -> greedy
+    prefill_chunk: int = 32           # tokens per chunked-prefill step
+                                      # (B·chunk rows per quantized linear)
 
 
 @dataclasses.dataclass(frozen=True)

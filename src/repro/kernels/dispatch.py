@@ -25,8 +25,14 @@ the call sites used to hardcode:
    LLM serving hot path and the paper's 5.24× vector-matrix target) takes the
    minimum fp32 batch tile and a deep contraction tile so the code stream —
    not the activation stream — dominates HBM traffic; prefill regimes widen
-   the batch tile to amortize the one-hot build across MXU rows.
-   ``autotune()`` measures the candidates and can refresh the table offline.
+   the batch tile to amortize the one-hot build across MXU rows (the
+   chunked-prefill engine path flattens B·chunk rows, which is what lands
+   here).  ``autotune()`` measures candidates per shape and records winners
+   in a per-(n, nb)-bucketed overlay (``TUNED_TILES``) that outranks the
+   static rows; ``autotune(..., write=...)`` / the ``python -m
+   repro.kernels.dispatch --write`` CLI persist it to autotune_cache.json,
+   reloaded over the table at import — so a TPU session's measurements
+   survive the session.
 
 3. **Epilogue fusion**: scale (absmean γ), bias, and output dtype are handed
    to the kernel's final-step projection, so a serve linear is one kernel
@@ -48,9 +54,10 @@ Serve params contract (produced by ``serve_linear_params``):
 from __future__ import annotations
 
 import functools
+import json
 import os
 import time
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -60,7 +67,8 @@ from repro.kernels.ops import _pad_to
 from repro.kernels.rsr_onehot import default_interpret, rsr_onehot_matmul
 
 __all__ = ["BACKENDS", "select_backend", "select_tiles", "rsr_serve_linear",
-           "rsr_serve_matmul", "autotune", "AUTOTUNE_TABLE"]
+           "rsr_serve_matmul", "autotune", "AUTOTUNE_TABLE", "TUNED_TILES",
+           "save_autotune_cache", "load_autotune_cache"]
 
 BACKENDS = ("pallas", "pallas_interpret", "scatter")
 
@@ -95,22 +103,90 @@ AUTOTUNE_TABLE = (
     ("prefill", None, 128, 8, 256),
 )
 
+# Measured per-(n, nb)-bucket overrides of the regime table, keyed
+# (regime, nb_bucket, n_bucket) with power-of-two buckets.  Populated by
+# ``autotune()`` and persisted to autotune_cache.json (``save_autotune_cache``
+# / ``autotune(..., write=...)``); loaded back over the static table at
+# import when the file exists, so a TPU session's measurements survive.
+TUNED_TILES: dict[tuple[str, int, int], tuple[int, int, int]] = {}
+
+AUTOTUNE_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+DEFAULT_AUTOTUNE_CACHE = "autotune_cache.json"
+
 
 def _round_up(v: int, mult: int) -> int:
     return -(-v // mult) * mult
 
 
+def _bucket(v: int) -> int:
+    """Power-of-two bucket (≥ 1) for the tuned-tile table key."""
+    return 1 << max(0, int(v - 1).bit_length())
+
+
+def _regime(b: int) -> str:
+    for name, max_b, *_ in AUTOTUNE_TABLE:
+        if max_b is None or b <= max_b:
+            return name
+    return AUTOTUNE_TABLE[-1][0]
+
+
 def select_tiles(b: int, nb: int, n: int) -> tuple[int, int, int]:
     """(tile_b, tile_blk, tile_n) for a (B rows, nb blocks, n contraction)
-    problem, from AUTOTUNE_TABLE with shape clamping (tiles never exceed the
-    padded problem: no wasted VMEM on reduced/smoke models)."""
-    for _, max_b, tile_b, tile_blk, tile_n in AUTOTUNE_TABLE:
-        if max_b is None or b <= max_b:
-            break
+    problem.  Measured per-(n, nb)-bucket entries (TUNED_TILES) outrank the
+    static regime row; either choice is shape-clamped (tiles never exceed
+    the padded problem: no wasted VMEM on reduced/smoke models)."""
+    tuned = TUNED_TILES.get((_regime(b), _bucket(nb), _bucket(n)))
+    if tuned is not None:
+        tile_b, tile_blk, tile_n = tuned
+    else:
+        for _, max_b, tile_b, tile_blk, tile_n in AUTOTUNE_TABLE:
+            if max_b is None or b <= max_b:
+                break
     tile_b = min(tile_b, _round_up(b, 8))
     tile_blk = min(tile_blk, _round_up(nb, 8))
     tile_n = min(tile_n, _round_up(n, 128))
     return tile_b, tile_blk, tile_n
+
+
+def save_autotune_cache(path: Optional[str] = None) -> str:
+    """Dump TUNED_TILES to JSON (default: $REPRO_AUTOTUNE_CACHE or
+    ./autotune_cache.json) so a hardware session's measurements persist.
+    The payload records the measuring host backend; loads on different
+    hardware are refused (CPU-interpreter tiles must not steer TPU runs)."""
+    path = path or os.environ.get(AUTOTUNE_CACHE_ENV, DEFAULT_AUTOTUNE_CACHE)
+    payload = {
+        "schema": "autotune_cache_v1",
+        "host_backend": jax.default_backend(),
+        "entries": [
+            {"regime": r, "nb_bucket": nbb, "n_bucket": nbk,
+             "tiles": list(t)}
+            for (r, nbb, nbk), t in sorted(TUNED_TILES.items())],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    return path
+
+
+def load_autotune_cache(path: Optional[str] = None, *, clear: bool = False,
+                        force: bool = False) -> int:
+    """Load measured tiles over the static table; returns the entry count.
+    Called automatically at import when the cache file exists.  Entries
+    measured on a different host backend are skipped unless ``force``."""
+    path = path or os.environ.get(AUTOTUNE_CACHE_ENV, DEFAULT_AUTOTUNE_CACHE)
+    if clear:
+        TUNED_TILES.clear()
+    if not os.path.exists(path):
+        return 0
+    with open(path) as f:
+        payload = json.load(f)
+    host = payload.get("host_backend")
+    if not force and host is not None and host != jax.default_backend():
+        return 0
+    entries = payload.get("entries", [])
+    for e in entries:
+        TUNED_TILES[(str(e["regime"]), int(e["nb_bucket"]),
+                     int(e["n_bucket"]))] = tuple(int(v) for v in e["tiles"])
+    return len(entries)
 
 
 # ---------------------------------------------------------------------------
@@ -228,10 +304,14 @@ def rsr_serve_linear(p: dict, x: jax.Array, *, cfg,
 def autotune(b: int, n: int, n_out: int, *, k: int = 5,
              candidates=((8, 8, 256), (8, 8, 512), (32, 8, 256),
                          (128, 8, 256)),
-             backend: Optional[str] = None, reps: int = 3) -> dict:
+             backend: Optional[str] = None, reps: int = 3,
+             write: Union[str, bool, None] = None) -> dict:
     """Measure tile candidates for one (B, n, n_out) linear; returns
-    {tiles: best, us: best_us, rows: [(tiles, us), ...]}.  Offline tool —
-    the serve path reads the static table, this refreshes it per hardware."""
+    {tiles: best, us: best_us, rows: [(tiles, us), ...], key: tuned-key}.
+    The winner is recorded in TUNED_TILES under its (regime, nb, n) bucket —
+    subsequent ``select_tiles`` calls for that bucket use it.  ``write``
+    persists the whole table to autotune_cache.json (True → default path,
+    str → that path), which is loaded back at import on later sessions."""
     from repro.core import preprocess_ternary_direct, random_ternary
     from repro.core.preprocess import pack_code_words
     a = random_ternary(jax.random.PRNGKey(0), (n, n_out))
@@ -258,4 +338,53 @@ def autotune(b: int, n: int, n_out: int, *, k: int = 5,
             fn().block_until_ready()
         rows.append((tiles, (time.perf_counter() - t0) / reps * 1e6))
     rows.sort(key=lambda r: r[1])
-    return {"tiles": rows[0][0], "us": rows[0][1], "rows": rows}
+    key = (_regime(b), _bucket(nb), _bucket(n))
+    TUNED_TILES[key] = rows[0][0]
+    out = {"tiles": rows[0][0], "us": rows[0][1], "rows": rows, "key": key}
+    if write:
+        out["cache_path"] = save_autotune_cache(
+            None if write is True else write)
+    return out
+
+
+# load any persisted measurements over the static table (ROADMAP: a TPU
+# session's autotune results must survive the session)
+if os.path.exists(os.environ.get(AUTOTUNE_CACHE_ENV,
+                                 DEFAULT_AUTOTUNE_CACHE)):
+    load_autotune_cache()
+
+
+def _main():
+    """Offline autotune CLI:
+
+        python -m repro.kernels.dispatch --shapes 1x4096x4096,256x4096x4096 \\
+            --write
+
+    measures each BxNxM shape and (with --write) persists the winners to
+    autotune_cache.json, which select_tiles loads over AUTOTUNE_TABLE on
+    the next import."""
+    import argparse
+    ap = argparse.ArgumentParser(description=_main.__doc__)
+    ap.add_argument("--shapes", default="1x4096x4096,8x4096x4096,"
+                    "64x4096x4096,256x4096x4096",
+                    help="comma-separated BxNxM problem shapes")
+    ap.add_argument("--k", type=int, default=5)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--backend", default=None)
+    ap.add_argument("--write", action="store_true",
+                    help="persist measured tiles to the autotune cache")
+    ap.add_argument("--out", default=None,
+                    help="cache path (default autotune_cache.json)")
+    args = ap.parse_args()
+    for spec in args.shapes.split(","):
+        b, n, m = (int(v) for v in spec.lower().split("x"))
+        res = autotune(b, n, m, k=args.k, reps=args.reps,
+                       backend=args.backend)
+        print(f"{spec}: best={res['tiles']} {res['us']:.1f}us "
+              f"key={res['key']}")
+    if args.write:
+        print("wrote", save_autotune_cache(args.out))
+
+
+if __name__ == "__main__":
+    _main()

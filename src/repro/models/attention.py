@@ -1,6 +1,7 @@
 """Attention variants: MHA/GQA/MQA, sliding-window (banded), MLA (DeepSeek-V2),
 and gated cross-attention (Llama-3.2-Vision) — each with a full-sequence path
-(train/prefill) and a KV-cache decode path.
+(train) and a KV-cache path that appends a chunk of C ≥ 1 tokens at per-slot
+positions (C == 1 is classic decode; C > 1 is the chunked-prefill hot path).
 
 Full-sequence softmax attention is evaluated flash-style: an online-softmax
 scan over KV chunks (peak memory S×C instead of S×S).  Sliding-window
@@ -177,7 +178,8 @@ def init_gqa(key, cfg: ModelConfig) -> dict:
 def gqa_apply(p: dict, x: jax.Array, *, cfg: ModelConfig, lin,
               window: int = 0, positions: Optional[jax.Array] = None,
               cache: Optional[dict] = None, pos: Optional[jax.Array] = None):
-    """Full-seq when cache is None, else single-step decode.
+    """Full-seq when cache is None, else cached chunk step (C = x.shape[1]
+    tokens appended at per-slot positions `pos`; C == 1 is classic decode).
 
     Returns (out, new_cache)."""
     b, s, _ = x.shape
@@ -196,46 +198,73 @@ def gqa_apply(p: dict, x: jax.Array, *, cfg: ModelConfig, lin,
         out = sdpa(q, k, v, causal=cfg.causal, window=window)
         return lin(p["wo"], out.reshape(b, s, h * hd)), None
 
-    # ---- decode: s == 1 ----
+    # ---- cached path: C = s new tokens per sequence, per-slot positions ----
     # Cache layout is (B, KVH, S, hd): the score dot contracts the LAST axis
     # and the PV dot contracts S with no transposes — the (B,S,KVH,hd)
     # layout cost two full-cache transpose copies per layer in the lowered
     # HLO (256 MiB/layer on gemma decode; perf_iterations/iter3).
-    posv = pos if pos is not None else cache["pos"]
-    q = nn.apply_rope(q, posv[:, None], theta=cfg.rope_theta)
-    k = nn.apply_rope(k, posv[:, None], theta=cfg.rope_theta)
+    # Positions are per batch row (continuous batching: slots hold
+    # independent sequences), so writes are per-row scatters, not a shared
+    # dynamic_update_slice.  C == 1 is the decode step; C > 1 is a prefill
+    # chunk whose q/k/v/o projections batch B·C rows through the kernel.
+    posv = pos if pos is not None else cache["pos"]           # (B,)
+    positions = posv[:, None] + jnp.arange(s)[None, :]        # (B, C) absolute
+    q = nn.apply_rope(q, positions, theta=cfg.rope_theta)
+    k = nn.apply_rope(k, positions, theta=cfg.rope_theta)
     smax = cache["k"].shape[2]
-    if window > 0:
-        slot = (posv % smax)[0]
-    else:
-        slot = posv[0]
-    ck = jax.lax.dynamic_update_slice_in_dim(
-        cache["k"], k.transpose(0, 2, 1, 3).astype(cache["k"].dtype),
-        slot, axis=2)
-    cv = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"], v.transpose(0, 2, 1, 3).astype(cache["v"].dtype),
-        slot, axis=2)
+    groups = h // kvh
     # keep the cache in its storage dtype: upcasting here materializes an
     # f32 copy of the whole cache (XLA hoists the convert out of the layer
     # scan — measured 1.15 GB/step on gemma decode, perf_iterations/iter2).
-    groups = h // kvh
-    qg = (q / math.sqrt(hd)).astype(ck.dtype)      # (b,1,h,hd)
-    qg = qg.reshape(b, kvh, groups, hd)            # group by kv head
-    s_ = jnp.einsum("bhgd,bhkd->bhgk", qg, ck,
-                    preferred_element_type=jnp.float32)   # (b,kvh,g,S)
-    kpos = jnp.arange(smax)[None, :]
-    if window > 0:   # ring buffer: valid = last min(pos+1, window) slots
-        age = (posv[:, None] - kpos) % smax
-        valid = (age >= 0) & (age < jnp.minimum(posv[:, None] + 1, smax))
-        valid = valid & ((posv[:, None] - age) >= 0)
-        mask = valid
-    else:
-        mask = kpos <= posv[:, None]
-    s_ = jnp.where(mask[:, None, None, :], s_, NEG_INF)
+
+    if window > 0:
+        # Ring buffer: a chunk's writes can wrap the window and evict keys
+        # an earlier in-chunk query still needs, so the write/attend core
+        # stays per-step (the single-token decode computation under
+        # lax.scan) while the projections above/below run batched.
+        def step(carry, inp):
+            ck, cv = carry
+            kt, vt, qt, pt = inp           # (b,kvh,hd) ×2, (b,h,hd), (b,)
+            slot_t = pt % smax
+            ck = ck.at[jnp.arange(b), :, slot_t].set(kt.astype(ck.dtype))
+            cv = cv.at[jnp.arange(b), :, slot_t].set(vt.astype(cv.dtype))
+            qg = (qt / math.sqrt(hd)).astype(ck.dtype)
+            qg = qg.reshape(b, kvh, groups, hd)            # group by kv head
+            s_ = jnp.einsum("bhgd,bhkd->bhgk", qg, ck,
+                            preferred_element_type=jnp.float32)
+            kpos = jnp.arange(smax)[None, :]
+            # valid = last min(pos+1, window) slots
+            age = (pt[:, None] - kpos) % smax
+            valid = (age >= 0) & (age < jnp.minimum(pt[:, None] + 1, smax))
+            valid = valid & ((pt[:, None] - age) >= 0)
+            s_ = jnp.where(valid[:, None, None, :], s_, NEG_INF)
+            pr = jax.nn.softmax(s_, axis=-1).astype(cv.dtype)
+            ot = jnp.einsum("bhgk,bhkd->bhgd", pr, cv,
+                            preferred_element_type=jnp.float32)
+            return (ck, cv), ot
+
+        (ck, cv), outs = jax.lax.scan(
+            step, (cache["k"], cache["v"]),
+            (jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0),
+             jnp.moveaxis(q, 1, 0), jnp.moveaxis(positions, 1, 0)))
+        out = jnp.moveaxis(outs, 0, 1).astype(x.dtype)     # (b,C,kvh,g,hd)
+        out = lin(p["wo"], out.reshape(b, s, h * hd))
+        return out, {"k": ck, "v": cv}
+
+    b_idx = jnp.arange(b)[:, None]
+    ck = cache["k"].at[b_idx, :, positions].set(k.astype(cache["k"].dtype))
+    cv = cache["v"].at[b_idx, :, positions].set(v.astype(cache["v"].dtype))
+    qg = (q / math.sqrt(hd)).astype(ck.dtype)      # (b,C,h,hd)
+    qg = qg.reshape(b, s, kvh, groups, hd)         # group by kv head
+    s_ = jnp.einsum("bchgd,bhkd->bchgk", qg, ck,
+                    preferred_element_type=jnp.float32)   # (b,C,kvh,g,S)
+    kpos = jnp.arange(smax)[None, None, :]
+    mask = kpos <= positions[:, :, None]                  # (b,C,S) causal
+    s_ = jnp.where(mask[:, :, None, None, :], s_, NEG_INF)
     pr = jax.nn.softmax(s_, axis=-1).astype(cv.dtype)
-    out = jnp.einsum("bhgk,bhkd->bhgd", pr, cv,
+    out = jnp.einsum("bchgk,bhkd->bchgd", pr, cv,
                      preferred_element_type=jnp.float32).astype(x.dtype)
-    out = lin(p["wo"], out.reshape(b, 1, h * hd))
+    out = lin(p["wo"], out.reshape(b, s, h * hd))
     return out, {"k": ck, "v": cv}
 
 
@@ -295,35 +324,37 @@ def mla_apply(p: dict, x: jax.Array, *, cfg: ModelConfig, lin,
         out = sdpa(qq, k, v, causal=cfg.causal)
         return lin(p["wo"], out.reshape(b, s, h * dv)), None
 
-    # ---- absorbed decode (s == 1) ----
-    posv = pos if pos is not None else cache["pos"]
-    q_pe = nn.apply_rope(q_pe, posv[:, None], theta=cfg.rope_theta)
-    k_pe = nn.apply_rope(k_pe, posv[:, None], theta=cfg.rope_theta)
-    slot = posv[0]
-    c_cache = jax.lax.dynamic_update_slice_in_dim(
-        cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), slot, axis=1)
-    pe_cache = jax.lax.dynamic_update_slice_in_dim(
-        cache["k_pe"], k_pe[:, :, 0].astype(cache["k_pe"].dtype), slot, axis=1)
-    # absorb W_UK into q:  q_lat[b,h,r] = Σ_dn q_nope · W_UK[r, h*dn]
+    # ---- absorbed cached path (C = s tokens, per-slot positions) ----
+    posv = pos if pos is not None else cache["pos"]           # (B,)
+    positions = posv[:, None] + jnp.arange(s)[None, :]        # (B, C)
+    q_pe = nn.apply_rope(q_pe, positions, theta=cfg.rope_theta)
+    k_pe = nn.apply_rope(k_pe, positions, theta=cfg.rope_theta)
+    b_idx = jnp.arange(b)[:, None]
+    c_cache = cache["c_kv"].at[b_idx, positions].set(
+        c_kv.astype(cache["c_kv"].dtype))
+    pe_cache = cache["k_pe"].at[b_idx, positions].set(
+        k_pe[:, :, 0].astype(cache["k_pe"].dtype))
+    # absorb W_UK into q:  q_lat[b,c,h,r] = Σ_dn q_nope · W_UK[r, h*dn]
     # (cache stays in storage dtype — see gqa_apply decode note)
     w_uk = p["w_uk"]["w"].reshape(r, h, dn)
-    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(w_uk.dtype),
+    q_lat = jnp.einsum("bchd,rhd->bchr", q_nope.astype(w_uk.dtype),
                        w_uk, preferred_element_type=jnp.float32)
     scale = 1.0 / math.sqrt(dn + dr)
-    s_lat = jnp.einsum("bhr,bkr->bhk", q_lat.astype(c_cache.dtype),
+    s_lat = jnp.einsum("bchr,bkr->bchk", q_lat.astype(c_cache.dtype),
                        c_cache, preferred_element_type=jnp.float32)
-    s_pe = jnp.einsum("bhd,bkd->bhk", q_pe[:, 0].astype(pe_cache.dtype),
+    s_pe = jnp.einsum("bchd,bkd->bchk", q_pe.astype(pe_cache.dtype),
                       pe_cache, preferred_element_type=jnp.float32)
     s_ = (s_lat + s_pe) * scale
-    mask = jnp.arange(c_cache.shape[1])[None, :] <= posv[:, None]
-    s_ = jnp.where(mask[:, None], s_, NEG_INF)
+    mask = (jnp.arange(c_cache.shape[1])[None, None, :]
+            <= positions[:, :, None])                         # (B,C,S)
+    s_ = jnp.where(mask[:, :, None, :], s_, NEG_INF)
     pr = jax.nn.softmax(s_, axis=-1).astype(c_cache.dtype)
-    o_lat = jnp.einsum("bhk,bkr->bhr", pr, c_cache,
+    o_lat = jnp.einsum("bchk,bkr->bchr", pr, c_cache,
                        preferred_element_type=jnp.float32)
     w_uv = p["w_uv"]["w"].reshape(r, h, dv)
-    out = jnp.einsum("bhr,rhd->bhd", o_lat.astype(w_uv.dtype), w_uv,
+    out = jnp.einsum("bchr,rhd->bchd", o_lat.astype(w_uv.dtype), w_uv,
                      preferred_element_type=jnp.float32)
-    out = lin(p["wo"], out.reshape(b, 1, h * dv).astype(x.dtype))
+    out = lin(p["wo"], out.reshape(b, s, h * dv).astype(x.dtype))
     return out, {"c_kv": c_cache, "k_pe": pe_cache}
 
 

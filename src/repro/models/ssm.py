@@ -1,9 +1,12 @@
 """State-space mixers: Mamba-2 (SSD, arXiv:2405.21060) and RG-LRU (Griffin,
 arXiv:2402.19427).
 
-Both provide a full-sequence path (train/prefill) and an O(1)-per-token decode
-path with explicit recurrent state — which is what makes the long_500k decode
-shape runnable for these families (state size is context-independent).
+Both provide a full-sequence path (train) and a cached path with explicit
+recurrent state that advances C ≥ 1 steps per call: C == 1 is O(1)-per-token
+decode — which is what makes the long_500k decode shape runnable for these
+families (state size is context-independent) — and C > 1 is the chunked
+prefill, where the projections batch B·C rows through the quantized kernel
+and only the tiny elementwise recurrence stays sequential.
 
 Mamba-2 sequence path = chunked SSD: intra-chunk quadratic (attention-like)
 term + inter-chunk linear recurrence over chunk states (lax.scan).
@@ -70,6 +73,18 @@ def _causal_conv_seq(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
     xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
     out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width))
     return jax.nn.silu(out + b)
+
+
+def _conv_chunk_cached(buf: jax.Array, cur: jax.Array, w: jax.Array,
+                       b: jax.Array):
+    """Depthwise causal conv over a C-step chunk with the (B, W-1, ch) cache
+    buffer as left context.  cur (B,C,ch) -> (out (B,C,ch), new buffer)."""
+    s = cur.shape[1]
+    win = jnp.concatenate([buf, cur], axis=1)          # (B, W-1+C, ch)
+    width = w.shape[0]
+    wins = jnp.stack([win[:, t:t + width] for t in range(s)], axis=1)
+    out = jax.nn.silu(jnp.einsum("bcwk,wk->bck", wins, w) + b)
+    return out, win[:, s:]
 
 
 def _ssd_chunked(xh, dt, A, B, C, chunk: int):
@@ -149,14 +164,13 @@ def mamba2_apply(p: dict, x: jax.Array, *, cfg: ModelConfig, lin,
         Cv = _causal_conv_seq(Cv, p["conv_wc"], p["conv_bc2"])
         new_conv = None
     else:
-        def conv_step(buf, cur, w, bb):
-            window = jnp.concatenate([buf, cur], axis=1)          # (b,W,C)
-            out = jax.nn.silu(
-                jnp.einsum("bwc,wc->bc", window, w) + bb)[:, None]
-            return out, window[:, 1:]
-        xin, cx = conv_step(cache["conv_x"], xin, p["conv_wx"], p["conv_bx"])
-        Bv, cb = conv_step(cache["conv_b"], Bv, p["conv_wb"], p["conv_bb"])
-        Cv, cc = conv_step(cache["conv_c"], Cv, p["conv_wc"], p["conv_bc2"])
+        # cached chunk of C = s steps: the conv buffer is the left context
+        xin, cx = _conv_chunk_cached(cache["conv_x"], xin,
+                                     p["conv_wx"], p["conv_bx"])
+        Bv, cb = _conv_chunk_cached(cache["conv_b"], Bv,
+                                    p["conv_wb"], p["conv_bb"])
+        Cv, cc = _conv_chunk_cached(cache["conv_c"], Cv,
+                                    p["conv_wc"], p["conv_bc2"])
         new_conv = {"conv_x": cx, "conv_b": cb, "conv_c": cc}
     xh = xin.reshape(b, s, h, ph)
 
@@ -164,11 +178,25 @@ def mamba2_apply(p: dict, x: jax.Array, *, cfg: ModelConfig, lin,
         y, _ = _ssd_chunked(xh, dt, p["A_log"], Bv, Cv, cfg.ssm_chunk)
         new_cache = None
     else:
-        # single-step recurrence: st = st*exp(dt*A) + dt * B ⊗ x
-        dA = jnp.exp(dt[:, 0] * (-jnp.exp(p["A_log"]))[None])       # (b,h)
-        st = cache["state"] * dA[..., None, None] + jnp.einsum(
-            "bh,bn,bhp->bhpn", dt[:, 0], Bv[:, 0], xh[:, 0])
-        y = jnp.einsum("bn,bhpn->bhp", Cv[:, 0], st)[:, None]       # (b,1,h,p)
+        # step recurrence scanned over the chunk: st = st*exp(dt*A) + dt·B⊗x.
+        # Sequential on purpose — bitwise-identical to repeated single-token
+        # decode (chunked-prefill parity anchor); the state update is tiny
+        # next to the batched B·C-row projections above.
+        dAl = (-jnp.exp(p["A_log"]))                                # (h,)
+
+        def rec_step(st, inp):
+            dtt, Bt, Ct, xt = inp           # (b,h) (b,n) (b,n) (b,h,p)
+            dA = jnp.exp(dtt * dAl[None])
+            st = st * dA[..., None, None] + jnp.einsum(
+                "bh,bn,bhp->bhpn", dtt, Bt, xt)
+            yt = jnp.einsum("bn,bhpn->bhp", Ct, st)
+            return st, yt
+
+        st, ys = jax.lax.scan(
+            rec_step, cache["state"],
+            (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(Bv, 1, 0),
+             jnp.moveaxis(Cv, 1, 0), jnp.moveaxis(xh, 1, 0)))
+        y = jnp.moveaxis(ys, 0, 1)                          # (b,C,h,p)
         new_cache = {"state": st, **new_conv}
 
     y = y + xh * p["D"][None, None, :, None]
@@ -228,10 +256,8 @@ def rglru_apply(p: dict, x: jax.Array, *, cfg: ModelConfig, lin,
         u = _causal_conv_seq(u, p["conv_w"], p["conv_b"])
         new_conv = None
     else:
-        window = jnp.concatenate([cache["conv"], u], axis=1)
-        u = jax.nn.silu(
-            jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"])[:, None]
-        new_conv = window[:, 1:]
+        u, new_conv = _conv_chunk_cached(cache["conv"], u,
+                                         p["conv_w"], p["conv_b"])
 
     r = jax.nn.sigmoid(lin(p["w_a"], u))                   # recurrence gate
     i = jax.nn.sigmoid(lin(p["w_i"], u))                   # input gate
@@ -248,9 +274,19 @@ def rglru_apply(p: dict, x: jax.Array, *, cfg: ModelConfig, lin,
         h = Bs                                             # h_0 = 0
         new_cache = None
     else:
-        h = a[:, 0] * cache["h"] + bt[:, 0]
-        new_cache = {"h": h, "conv": new_conv}
-        h = h[:, None]
+        # sequential over the chunk — bitwise-identical to repeated
+        # single-token decode (chunked-prefill parity anchor); the gate /
+        # conv / in-out projections above stay batched over B·C rows.
+        def rec_step(hprev, ab):
+            at, btt = ab
+            hnew = at * hprev + btt
+            return hnew, hnew
+
+        hlast, hs = jax.lax.scan(rec_step, cache["h"],
+                                 (jnp.moveaxis(a, 1, 0),
+                                  jnp.moveaxis(bt, 1, 0)))
+        h = jnp.moveaxis(hs, 0, 1)                         # (b, C, d)
+        new_cache = {"h": hlast, "conv": new_conv}
 
     y = (h.astype(x.dtype) * gate)
     return lin(p["out"], y), new_cache

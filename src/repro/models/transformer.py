@@ -288,9 +288,16 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, *,
             "pos": pos}
 
 
-def decode_step(params: dict, cache: dict, tokens: jax.Array,
-                cfg: ModelConfig) -> tuple:
-    """One token per sequence. tokens (B, 1) -> (logits (B,V), new cache)."""
+def prefill_step(params: dict, cache: dict, tokens: jax.Array,
+                 cfg: ModelConfig) -> tuple:
+    """Chunk of C ≥ 1 tokens per sequence against the live cache.
+
+    tokens (B, C) -> (last-position logits (B, V), new cache); the per-slot
+    positions ``cache['pos']`` advance by C.  C == 1 is exactly the decode
+    step; C > 1 is the chunked-prefill hot path — every quantized linear
+    flattens B·C rows, so the dispatcher leaves the decode tile regime and
+    amortizes the one-hot build across the chunk.
+    """
     lin = _lin(cfg, quantize=False)
     head_kinds, pat, n_super, tail_kinds = _layer_split(cfg)
     pos = cache["pos"]
@@ -322,11 +329,54 @@ def decode_step(params: dict, cache: dict, tokens: jax.Array,
                                pos=pos)
         new_tail.append(nc)
 
-    x = nn.norm_apply(params["final_norm"], x, cfg=cfg)
+    # only the chunk's last position feeds sampling (interior chunk logits
+    # are never consumed), so the LM head projects a single row per slot
+    x = nn.norm_apply(params["final_norm"], x[:, -1:], cfg=cfg)
     logits = nn.head_apply(params["embed"], params.get("head"), x, cfg=cfg)
     new_cache = {"head": new_head, "blocks": new_blocks, "tail": new_tail,
-                 "pos": pos + 1}
+                 "pos": pos + tokens.shape[1]}
     return logits[:, 0].astype(jnp.float32), new_cache
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array,
+                cfg: ModelConfig) -> tuple:
+    """One token per sequence. tokens (B, 1) -> (logits (B,V), new cache).
+
+    The C == 1 case of :func:`prefill_step` (kept as the named decode entry
+    point: the serving hot loop, dry-run compiles, and the scan-prefill
+    reference all target it)."""
+    return prefill_step(params, cache, tokens, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Per-slot cache views (continuous batching: admit/evict one slot at a time)
+# ---------------------------------------------------------------------------
+
+def slot_cache(cache: dict, i) -> dict:
+    """Batch row ``i`` of a batched cache as a batch-1 cache.
+
+    ``blocks`` leaves carry a leading superblock axis (stacked for the
+    lax.scan), so their batch axis is 1; everything else is batch-leading.
+    """
+    def sl(axis):
+        return lambda a: jax.lax.dynamic_slice_in_dim(a, i, 1, axis=axis)
+    return {"head": jax.tree.map(sl(0), cache["head"]),
+            "blocks": jax.tree.map(sl(1), cache["blocks"]),
+            "tail": jax.tree.map(sl(0), cache["tail"]),
+            "pos": jax.lax.dynamic_slice_in_dim(cache["pos"], i, 1, axis=0)}
+
+
+def update_slot_cache(cache: dict, sub: dict, i) -> dict:
+    """Write a batch-1 cache ``sub`` into row ``i`` of a batched cache."""
+    def up(axis):
+        return lambda a, s: jax.lax.dynamic_update_slice_in_dim(
+            a, s.astype(a.dtype), i, axis=axis)
+    return {"head": jax.tree.map(up(0), cache["head"], sub["head"]),
+            "blocks": jax.tree.map(up(1), cache["blocks"], sub["blocks"]),
+            "tail": jax.tree.map(up(0), cache["tail"], sub["tail"]),
+            "pos": jax.lax.dynamic_update_slice_in_dim(
+                cache["pos"], sub["pos"].astype(cache["pos"].dtype), i,
+                axis=0)}
 
 
 # ---------------------------------------------------------------------------

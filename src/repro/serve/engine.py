@@ -1,27 +1,45 @@
-"""Serving engine: RSR-indexed decode with batched request scheduling.
+"""Serving engine: chunked RSR prefill + continuous-batching decode.
 
-The engine owns the serve-parameterized tree (RSR codes + packed kernel
-streams after offline ``serve_params`` conversion), a pre-allocated KV cache,
-and a jitted single-token ``decode_step``.  Every quantized linear inside the
-decode graph routes through the backend dispatcher
-(``repro.kernels.dispatch``): the Pallas one-hot kernel on TPU (interpret
-mode elsewhere), decode-regime tiles from the autotune table (batch ≤ 8 is
-the vector-matrix hot path the paper's 5.24× claim targets), scale/bias fused
-into the kernel epilogue.  Prefill is a jitted lax.scan of decode steps
-(prompt tokens are forced, logits discarded) — simple, exact, and cache-
-filling; the large-batch prefill path for throughput serving is the plain
-``forward`` (used by the dry-run prefill shapes).
+``Engine`` owns the serve-parameterized tree (RSR codes + packed kernel
+streams after offline ``serve_params`` conversion), a pre-allocated per-slot
+KV cache, and ONE jitted step — ``tfm.prefill_step`` — that covers both
+serving regimes.  C == 1 is the classic decode step (batch ≤ 8 rows, the
+vector-matrix hot path the paper's 5.24× claim targets); C == prefill_chunk
+is the chunked-prefill hot path: a length-S prompt costs ceil(S / chunk)
+kernel launches per quantized linear instead of S, each launch flattening
+B·C rows so the backend dispatcher (``repro.kernels.dispatch``) leaves the
+decode tile regime for the widened small/prefill tiles and amortizes the
+per-tile one-hot build across the chunk, scale/bias still fused into the
+kernel epilogue.  The old decode-step ``lax.scan`` prefill survives only as
+``prefill_scan`` — the exactness reference for the parity tests and the
+baseline BENCH_prefill.json measures against.
 
-``BatchScheduler`` packs incoming requests into fixed batch slots with
-per-slot position tracking — a minimal continuous-batching loop.
+All cache writes are per-slot (per-batch-row scatters at ``cache['pos']``),
+so batch slots hold independent sequences at independent positions:
+
+* ``prefill_into(slot, prompt)`` — admission: chunk-prefills ONE slot's
+  rows from a fresh state while the other slots sit mid-decode, untouched.
+* ``free_slot(slot)`` — eviction: re-zeros a slot's rows and position.
+* ``prefill(tokens)`` — whole-batch chunked prefill (the ``generate`` path).
+
+``BatchScheduler`` is true continuous batching over the fixed slots:
+admit-on-free via per-slot prefill (no ``Engine.reset``, no head-of-line
+blocking on the longest request of an admission wave), per-slot true prompt
+lengths (no left padding — short prompts never attend to pad tokens), one
+batched decode step per loop tick for every active slot, eviction on
+completion.  A host-side position mirror guards every slot against running
+past ``max_seq_len``.
+
 ``Engine.decode_throughput`` measures steady-state decode tokens/s through
-the jitted step — the headline number BENCH_serve.json tracks per PR.
+the jitted step (BENCH_serve.json headline); the chunked-prefill and mixed
+prefill+decode scheduler numbers land in BENCH_prefill.json
+(``benchmarks/run.py --only prefill``).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,25 +55,90 @@ class Engine:
         self.params = serve_tree
         self.batch = scfg.batch_size
         self.cache = tfm.init_cache(cfg, self.batch, scfg.max_seq_len)
-        self._decode = jax.jit(
-            lambda p, c, t: tfm.decode_step(p, c, t, cfg))
+        # one jitted step for both regimes: (B, C) tokens -> last logits;
+        # jax caches a compile per distinct C (decode C=1, the prefill
+        # chunk, and at most one ragged remainder per prompt length)
+        self._step = jax.jit(
+            lambda p, c, t: tfm.prefill_step(p, c, t, cfg))
+        self._decode = self._step                  # (B, 1): decode == C=1
 
-        def _prefill(p, c, toks):                  # toks (B, S)
+        def _scan(p, c, toks):                     # toks (B, S)
             def step(c, t):
                 logits, c = tfm.decode_step(p, c, t[:, None], cfg)
                 return c, logits
             c, logits = jax.lax.scan(step, c, jnp.moveaxis(toks, 1, 0))
             return c, logits[-1]
-        self._prefill = jax.jit(_prefill)
+        self._prefill_scan = jax.jit(_scan)
+        self._write_slot = jax.jit(tfm.update_slot_cache)
+        # fresh batch-1 slot state for admissions/evictions (immutable —
+        # shared freely, never mutated)
+        self._fresh_slot = tfm.init_cache(cfg, 1, scfg.max_seq_len)
 
     def reset(self):
         self.cache = tfm.init_cache(self.cfg, self.batch,
                                     self.scfg.max_seq_len)
 
-    def prefill(self, tokens: jax.Array):
-        """tokens (B, S) -> logits of last position (B, V)."""
-        self.cache, logits = self._prefill(self.params, self.cache, tokens)
+    def free_slot(self, slot: int):
+        """Zero slot's cache rows + position (eviction / pre-admission)."""
+        self.cache = self._write_slot(self.cache, self._fresh_slot,
+                                      jnp.int32(slot))
+
+    def _check_capacity(self, start: int, new_tokens: int, what: str):
+        """Cache writes past max_seq_len are out-of-range scatters — XLA
+        DROPS them silently and the causal mask would then attend stale
+        rows, so every position-advancing entry point validates first."""
+        end = start + new_tokens
+        if end > self.scfg.max_seq_len:
+            raise ValueError(
+                f"{what} would advance slot positions to {end} > "
+                f"max_seq_len={self.scfg.max_seq_len} (start={start}); "
+                f"reset()/free_slot() or raise max_seq_len")
+
+    def prefill(self, tokens: jax.Array, *, chunk: Optional[int] = None,
+                start: Optional[int] = None):
+        """Chunked whole-batch prefill: tokens (B, S) -> last logits (B, V).
+
+        Each chunk is one ``_step`` call — B·chunk flattened rows per
+        quantized linear (the prefill tile regime) instead of the scan
+        reference's S sequential single-token launches.  ``start`` is the
+        caller-known max slot position (skips a per-call device sync for
+        the capacity check — e.g. 0 right after reset()).
+        """
+        if tokens.shape[1] == 0:
+            raise ValueError("prefill of an empty prompt (S == 0)")
+        if start is None:
+            start = int(jax.device_get(jnp.max(self.cache["pos"])))
+        self._check_capacity(start, tokens.shape[1], "prefill")
+        chunk = int(chunk or self.scfg.prefill_chunk)
+        logits = None
+        for off in range(0, tokens.shape[1], chunk):
+            logits, self.cache = self._step(self.params, self.cache,
+                                            tokens[:, off:off + chunk])
         return logits
+
+    def prefill_scan(self, tokens: jax.Array):
+        """Reference prefill: jitted lax.scan of single-token decode steps
+        (the pre-chunking path; parity baseline for tests/BENCH_prefill)."""
+        self.cache, logits = self._prefill_scan(self.params, self.cache,
+                                                tokens)
+        return logits
+
+    def prefill_into(self, slot: int, prompt, *, chunk: Optional[int] = None):
+        """Per-slot admission prefill: run the chunked prefill of a 1-D
+        prompt through slot's rows from a fresh state; every other slot is
+        untouched (they can sit mid-decode).  Returns last logits (V,)."""
+        toks = jnp.asarray(prompt, jnp.int32)[None, :]
+        if toks.shape[1] == 0:
+            raise ValueError(f"prefill_into(slot={slot}): empty prompt")
+        self._check_capacity(0, toks.shape[1], f"prefill_into(slot={slot})")
+        chunk = int(chunk or self.scfg.prefill_chunk)
+        sub = self._fresh_slot
+        logits = None
+        for start in range(0, toks.shape[1], chunk):
+            logits, sub = self._step(self.params, sub,
+                                     toks[:, start:start + chunk])
+        self.cache = self._write_slot(self.cache, sub, jnp.int32(slot))
+        return logits[0]
 
     def sample(self, logits: jax.Array, key) -> jax.Array:
         if self.scfg.temperature <= 0:
@@ -66,15 +149,19 @@ class Engine:
                  key=None) -> np.ndarray:
         """Greedy/temperature generation. prompts (B, S) -> (B, max_new)."""
         key = key if key is not None else jax.random.PRNGKey(0)
-        logits = self.prefill(prompts)
-        out = []
+        start = int(jax.device_get(jnp.max(self.cache["pos"])))
+        self._check_capacity(start, prompts.shape[1] + max_new, "generate")
+        logits = self.prefill(prompts, start=start)
         tok = self.sample(logits, key)
-        for i in range(max_new):
-            out.append(np.asarray(tok))
+        out = [np.asarray(tok)]
+        # token 0 comes from the prefill logits, so only max_new - 1 decode
+        # steps are needed — no trailing decode whose sample is discarded
+        for _ in range(max_new - 1):
             logits, self.cache = self._decode(self.params, self.cache,
                                               tok[:, None])
             key, sub = jax.random.split(key)
             tok = self.sample(logits, sub)
+            out.append(np.asarray(tok))
         return np.stack(out, axis=1)
 
     def decode_throughput(self, steps: int = 16, warmup: int = 2) -> dict:
@@ -82,7 +169,14 @@ class Engine:
 
         Returns {"tokens_per_s", "us_per_step", "batch", "steps"};
         tokens/s counts all batch slots (batch · steps / wall time).
+        The measurement advances a LOCAL cache (the engine's committed
+        state is untouched), so slot positions are validated up front:
+        silently wrapping past max_seq_len would time scatter writes that
+        never land (out-of-range updates are dropped) and corrupt the
+        number.
         """
+        self._check_capacity(int(jax.device_get(jnp.max(self.cache["pos"]))),
+                             max(1, warmup) + steps, "decode_throughput")
         tok = jnp.ones((self.batch, 1), jnp.int32)
         cache = self.cache
         for _ in range(max(1, warmup)):     # ≥1: compile must stay untimed
@@ -108,42 +202,91 @@ class Request:
 
 
 class BatchScheduler:
-    """Minimal continuous batching over fixed slots (decode-only packing)."""
+    """Continuous batching over the engine's fixed slots.
+
+    Each loop tick admits queued requests into free slots (per-slot chunked
+    prefill at the request's TRUE length — no left padding, no reset of the
+    other slots) and then runs ONE batched decode step for every slot.
+    Completed requests are evicted immediately, freeing their slot for the
+    next admission — no head-of-line blocking on the longest request.
+    """
 
     def __init__(self, engine: Engine):
         self.engine = engine
         self.slots: list[Optional[Request]] = [None] * engine.batch
         self.queue: list[Request] = []
+        self._next_tok = np.zeros((engine.batch,), np.int32)
+        # host mirror of per-slot cache positions: overflow guard without a
+        # device sync per tick
+        self._pos = [0] * engine.batch
+        self._key = jax.random.PRNGKey(0)
 
     def submit(self, req: Request):
         self.queue.append(req)
 
-    def _admit(self):
-        for i, s in enumerate(self.slots):
-            if s is None and self.queue:
-                self.slots[i] = self.queue.pop(0)
+    # -- internals ---------------------------------------------------------
+
+    def _sample(self, logits) -> np.ndarray:        # (B, V) -> (B,)
+        self._key, sub = jax.random.split(self._key)
+        return np.asarray(self.engine.sample(logits, sub))
+
+    def _finish(self, i: int) -> Request:
+        req = self.slots[i]
+        req.done = True
+        self.slots[i] = None
+        self.engine.free_slot(i)
+        self._pos[i] = 0
+        return req
+
+    def _admit(self, finished: list):
+        eng = self.engine
+        for i in range(eng.batch):
+            if self.slots[i] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            need = len(req.prompt) + req.max_new
+            if need > eng.scfg.max_seq_len:
+                raise ValueError(
+                    f"request {req.rid}: prompt+max_new={need} exceeds "
+                    f"max_seq_len={eng.scfg.max_seq_len}")
+            logits = eng.prefill_into(i, req.prompt)
+            tok = int(self._sample(logits[None, :])[0])
+            req.generated.append(tok)
+            self._pos[i] = len(req.prompt)
+            self.slots[i] = req
+            if len(req.generated) >= req.max_new:
+                finished.append(self._finish(i))
+            else:
+                self._next_tok[i] = tok
 
     def run(self) -> list[Request]:
-        """Drain the queue (simple generation loop per admission wave)."""
-        finished = []
-        while self.queue or any(self.slots):
-            self._admit()
-            active = [s for s in self.slots if s is not None]
+        """Drain the queue; returns completed requests in finish order."""
+        eng = self.engine
+        max_seq = eng.scfg.max_seq_len
+        finished: list[Request] = []
+        while self.queue or any(s is not None for s in self.slots):
+            self._admit(finished)
+            active = [i for i, s in enumerate(self.slots) if s is not None]
             if not active:
-                break
-            maxlen = max(len(r.prompt) for r in active)
-            b = self.engine.batch
-            prompts = np.zeros((b, maxlen), np.int32)
-            for i, s in enumerate(self.slots):
-                if s is not None:
-                    prompts[i, -len(s.prompt):] = s.prompt
-            self.engine.reset()
-            steps = max(r.max_new for r in active)
-            toks = self.engine.generate(jnp.asarray(prompts), steps)
-            for i, s in enumerate(self.slots):
-                if s is not None:
-                    s.generated = list(toks[i][:s.max_new])
-                    s.done = True
-                    finished.append(s)
-                    self.slots[i] = None
+                continue              # everything admitted was max_new == 1
+            for i in range(eng.batch):
+                if self.slots[i] is None and self._pos[i] + 1 >= max_seq:
+                    eng.free_slot(i)  # recycle an idle slot's garbage rows
+                    self._pos[i] = 0
+                elif self._pos[i] + 1 > max_seq:
+                    raise RuntimeError(
+                        f"slot {i} position {self._pos[i]} would overflow "
+                        f"max_seq_len={max_seq}")
+            logits, eng.cache = eng._decode(
+                eng.params, eng.cache,
+                jnp.asarray(self._next_tok)[:, None])
+            toks = self._sample(logits)
+            for i in range(eng.batch):
+                self._pos[i] += 1
+            for i in active:
+                req = self.slots[i]
+                req.generated.append(int(toks[i]))
+                self._next_tok[i] = toks[i]
+                if len(req.generated) >= req.max_new:
+                    finished.append(self._finish(i))
         return finished

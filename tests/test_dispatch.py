@@ -131,6 +131,37 @@ def test_select_tiles_regimes():
     assert tb3 == 8 and tblk3 == 8 and tn3 == 128
 
 
+def test_autotune_cache_roundtrip(tmp_path):
+    """Satellite: autotune(..., write=) persists measured tiles; the cache
+    loads back over the static table and select_tiles honors it."""
+    from repro.kernels import dispatch
+    snapshot = dict(dispatch.TUNED_TILES)
+    try:
+        path = tmp_path / "autotune_cache.json"
+        res = dispatch.autotune(4, 128, 40, reps=1,
+                                backend="pallas_interpret",
+                                candidates=((8, 8, 128), (8, 8, 256)),
+                                write=str(path))
+        assert path.exists()
+        assert res["key"][0] == "decode"           # b=4 -> decode regime
+        assert dispatch.TUNED_TILES[res["key"]] == res["tiles"]
+        dispatch.TUNED_TILES.clear()
+        loaded = dispatch.load_autotune_cache(str(path))
+        assert loaded >= 1
+        assert dispatch.TUNED_TILES[res["key"]] == tuple(res["tiles"])
+        # select_tiles prefers the tuned entry (shape-clamped as usual)
+        nb = -(-40 // 5)                           # 8 blocks -> bucket 8
+        got = dispatch.select_tiles(4, nb, 128)
+        tb, tblk, tn = res["tiles"]
+        assert got == (min(tb, 8), min(tblk, 8), min(tn, 128))
+        # a different bucket still falls back to the static regime row
+        assert dispatch.select_tiles(256, 800, 4096)[0] == \
+            AUTOTUNE_TABLE[-1][2]
+    finally:
+        dispatch.TUNED_TILES.clear()
+        dispatch.TUNED_TILES.update(snapshot)
+
+
 @pytest.mark.parametrize("backend", ["pallas_interpret", "scatter"])
 def test_fused_epilogue_scale_bias(backend):
     a = random_ternary(jax.random.fold_in(KEY, 5), (128, 37))

@@ -89,6 +89,36 @@ def test_rsr_serve_matches_dense_serve(arch):
     assert np.abs(np.asarray(lg1) - np.asarray(lg2)).max() / scale < 2e-4
 
 
+@pytest.mark.parametrize("arch", ["recurrentgemma-2b", "mamba2-780m",
+                                  "deepseek-v2-lite-16b"])
+def test_chunked_prefill_matches_decode_steps(arch):
+    """prefill_step with C > 1 must reproduce the single-token decode scan
+    across layer families (ring-buffer window wrap, RG-LRU/SSD recurrent
+    state, absorbed MLA).  Tight allclose, not bitwise: XLA's dot lowering
+    reassociates reductions per row count for some shapes (the bitwise
+    guarantee is asserted on the serve config in test_serve)."""
+    cfg = dataclasses.replace(get_config(arch).reduced(),
+                              capacity_factor=64.0)
+    params = tfm.init_params(cfg, KEY)
+    sp = tfm.serve_params(params, cfg)
+    S = 24 if arch == "recurrentgemma-2b" else 12   # 24 > window: ring wrap
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    c_ref = tfm.init_cache(cfg, B, max_seq=S + 6)
+    for t in range(S):
+        lg_ref, c_ref = tfm.decode_step(sp, c_ref, toks[:, t:t + 1], cfg)
+    for chunk in (5, S):
+        c = tfm.init_cache(cfg, B, max_seq=S + 6)
+        for st in range(0, S, chunk):
+            lg, c = tfm.prefill_step(sp, c, toks[:, st:st + chunk], cfg)
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_ref),
+                                   rtol=1e-5, atol=1e-5)
+        for a, bb in zip(jax.tree.leaves(c_ref), jax.tree.leaves(c)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(bb, np.float32),
+                                       rtol=1e-5, atol=1e-5)
+
+
 def test_window_attention_restricts_context():
     """With window w, token i must be independent of tokens < i - w + 1."""
     cfg = dataclasses.replace(get_config("recurrentgemma-2b").reduced(),
