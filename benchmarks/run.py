@@ -32,6 +32,12 @@ column carries the headline quantity of that figure (speedup, ratio, k*).
                 throughput over mixed prefill+decode traffic
                 with per-request token equality — written to
                 BENCH_prefill.json (tracked per PR)
+  paged_bench   the block-paged KV trajectory: paged-vs-dense
+                token parity, shared-prefix admission hit-rate
+                and scheduler tokens/s vs dense re-prefill, and
+                an equal-KV-memory mixed-traffic run the dense
+                layout must reject at submit() — written to the
+                ``paged`` section of BENCH_prefill.json
 """
 from __future__ import annotations
 
@@ -583,9 +589,195 @@ def prefill_bench(json_path: str = "BENCH_prefill.json", smoke: bool = False):
     emit(f"prefill_scheduler_{len(done)}req", dt * 1e6,
          f"tokens_per_s={total/dt:.1f};per_request_equal={equal}")
 
+    _merge_json(json_path, result)
+    return result
+
+
+def _merge_json(json_path: str, result: dict):
+    """Write `result` to json_path, preserving any top-level key of an
+    existing file that `result` doesn't provide (prefill_bench and
+    paged_bench co-own BENCH_prefill.json; either can run alone without
+    clobbering the other's sections)."""
+    import json
+    import os
+    if os.path.exists(json_path):
+        try:
+            with open(json_path) as f:
+                old = json.load(f)
+            for k, v in old.items():
+                result.setdefault(k, v)
+        except (OSError, ValueError):
+            pass
     with open(json_path, "w") as f:
         json.dump(result, f, indent=1, sort_keys=True)
     print(f"wrote {json_path}", flush=True)
+
+
+def paged_bench(json_path: str = "BENCH_prefill.json", smoke: bool = False):
+    """Paged-KV trajectory benchmark -> the ``paged`` section of
+    BENCH_prefill.json (``--only paged``).
+
+    Three subsections, all on the reduced serve config (CPU-tractable;
+    the same harness measures the compiled kernels unchanged on TPU):
+
+    * ``parity``: block-paged generate must equal dense generate
+      token-for-token (asserted; the bitwise bar lives in tests).
+    * ``shared_prefix``: continuous-batching traffic where every request
+      shares a long prompt prefix — paged admissions hash-hit the resident
+      prefix blocks and prefill only the tail, so scheduler tokens/s must
+      be >= the dense layout re-prefilling the prefix per request
+      (asserted at full size); the admission hit-rate comes from the
+      allocator's counters.
+    * ``equal_memory``: at the SAME total KV token budget (pool tokens ==
+      dense batch * max_seq), mixed traffic whose per-request
+      prompt+max_new exceeds the dense per-slot row — the dense scheduler
+      must reject every request at submit() while the paged engine admits
+      and completes them by pooling blocks across slots (and deduping the
+      shared prefix).
+    """
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from repro.config import ServeConfig, get_config
+    from repro.models import transformer as tfm
+    from repro.serve.engine import BatchScheduler, Engine, Request
+
+    cfg = dataclasses.replace(
+        get_config("falcon3-3b-1.58bit").reduced(), vocab_size=256,
+        num_layers=2)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    tree = tfm.serve_params(params, cfg)
+    B = 2
+    blk = 8
+    max_seq = 48 if smoke else 96
+    scfg_dense = ServeConfig(max_seq_len=max_seq, batch_size=B,
+                             prefill_chunk=8)
+    scfg_paged = dataclasses.replace(scfg_dense, kv_block_size=blk)
+    rng = np.random.default_rng(0)
+
+    # ---- parity: paged generate == dense generate ------------------------
+    e_d = Engine(cfg, tree, scfg_dense)
+    e_p = Engine(cfg, tree, scfg_paged)
+    prompts = jnp.asarray(rng.integers(1, cfg.vocab_size, (B, 9)),
+                          jnp.int32)
+    toks_equal = bool(np.array_equal(e_d.generate(prompts, 8),
+                                     e_p.generate(prompts, 8)))
+    assert toks_equal, "paged generate diverged from dense"
+    emit("paged_parity", 0.0, f"tokens_equal={toks_equal}")
+
+    # ---- shared-prefix traffic: hit-rate + tokens/s vs dense re-prefill --
+    n_req = 4 if smoke else 8
+    prefix_len = 24 if smoke else 64
+    tail_len, max_new = 3, 4 if smoke else 8
+    prefix = rng.integers(1, cfg.vocab_size, prefix_len).astype(np.int32)
+
+    def traffic():
+        # staggered max_new: simultaneous evictions would briefly drain the
+        # pool and evict the prefix registration with it (sharing is
+        # resident-only; the LRU free-block cache is a ROADMAP follow-on),
+        # and real traffic doesn't finish in lockstep anyway
+        return [Request(rid=i, prompt=np.concatenate(
+                    [prefix, rng2.integers(1, cfg.vocab_size,
+                                           tail_len).astype(np.int32)]),
+                        max_new=max_new + 2 * (i % 3))
+                for i in range(n_req)]
+
+    row = {}
+    for label, scfg in (("dense", scfg_dense), ("paged", scfg_paged)):
+        eng = Engine(cfg, tree, scfg)
+        for timed in (False, True):         # first pass absorbs compiles
+            rng2 = np.random.default_rng(1)
+            eng.reset()
+            sched = BatchScheduler(eng)
+            for r in traffic():
+                sched.submit(r)
+            t0 = time.perf_counter()
+            done = sched.run()
+            dt = time.perf_counter() - t0
+        assert len(done) == n_req and not any(r.error for r in done)
+        total = sum(len(r.prompt) + len(r.generated) for r in done)
+        row[label] = {"tokens_per_s": total / dt, "us": dt * 1e6}
+        if label == "paged":
+            st = eng.pool.stats
+            row["admission_hit_rate"] = (st["hit_tokens"] /
+                                         max(1, st["lookup_tokens"]))
+            row["hit_tokens"] = st["hit_tokens"]
+            row["cow_copies"] = st["cow_copies"]
+            assert eng.pool.free_count == eng.pool.num_blocks, \
+                "blocks leaked after a full scheduler run"
+    row["speedup_vs_dense"] = (row["paged"]["tokens_per_s"] /
+                               row["dense"]["tokens_per_s"])
+    if not smoke:
+        assert row["admission_hit_rate"] > 0.5, row
+        assert row["speedup_vs_dense"] >= 1.0, \
+            ("prefix-hit admissions must not be slower than dense "
+             "re-prefill", row)
+    emit(f"paged_shared_prefix_{n_req}req", row["paged"]["us"],
+         f"dense_us={row['dense']['us']:.0f};"
+         f"speedup={row['speedup_vs_dense']:.2f}x;"
+         f"hit_rate={row['admission_hit_rate']:.2f}")
+
+    # ---- equal-memory mixed traffic the dense layout cannot admit --------
+    # pool budget: num_blocks * blk KV tokens total == dense B * max_seq'
+    num_blocks = 6 if smoke else 12
+    dense_seq = num_blocks * blk // B           # equal-memory dense rows
+    need = (dense_seq + blk) + max_new          # per-request demand
+    scfg_small_dense = dataclasses.replace(scfg_dense, max_seq_len=dense_seq)
+    scfg_pool = dataclasses.replace(
+        scfg_paged, kv_num_blocks=num_blocks)
+    shared = rng.integers(1, cfg.vocab_size,
+                          dense_seq - max_new).astype(np.int32)
+
+    def mixed():
+        return [Request(rid=i, prompt=np.concatenate(
+                    [shared, rng3.integers(1, cfg.vocab_size,
+                                           need - max_new - len(shared))
+                     .astype(np.int32)]), max_new=max_new)
+                for i in range(B)]
+
+    rng3 = np.random.default_rng(2)
+    e_small = Engine(cfg, tree, scfg_small_dense)
+    sd = BatchScheduler(e_small)
+    for r in mixed():
+        sd.submit(r)
+    dense_done = sd.run()
+    dense_rejected = sum(1 for r in dense_done if r.error)
+    assert dense_rejected == B, \
+        "equal-memory dense layout must reject the mixed traffic"
+
+    rng3 = np.random.default_rng(2)
+    e_pool = Engine(cfg, tree, scfg_pool)
+    sp_ = BatchScheduler(e_pool)
+    for r in mixed():
+        sp_.submit(r)
+    paged_done = sp_.run()
+    paged_ok = sum(1 for r in paged_done
+                   if not r.error and len(r.generated) == max_new)
+    assert paged_ok == B, "paged engine must admit and complete the traffic"
+    mem = {
+        "kv_token_budget": num_blocks * blk,
+        "dense_max_seq_equivalent": dense_seq,
+        "request_prompt_plus_max_new": need,
+        "dense_rejected": dense_rejected,
+        "paged_completed": paged_ok,
+        "paged_hit_tokens": e_pool.pool.stats["hit_tokens"],
+    }
+    emit(f"paged_equal_memory_{B}req", 0.0,
+         f"dense_rejected={dense_rejected};paged_completed={paged_ok};"
+         f"budget_tokens={num_blocks * blk};need={need}>{dense_seq}")
+
+    result = {"paged": {
+        "meta": {"schema": "bench_paged_v1", "smoke": smoke,
+                 "kv_block_size": blk, "batch": B, "max_seq_len": max_seq,
+                 "reduced_dims": {"d_model": cfg.d_model, "d_ff": cfg.d_ff,
+                                  "num_layers": cfg.num_layers},
+                 "note": ("CPU runs the Pallas interpreter: functional "
+                          "trajectory numbers, not TPU perf")},
+        "parity_tokens_equal": toks_equal,
+        "shared_prefix": row,
+        "equal_memory": mem,
+    }}
+    _merge_json(json_path, result)
     return result
 
 
@@ -616,6 +808,7 @@ def main() -> None:
         "serve": lambda: serve_bench(args.json, smoke=args.smoke),
         "prefill": lambda: prefill_bench(args.prefill_json,
                                          smoke=args.smoke),
+        "paged": lambda: paged_bench(args.prefill_json, smoke=args.smoke),
     }
     for name, fn in tables.items():
         if args.only and args.only not in name:

@@ -1,22 +1,39 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 suite + serve-path smoke benchmark.
+# CI entry point: tier-1 suite + serve-path smoke benchmarks.
 #
-#   scripts/ci.sh            # full tier-1 + smoke bench
-#   scripts/ci.sh --fast     # tier-1 only
+#   scripts/ci.sh            # fast tier (-m "not slow") + smoke benches
+#   scripts/ci.sh --fast     # fast-tier tests only, no benches
+#   CI_SLOW=1 scripts/ci.sh  # FULL tier-1 (incl. slow model-family parity
+#                            # sweeps) + smoke benches
+#
+# Interpret-mode Pallas makes the full suite exceed the container's CI
+# budget, so the heavy cross-family parity sweeps are marked `slow`
+# (pyproject [tool.pytest.ini_options].markers) and excluded by default;
+# they still run under `CI_SLOW=1` and under the bare tier-1 command
+# (`python -m pytest -x -q`, no marker filter) used for release checks.
 #
 # The smoke benchmarks exercise the real serve path (dispatch -> Pallas
 # kernel, interpret mode on CPU) at small shapes: serve asserts backend
 # equality, prefill asserts chunked-prefill parity vs the scan reference
-# and scheduler-vs-per-request token equality.  The committed
-# BENCH_serve.json / BENCH_prefill.json are produced by the full runs
-# (`python benchmarks/run.py --only serve|prefill`) and tracked per PR.
+# and scheduler-vs-per-request token equality, paged asserts paged-vs-
+# dense token equality plus a shared-prefix admission the dense layout
+# rejects.  The committed BENCH_serve.json / BENCH_prefill.json are
+# produced by the full runs (`python benchmarks/run.py --only
+# serve|prefill|paged`) and tracked per PR.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1: pytest =="
-python -m pytest -x -q
+MARKER=(-m "not slow")
+if [[ "${CI_SLOW:-0}" == "1" ]]; then
+    MARKER=()
+    echo "== tier-1: pytest (full, CI_SLOW=1) =="
+else
+    echo "== tier-1: pytest (fast tier; CI_SLOW=1 for the full pass) =="
+fi
+# ${arr[@]+...} guard: expanding an empty array trips `set -u` on bash < 4.4
+python -m pytest -x -q ${MARKER[@]+"${MARKER[@]}"}
 
 if [[ "${1:-}" != "--fast" ]]; then
     echo "== serve smoke benchmark =="
@@ -24,6 +41,9 @@ if [[ "${1:-}" != "--fast" ]]; then
         --json /tmp/BENCH_serve_smoke.json
     echo "== prefill smoke benchmark =="
     PYTHONPATH="src:." python benchmarks/run.py --only prefill --smoke \
+        --prefill-json /tmp/BENCH_prefill_smoke.json
+    echo "== paged smoke benchmark =="
+    PYTHONPATH="src:." python benchmarks/run.py --only paged --smoke \
         --prefill-json /tmp/BENCH_prefill_smoke.json
 fi
 

@@ -163,6 +163,12 @@ class ServeConfig:
     temperature: float = 0.0          # 0 -> greedy
     prefill_chunk: int = 32           # tokens per chunked-prefill step
                                       # (B·chunk rows per quantized linear)
+    # --- paged KV (0 -> dense per-slot rows) ---
+    kv_block_size: int = 0            # tokens per KV block; >0 enables the
+                                      # block-paged cache with shared-prefix
+                                      # reuse (repro.serve.paging)
+    kv_num_blocks: int = 0            # global pool size; 0 -> auto (the
+                                      # dense-equivalent batch * blocks/slot)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -55,6 +55,7 @@ from __future__ import annotations
 
 import functools
 import json
+import logging
 import os
 import time
 from typing import Optional, Union
@@ -111,7 +112,27 @@ AUTOTUNE_TABLE = (
 TUNED_TILES: dict[tuple[str, int, int], tuple[int, int, int]] = {}
 
 AUTOTUNE_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
-DEFAULT_AUTOTUNE_CACHE = "autotune_cache.json"
+
+
+def _default_cache_path() -> str:
+    """Anchored default for autotune_cache.json — never the CWD (a stray
+    cache in an unrelated working directory must not silently steer
+    kernel tiles; $REPRO_AUTOTUNE_CACHE outranks this).  In a src-layout
+    checkout (three levels above this module holds pyproject.toml) the
+    file lives at the repo root, where a TPU session commits it; for an
+    installed package it falls back to a per-user cache dir instead of
+    writing into site-packages' parent."""
+    root = os.path.abspath(os.path.join(
+        os.path.dirname(__file__), os.pardir, os.pardir, os.pardir))
+    if os.path.exists(os.path.join(root, "pyproject.toml")):
+        return os.path.join(root, "autotune_cache.json")
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro-rsr",
+                        "autotune_cache.json")
+
+
+DEFAULT_AUTOTUNE_CACHE = _default_cache_path()
+
+_log = logging.getLogger(__name__)
 
 
 def _round_up(v: int, mult: int) -> int:
@@ -149,11 +170,13 @@ def select_tiles(b: int, nb: int, n: int) -> tuple[int, int, int]:
 
 
 def save_autotune_cache(path: Optional[str] = None) -> str:
-    """Dump TUNED_TILES to JSON (default: $REPRO_AUTOTUNE_CACHE or
-    ./autotune_cache.json) so a hardware session's measurements persist.
+    """Dump TUNED_TILES to JSON (default: $REPRO_AUTOTUNE_CACHE, else the
+    repo-anchored autotune_cache.json) so a hardware session's measurements
+    persist.
     The payload records the measuring host backend; loads on different
     hardware are refused (CPU-interpreter tiles must not steer TPU runs)."""
     path = path or os.environ.get(AUTOTUNE_CACHE_ENV, DEFAULT_AUTOTUNE_CACHE)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     payload = {
         "schema": "autotune_cache_v1",
         "host_backend": jax.default_backend(),
@@ -171,7 +194,10 @@ def load_autotune_cache(path: Optional[str] = None, *, clear: bool = False,
                         force: bool = False) -> int:
     """Load measured tiles over the static table; returns the entry count.
     Called automatically at import when the cache file exists.  Entries
-    measured on a different host backend are skipped unless ``force``."""
+    measured on a different host backend are skipped unless ``force``.
+    The default path is $REPRO_AUTOTUNE_CACHE, else the repo-anchored
+    DEFAULT_AUTOTUNE_CACHE — never the CWD.  Every applied overlay is
+    logged so an operator can tell which file steered the tiles."""
     path = path or os.environ.get(AUTOTUNE_CACHE_ENV, DEFAULT_AUTOTUNE_CACHE)
     if clear:
         TUNED_TILES.clear()
@@ -181,11 +207,16 @@ def load_autotune_cache(path: Optional[str] = None, *, clear: bool = False,
         payload = json.load(f)
     host = payload.get("host_backend")
     if not force and host is not None and host != jax.default_backend():
+        _log.info("ignoring autotune cache %s: measured on host backend "
+                  "%r, running on %r", path, host, jax.default_backend())
         return 0
     entries = payload.get("entries", [])
     for e in entries:
         TUNED_TILES[(str(e["regime"]), int(e["nb_bucket"]),
                      int(e["n_bucket"]))] = tuple(int(v) for v in e["tiles"])
+    if entries:
+        _log.info("loaded %d tuned tile entries over the static table "
+                  "from %s", len(entries), path)
     return len(entries)
 
 
@@ -348,10 +379,10 @@ def autotune(b: int, n: int, n_out: int, *, k: int = 5,
 
 
 # load any persisted measurements over the static table (ROADMAP: a TPU
-# session's autotune results must survive the session)
-if os.path.exists(os.environ.get(AUTOTUNE_CACHE_ENV,
-                                 DEFAULT_AUTOTUNE_CACHE)):
-    load_autotune_cache()
+# session's autotune results must survive the session).  The default path
+# is repo-anchored, so importing from an arbitrary CWD cannot pick up a
+# stray cache file (the load itself is a no-op when the file is absent).
+load_autotune_cache()
 
 
 def _main():

@@ -31,6 +31,11 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--no-rsr", action="store_true",
                     help="serve dense-dequant instead of RSR indices")
+    ap.add_argument("--kv-block", type=int, default=0,
+                    help="KV block size; > 0 serves from the block-paged "
+                         "cache with shared-prefix reuse")
+    ap.add_argument("--kv-blocks", type=int, default=0,
+                    help="paged pool size in blocks (0 = dense-equivalent)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -55,7 +60,9 @@ def main():
     engine = Engine(cfg, serve_tree,
                     ServeConfig(max_seq_len=args.max_seq,
                                 batch_size=args.batch,
-                                temperature=args.temperature))
+                                temperature=args.temperature,
+                                kv_block_size=args.kv_block,
+                                kv_num_blocks=args.kv_blocks))
     sched = BatchScheduler(engine)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
@@ -68,6 +75,12 @@ def main():
     dt = time.time() - t0
     toks = sum(len(r.generated) for r in done)
     print(f"served {len(done)} requests / {toks} tokens in {dt:.2f}s")
+    if engine.paged:
+        st = engine.pool.stats
+        hit = st["hit_tokens"] / max(1, st["lookup_tokens"])
+        print(f"paged kv: block={engine.layout.block_size} "
+              f"pool={engine.layout.num_blocks} "
+              f"prefix_hit_rate={hit:.2f} cow={st['cow_copies']}")
     for r in done:
         print(f"  req {r.rid}: {r.generated[:8]}...")
 

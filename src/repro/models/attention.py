@@ -14,6 +14,18 @@ Decode caches:
   mla  : latent c_kv (B, S_max, kv_lora) + k_pe (B, S_max, rope_dim) — the
          MLA compression is preserved in the cache, and decode uses the
          *absorbed* form (W_UK folded into the query, W_UV into the output).
+
+Paged caches (``table`` is not None): the same three caches re-homed into a
+global block pool (``repro.serve.paging``).  Layer storage becomes a pool
+array with a leading physical-block axis — gqa/local ``(NB+1, KVH, bs, hd)``,
+mla ``(NB+1, bs, r)`` — and reads/writes go through the per-slot block
+``table`` of physical ids: position p (or ring slot r) writes pool block
+``table[b, p // bs]`` at offset ``p % bs``, and attention gathers the
+table's blocks back into the SAME dense (B, KVH, S, hd) view the dense path
+carries, then runs the identical scoring code.  That gather-then-identical-
+math structure is what makes the paged path bitwise-equal to the dense path
+(the parity bar in tests/test_serve.py); a Pallas paged-attention kernel
+that skips the materialized view is the ROADMAP follow-on.
 """
 from __future__ import annotations
 
@@ -38,6 +50,16 @@ def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
     if groups == 1:
         return k
     return jnp.repeat(k, groups, axis=2)
+
+
+def _gather_blocks(pool: jax.Array, table: jax.Array) -> jax.Array:
+    """Paged read: pool (NB, KVH, bs, hd) × table (B, MB) -> the dense
+    (B, KVH, MB*bs, hd) view (logical block j of row b is pool[table[b,j]]).
+    """
+    g = pool[table]                                 # (B, MB, KVH, bs, hd)
+    g = jnp.swapaxes(g, 1, 2)                       # (B, KVH, MB, bs, hd)
+    b, kvh, mb, bs, hd = g.shape
+    return g.reshape(b, kvh, mb * bs, hd)
 
 
 def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
@@ -177,9 +199,12 @@ def init_gqa(key, cfg: ModelConfig) -> dict:
 
 def gqa_apply(p: dict, x: jax.Array, *, cfg: ModelConfig, lin,
               window: int = 0, positions: Optional[jax.Array] = None,
-              cache: Optional[dict] = None, pos: Optional[jax.Array] = None):
+              cache: Optional[dict] = None, pos: Optional[jax.Array] = None,
+              table: Optional[jax.Array] = None):
     """Full-seq when cache is None, else cached chunk step (C = x.shape[1]
     tokens appended at per-slot positions `pos`; C == 1 is classic decode).
+    With ``table`` the cache is a paged block pool — reads/writes are
+    indirected through the block table, the math is unchanged.
 
     Returns (out, new_cache)."""
     b, s, _ = x.shape
@@ -221,25 +246,41 @@ def gqa_apply(p: dict, x: jax.Array, *, cfg: ModelConfig, lin,
         # Ring buffer: a chunk's writes can wrap the window and evict keys
         # an earlier in-chunk query still needs, so the write/attend core
         # stays per-step (the single-token decode computation under
-        # lax.scan) while the projections above/below run batched.
+        # lax.scan) while the projections above/below run batched.  Paged
+        # mode carries the POOL arrays through the scan and indirects each
+        # per-step write/read through the ring slice of the block table —
+        # the ring length (mb_ring * block_size) equals the dense ring, so
+        # the slot arithmetic and masks are unchanged.
+        blk_sz = cache["k"].shape[2] if table is not None else 0
+        slots = table.shape[1] * blk_sz if table is not None else smax
+
         def step(carry, inp):
             ck, cv = carry
             kt, vt, qt, pt = inp           # (b,kvh,hd) ×2, (b,h,hd), (b,)
-            slot_t = pt % smax
-            ck = ck.at[jnp.arange(b), :, slot_t].set(kt.astype(ck.dtype))
-            cv = cv.at[jnp.arange(b), :, slot_t].set(vt.astype(cv.dtype))
+            slot_t = pt % slots
+            if table is not None:
+                blk = jnp.take_along_axis(
+                    table, (slot_t // blk_sz)[:, None], axis=1)[:, 0]
+                ck = ck.at[blk, :, slot_t % blk_sz].set(kt.astype(ck.dtype))
+                cv = cv.at[blk, :, slot_t % blk_sz].set(vt.astype(cv.dtype))
+                ckd = _gather_blocks(ck, table)
+                cvd = _gather_blocks(cv, table)
+            else:
+                ck = ck.at[jnp.arange(b), :, slot_t].set(kt.astype(ck.dtype))
+                cv = cv.at[jnp.arange(b), :, slot_t].set(vt.astype(cv.dtype))
+                ckd, cvd = ck, cv
             qg = (qt / math.sqrt(hd)).astype(ck.dtype)
             qg = qg.reshape(b, kvh, groups, hd)            # group by kv head
-            s_ = jnp.einsum("bhgd,bhkd->bhgk", qg, ck,
+            s_ = jnp.einsum("bhgd,bhkd->bhgk", qg, ckd,
                             preferred_element_type=jnp.float32)
-            kpos = jnp.arange(smax)[None, :]
+            kpos = jnp.arange(slots)[None, :]
             # valid = last min(pos+1, window) slots
-            age = (pt[:, None] - kpos) % smax
-            valid = (age >= 0) & (age < jnp.minimum(pt[:, None] + 1, smax))
+            age = (pt[:, None] - kpos) % slots
+            valid = (age >= 0) & (age < jnp.minimum(pt[:, None] + 1, slots))
             valid = valid & ((pt[:, None] - age) >= 0)
             s_ = jnp.where(valid[:, None, None, :], s_, NEG_INF)
             pr = jax.nn.softmax(s_, axis=-1).astype(cv.dtype)
-            ot = jnp.einsum("bhgk,bhkd->bhgd", pr, cv,
+            ot = jnp.einsum("bhgk,bhkd->bhgd", pr, cvd,
                             preferred_element_type=jnp.float32)
             return (ck, cv), ot
 
@@ -251,28 +292,48 @@ def gqa_apply(p: dict, x: jax.Array, *, cfg: ModelConfig, lin,
         out = lin(p["wo"], out.reshape(b, s, h * hd))
         return out, {"k": ck, "v": cv}
 
-    b_idx = jnp.arange(b)[:, None]
-    ck = cache["k"].at[b_idx, :, positions].set(k.astype(cache["k"].dtype))
-    cv = cache["v"].at[b_idx, :, positions].set(v.astype(cache["v"].dtype))
+    if table is not None:
+        # paged write: position p of row b lands in pool block
+        # table[b, p // bs] at offset p % bs, then the table's blocks are
+        # gathered back into the dense view the scoring code expects
+        blk_sz = cache["k"].shape[2]
+        blk = jnp.take_along_axis(table, positions // blk_sz, axis=1)
+        off = positions % blk_sz
+        ck = cache["k"].at[blk, :, off].set(k.astype(cache["k"].dtype))
+        cv = cache["v"].at[blk, :, off].set(v.astype(cache["v"].dtype))
+        ckd = _gather_blocks(ck, table)
+        cvd = _gather_blocks(cv, table)
+        smax = ckd.shape[2]
+    else:
+        b_idx = jnp.arange(b)[:, None]
+        ck = cache["k"].at[b_idx, :, positions].set(
+            k.astype(cache["k"].dtype))
+        cv = cache["v"].at[b_idx, :, positions].set(
+            v.astype(cache["v"].dtype))
+        ckd, cvd = ck, cv
     qg = (q / math.sqrt(hd)).astype(ck.dtype)      # (b,C,h,hd)
     qg = qg.reshape(b, s, kvh, groups, hd)         # group by kv head
-    s_ = jnp.einsum("bchgd,bhkd->bchgk", qg, ck,
+    s_ = jnp.einsum("bchgd,bhkd->bchgk", qg, ckd,
                     preferred_element_type=jnp.float32)   # (b,C,kvh,g,S)
     kpos = jnp.arange(smax)[None, None, :]
     mask = kpos <= positions[:, :, None]                  # (b,C,S) causal
     s_ = jnp.where(mask[:, :, None, None, :], s_, NEG_INF)
     pr = jax.nn.softmax(s_, axis=-1).astype(cv.dtype)
-    out = jnp.einsum("bchgk,bhkd->bchgd", pr, cv,
+    out = jnp.einsum("bchgk,bhkd->bchgd", pr, cvd,
                      preferred_element_type=jnp.float32).astype(x.dtype)
     out = lin(p["wo"], out.reshape(b, s, h * hd))
     return out, {"k": ck, "v": cv}
 
 
 def init_gqa_cache(cfg: ModelConfig, batch: int, max_seq: int, *,
-                   window: int = 0, abstract: bool = False):
+                   window: int = 0, abstract: bool = False, layout=None):
     hd = cfg.resolved_head_dim
-    slots = min(max_seq, window) if window > 0 else max_seq
-    shape = (batch, cfg.num_kv_heads, slots, hd)   # (B,H,S,D) — see decode
+    if layout is not None:             # paged pool (+1 trash block, see
+        shape = (layout.num_blocks + 1, cfg.num_kv_heads,   # serve.paging)
+                 layout.block_size, hd)
+    else:
+        slots = min(max_seq, window) if window > 0 else max_seq
+        shape = (batch, cfg.num_kv_heads, slots, hd)  # (B,H,S,D) — see decode
     dt = jnp.dtype(cfg.dtype)
     if abstract:
         return {"k": jax.ShapeDtypeStruct(shape, dt),
@@ -301,7 +362,8 @@ def init_mla(key, cfg: ModelConfig) -> dict:
 
 
 def mla_apply(p: dict, x: jax.Array, *, cfg: ModelConfig, lin,
-              cache: Optional[dict] = None, pos: Optional[jax.Array] = None):
+              cache: Optional[dict] = None, pos: Optional[jax.Array] = None,
+              table: Optional[jax.Array] = None):
     b, s, _ = x.shape
     h = cfg.num_heads
     dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
@@ -329,27 +391,41 @@ def mla_apply(p: dict, x: jax.Array, *, cfg: ModelConfig, lin,
     positions = posv[:, None] + jnp.arange(s)[None, :]        # (B, C)
     q_pe = nn.apply_rope(q_pe, positions, theta=cfg.rope_theta)
     k_pe = nn.apply_rope(k_pe, positions, theta=cfg.rope_theta)
-    b_idx = jnp.arange(b)[:, None]
-    c_cache = cache["c_kv"].at[b_idx, positions].set(
-        c_kv.astype(cache["c_kv"].dtype))
-    pe_cache = cache["k_pe"].at[b_idx, positions].set(
-        k_pe[:, :, 0].astype(cache["k_pe"].dtype))
+    if table is not None:
+        # paged latent cache: pools (NB+1, bs, r) / (NB+1, bs, dr); write
+        # through the block table, gather back the dense (B, S, ·) views
+        blk_sz = cache["c_kv"].shape[1]
+        blk = jnp.take_along_axis(table, positions // blk_sz, axis=1)
+        off = positions % blk_sz
+        c_cache = cache["c_kv"].at[blk, off].set(
+            c_kv.astype(cache["c_kv"].dtype))
+        pe_cache = cache["k_pe"].at[blk, off].set(
+            k_pe[:, :, 0].astype(cache["k_pe"].dtype))
+        c_d = c_cache[table].reshape(b, -1, r)
+        pe_d = pe_cache[table].reshape(b, -1, dr)
+    else:
+        b_idx = jnp.arange(b)[:, None]
+        c_cache = cache["c_kv"].at[b_idx, positions].set(
+            c_kv.astype(cache["c_kv"].dtype))
+        pe_cache = cache["k_pe"].at[b_idx, positions].set(
+            k_pe[:, :, 0].astype(cache["k_pe"].dtype))
+        c_d, pe_d = c_cache, pe_cache
     # absorb W_UK into q:  q_lat[b,c,h,r] = Σ_dn q_nope · W_UK[r, h*dn]
     # (cache stays in storage dtype — see gqa_apply decode note)
     w_uk = p["w_uk"]["w"].reshape(r, h, dn)
     q_lat = jnp.einsum("bchd,rhd->bchr", q_nope.astype(w_uk.dtype),
                        w_uk, preferred_element_type=jnp.float32)
     scale = 1.0 / math.sqrt(dn + dr)
-    s_lat = jnp.einsum("bchr,bkr->bchk", q_lat.astype(c_cache.dtype),
-                       c_cache, preferred_element_type=jnp.float32)
-    s_pe = jnp.einsum("bchd,bkd->bchk", q_pe.astype(pe_cache.dtype),
-                      pe_cache, preferred_element_type=jnp.float32)
+    s_lat = jnp.einsum("bchr,bkr->bchk", q_lat.astype(c_d.dtype),
+                       c_d, preferred_element_type=jnp.float32)
+    s_pe = jnp.einsum("bchd,bkd->bchk", q_pe.astype(pe_d.dtype),
+                      pe_d, preferred_element_type=jnp.float32)
     s_ = (s_lat + s_pe) * scale
-    mask = (jnp.arange(c_cache.shape[1])[None, None, :]
+    mask = (jnp.arange(c_d.shape[1])[None, None, :]
             <= positions[:, :, None])                         # (B,C,S)
     s_ = jnp.where(mask[:, :, None, :], s_, NEG_INF)
-    pr = jax.nn.softmax(s_, axis=-1).astype(c_cache.dtype)
-    o_lat = jnp.einsum("bchk,bkr->bchr", pr, c_cache,
+    pr = jax.nn.softmax(s_, axis=-1).astype(c_d.dtype)
+    o_lat = jnp.einsum("bchk,bkr->bchr", pr, c_d,
                        preferred_element_type=jnp.float32)
     w_uv = p["w_uv"]["w"].reshape(r, h, dv)
     out = jnp.einsum("bchr,rhd->bchd", o_lat.astype(w_uv.dtype), w_uv,
@@ -359,10 +435,14 @@ def mla_apply(p: dict, x: jax.Array, *, cfg: ModelConfig, lin,
 
 
 def init_mla_cache(cfg: ModelConfig, batch: int, max_seq: int, *,
-                   abstract: bool = False):
+                   abstract: bool = False, layout=None):
     dt = jnp.dtype(cfg.dtype)
-    s1 = (batch, max_seq, cfg.kv_lora_rank)
-    s2 = (batch, max_seq, cfg.qk_rope_head_dim)
+    if layout is not None:             # paged pools (+1 trash block)
+        s1 = (layout.num_blocks + 1, layout.block_size, cfg.kv_lora_rank)
+        s2 = (layout.num_blocks + 1, layout.block_size, cfg.qk_rope_head_dim)
+    else:
+        s1 = (batch, max_seq, cfg.kv_lora_rank)
+        s2 = (batch, max_seq, cfg.qk_rope_head_dim)
     if abstract:
         return {"c_kv": jax.ShapeDtypeStruct(s1, dt),
                 "k_pe": jax.ShapeDtypeStruct(s2, dt)}

@@ -11,6 +11,17 @@ and only the tiny elementwise recurrence stays sequential.
 Mamba-2 sequence path = chunked SSD: intra-chunk quadratic (attention-like)
 term + inter-chunk linear recurrence over chunk states (lax.scan).
 RG-LRU sequence path = associative scan over the diagonal linear recurrence.
+
+Paged-KV contract (PR 3): recurrent/conv states are position-free and
+context-length-independent, so they stay PER-SLOT (batch-leading leaves)
+under the block-paged cache — only attention KV moves into the global block
+pool.  These mixers therefore ignore the block table entirely; they only
+need their cache leaves to ride along through ``tfm.slot_cache`` /
+``update_slot_cache`` row slicing, which treats every non-pool leaf as
+batch-leading.  (This is also why shared-prefix reuse is gated OFF for
+SSM/hybrid families: a content-hash of prompt blocks cannot address the
+recurrent state at the shared boundary — see
+``repro.serve.paging.prefix_sharing_supported`` and the ROADMAP follow-on.)
 """
 from __future__ import annotations
 

@@ -83,20 +83,24 @@ def init_layer(key, cfg: ModelConfig, kind: str, use_moe: bool) -> dict:
 
 def apply_layer(p: dict, x: jax.Array, *, kind: str, cfg: ModelConfig,
                 lin, image_embeds=None, cache: Optional[dict] = None,
-                pos: Optional[jax.Array] = None):
-    """Returns (x, aux_loss, new_cache)."""
+                pos: Optional[jax.Array] = None, tables=None):
+    """Returns (x, aux_loss, new_cache).  ``tables`` is the paged-mode pair
+    (full-attention table, ring table); attention layers pick theirs, SSM /
+    cross-attention state is per-slot and ignores it."""
     aux = jnp.zeros((), jnp.float32)
     h = nn.norm_apply(p["ln1"], x, cfg=cfg)
     new_cache = cache
+    table_full, table_ring = tables if tables is not None else (None, None)
     if kind == "attn":
         window = cfg.window
         if cfg.attention == "mla":
             out, new_cache = attn.mla_apply(p["attn"], h, cfg=cfg, lin=lin,
-                                            cache=cache, pos=pos)
+                                            cache=cache, pos=pos,
+                                            table=table_full)
         else:
-            out, new_cache = attn.gqa_apply(p["attn"], h, cfg=cfg, lin=lin,
-                                            window=window, cache=cache,
-                                            pos=pos)
+            out, new_cache = attn.gqa_apply(
+                p["attn"], h, cfg=cfg, lin=lin, window=window, cache=cache,
+                pos=pos, table=table_ring if window > 0 else table_full)
     elif kind == "xattn":
         out, new_cache = attn.cross_apply(p["attn"], h, image_embeds, cfg=cfg,
                                           lin=lin, cache=cache)
@@ -122,12 +126,13 @@ def apply_layer(p: dict, x: jax.Array, *, kind: str, cfg: ModelConfig,
 
 
 def init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_seq: int, *,
-                     abstract: bool = False):
+                     abstract: bool = False, layout=None):
     if kind == "attn":
         if cfg.attention == "mla":
-            return attn.init_mla_cache(cfg, batch, max_seq, abstract=abstract)
+            return attn.init_mla_cache(cfg, batch, max_seq, abstract=abstract,
+                                       layout=layout)
         return attn.init_gqa_cache(cfg, batch, max_seq, window=cfg.window,
-                                   abstract=abstract)
+                                   abstract=abstract, layout=layout)
     if kind == "xattn":
         return attn.init_cross_cache(cfg, batch, abstract=abstract)
     if kind == "rec":
@@ -262,11 +267,21 @@ def loss_fn(params: dict, batch: dict, cfg: ModelConfig, *,
 # ---------------------------------------------------------------------------
 
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int, *,
-               abstract: bool = False) -> dict:
+               abstract: bool = False, layout=None) -> dict:
+    """Dense mode (``layout is None``): per-slot rows, the PR-2 layout.
+
+    Paged mode (``layout`` a ``repro.serve.paging.PagedLayout``): every
+    attention layer's leaves become global block POOLS with a leading
+    physical-block axis (``num_blocks + 1``; the last block is the idle-row
+    trash sink) and the tree gains ``table (batch, mb_full + mb_ring)`` of
+    physical ids, initialized to the trash block.  SSM / cross-attention
+    leaves stay per-slot in both modes.
+    """
     head_kinds, pat, n_super, tail_kinds = _layer_split(cfg)
 
     def mk(kind):
-        return init_layer_cache(cfg, kind, batch, max_seq, abstract=abstract)
+        return init_layer_cache(cfg, kind, batch, max_seq, abstract=abstract,
+                                layout=layout)
 
     blocks = {}
     for j, kind in enumerate(pat):
@@ -282,14 +297,19 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, *,
                     one)
     pos = (jax.ShapeDtypeStruct((batch,), jnp.int32) if abstract
            else jnp.zeros((batch,), jnp.int32))
-    return {"head": [mk(k) for k in head_kinds],
-            "blocks": blocks,
-            "tail": [mk(k) for k in tail_kinds],
-            "pos": pos}
+    out = {"head": [mk(k) for k in head_kinds],
+           "blocks": blocks,
+           "tail": [mk(k) for k in tail_kinds],
+           "pos": pos}
+    if layout is not None:
+        tshape = (batch, layout.mb_total)
+        out["table"] = (jax.ShapeDtypeStruct(tshape, jnp.int32) if abstract
+                        else jnp.full(tshape, layout.trash_block, jnp.int32))
+    return out
 
 
 def prefill_step(params: dict, cache: dict, tokens: jax.Array,
-                 cfg: ModelConfig) -> tuple:
+                 cfg: ModelConfig, layout=None) -> tuple:
     """Chunk of C ≥ 1 tokens per sequence against the live cache.
 
     tokens (B, C) -> (last-position logits (B, V), new cache); the per-slot
@@ -297,16 +317,27 @@ def prefill_step(params: dict, cache: dict, tokens: jax.Array,
     step; C > 1 is the chunked-prefill hot path — every quantized linear
     flattens B·C rows, so the dispatcher leaves the decode tile regime and
     amortizes the one-hot build across the chunk.
+
+    ``layout`` (a static ``repro.serve.paging.PagedLayout``) switches the
+    KV side to the block-paged cache: the shared ``cache['table']`` is
+    split into its full-attention and ring column ranges and handed to the
+    attention layers, which write/read pool blocks through it.  The layer
+    math is otherwise identical, and the table passes through unchanged
+    (block assignment is host-side engine work).
     """
     lin = _lin(cfg, quantize=False)
     head_kinds, pat, n_super, tail_kinds = _layer_split(cfg)
     pos = cache["pos"]
+    tables = None
+    if layout is not None:
+        table = cache["table"]
+        tables = (table[:, :layout.mb_full], table[:, layout.mb_full:])
     x = nn.embed_apply(params["embed"], tokens, cfg=cfg)
 
     new_head = []
     for p, kind, c in zip(params["head_layers"], head_kinds, cache["head"]):
         x, _, nc = apply_layer(p, x, kind=kind, cfg=cfg, lin=lin, cache=c,
-                               pos=pos)
+                               pos=pos, tables=tables)
         new_head.append(nc)
 
     new_blocks = {}
@@ -317,7 +348,8 @@ def prefill_step(params: dict, cache: dict, tokens: jax.Array,
             for j, kind in enumerate(pat):
                 x, _, nc = apply_layer(sb_params[f"slot{j}"], x, kind=kind,
                                        cfg=cfg, lin=lin,
-                                       cache=sb_cache[f"slot{j}"], pos=pos)
+                                       cache=sb_cache[f"slot{j}"], pos=pos,
+                                       tables=tables)
                 new_c[f"slot{j}"] = nc
             return x, new_c
         x, new_blocks = jax.lax.scan(superblock, x,
@@ -326,7 +358,7 @@ def prefill_step(params: dict, cache: dict, tokens: jax.Array,
     new_tail = []
     for p, kind, c in zip(params["tail_layers"], tail_kinds, cache["tail"]):
         x, _, nc = apply_layer(p, x, kind=kind, cfg=cfg, lin=lin, cache=c,
-                               pos=pos)
+                               pos=pos, tables=tables)
         new_tail.append(nc)
 
     # only the chunk's last position feeds sampling (interior chunk logits
@@ -335,6 +367,8 @@ def prefill_step(params: dict, cache: dict, tokens: jax.Array,
     logits = nn.head_apply(params["embed"], params.get("head"), x, cfg=cfg)
     new_cache = {"head": new_head, "blocks": new_blocks, "tail": new_tail,
                  "pos": pos + tokens.shape[1]}
+    if layout is not None:
+        new_cache["table"] = cache["table"]
     return logits[:, 0].astype(jnp.float32), new_cache
 
 
@@ -352,31 +386,112 @@ def decode_step(params: dict, cache: dict, tokens: jax.Array,
 # Per-slot cache views (continuous batching: admit/evict one slot at a time)
 # ---------------------------------------------------------------------------
 
-def slot_cache(cache: dict, i) -> dict:
+# Leaf names that hold global block POOLS in paged mode (leading axis is
+# physical blocks, not batch): attention k/v and the MLA latent pair.  All
+# other cache leaves (SSM state, conv buffers, cross-attn kv) stay
+# batch-leading in both modes.
+_POOL_KEYS = {"k", "v", "c_kv", "k_pe"}
+
+
+def _leaf_key(path) -> str:
+    last = path[-1]
+    return getattr(last, "key", getattr(last, "name", ""))
+
+
+def _is_pool(path) -> bool:
+    return _leaf_key(path) in _POOL_KEYS
+
+
+def slot_cache(cache: dict, i, *, paged: bool = False) -> dict:
     """Batch row ``i`` of a batched cache as a batch-1 cache.
 
     ``blocks`` leaves carry a leading superblock axis (stacked for the
     lax.scan), so their batch axis is 1; everything else is batch-leading.
+    In paged mode the pool leaves are GLOBAL (shared by every slot) and
+    pass through unsliced; the table row is sliced like ``pos``.
     """
     def sl(axis):
-        return lambda a: jax.lax.dynamic_slice_in_dim(a, i, 1, axis=axis)
-    return {"head": jax.tree.map(sl(0), cache["head"]),
-            "blocks": jax.tree.map(sl(1), cache["blocks"]),
-            "tail": jax.tree.map(sl(0), cache["tail"]),
-            "pos": jax.lax.dynamic_slice_in_dim(cache["pos"], i, 1, axis=0)}
+        def f(path, a):
+            if paged and _is_pool(path):
+                return a
+            return jax.lax.dynamic_slice_in_dim(a, i, 1, axis=axis)
+        return f
+    tmap = jax.tree_util.tree_map_with_path
+    out = {"head": tmap(sl(0), cache["head"]),
+           "blocks": tmap(sl(1), cache["blocks"]),
+           "tail": tmap(sl(0), cache["tail"]),
+           "pos": jax.lax.dynamic_slice_in_dim(cache["pos"], i, 1, axis=0)}
+    if paged:
+        out["table"] = jax.lax.dynamic_slice_in_dim(cache["table"], i, 1,
+                                                    axis=0)
+    return out
 
 
-def update_slot_cache(cache: dict, sub: dict, i) -> dict:
-    """Write a batch-1 cache ``sub`` into row ``i`` of a batched cache."""
+def update_slot_cache(cache: dict, sub: dict, i, *, paged: bool = False
+                      ) -> dict:
+    """Write a batch-1 cache ``sub`` into row ``i`` of a batched cache.
+
+    In paged mode the pool leaves are adopted from ``sub`` WHOLESALE: the
+    batch-1 run wrote its blocks into the same global pool, so ``sub``'s
+    version is the newest (every other slot's blocks are untouched rows of
+    the same arrays)."""
     def up(axis):
-        return lambda a, s: jax.lax.dynamic_update_slice_in_dim(
-            a, s.astype(a.dtype), i, axis=axis)
-    return {"head": jax.tree.map(up(0), cache["head"], sub["head"]),
-            "blocks": jax.tree.map(up(1), cache["blocks"], sub["blocks"]),
-            "tail": jax.tree.map(up(0), cache["tail"], sub["tail"]),
-            "pos": jax.lax.dynamic_update_slice_in_dim(
-                cache["pos"], sub["pos"].astype(cache["pos"].dtype), i,
-                axis=0)}
+        def f(path, a, s):
+            if paged and _is_pool(path):
+                return s.astype(a.dtype)
+            return jax.lax.dynamic_update_slice_in_dim(
+                a, s.astype(a.dtype), i, axis=axis)
+        return f
+    tmap = jax.tree_util.tree_map_with_path
+    out = {"head": tmap(up(0), cache["head"], sub["head"]),
+           "blocks": tmap(up(1), cache["blocks"], sub["blocks"]),
+           "tail": tmap(up(0), cache["tail"], sub["tail"]),
+           "pos": jax.lax.dynamic_update_slice_in_dim(
+               cache["pos"], sub["pos"].astype(cache["pos"].dtype), i,
+               axis=0)}
+    if paged:
+        out["table"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["table"], sub["table"].astype(cache["table"].dtype), i,
+            axis=0)
+    return out
+
+
+def adopt_pools(per_slot_src: dict, pool_src: dict) -> dict:
+    """Paged helper: take every per-slot leaf (and table/pos) from
+    ``per_slot_src`` and every pool leaf from ``pool_src``.  Used to build
+    a fresh batch-1 admission state that writes into the LIVE global pool
+    (the per-slot template's own dummy pools are discarded)."""
+    tmap = jax.tree_util.tree_map_with_path
+
+    def pick(path, a, b):
+        return b if _is_pool(path) else a
+
+    out = {key: tmap(pick, per_slot_src[key], pool_src[key])
+           for key in ("head", "blocks", "tail")}
+    out["pos"] = per_slot_src["pos"]
+    out["table"] = per_slot_src["table"]
+    return out
+
+
+def copy_pool_block(cache: dict, src, dst) -> dict:
+    """Copy physical block ``src`` -> ``dst`` in EVERY pool leaf (the
+    device half of copy-on-write; allocator bookkeeping is host-side in
+    ``repro.serve.paging.BlockPool.ensure_exclusive``).  ``blocks`` leaves
+    carry the stacked superblock axis first, so their block axis is 1."""
+    def cp(axis):
+        def f(path, a):
+            if not _is_pool(path):
+                return a
+            blk = jax.lax.dynamic_slice_in_dim(a, src, 1, axis=axis)
+            return jax.lax.dynamic_update_slice_in_dim(a, blk, dst,
+                                                       axis=axis)
+        return f
+    tmap = jax.tree_util.tree_map_with_path
+    out = dict(cache)
+    out["head"] = tmap(cp(0), cache["head"])
+    out["blocks"] = tmap(cp(1), cache["blocks"])
+    out["tail"] = tmap(cp(0), cache["tail"])
+    return out
 
 
 # ---------------------------------------------------------------------------

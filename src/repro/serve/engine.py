@@ -1,45 +1,68 @@
-"""Serving engine: chunked RSR prefill + continuous-batching decode.
+"""Serving engine: chunked RSR prefill + continuous-batching decode over a
+dense or block-paged KV cache.
 
 ``Engine`` owns the serve-parameterized tree (RSR codes + packed kernel
-streams after offline ``serve_params`` conversion), a pre-allocated per-slot
-KV cache, and ONE jitted step — ``tfm.prefill_step`` — that covers both
-serving regimes.  C == 1 is the classic decode step (batch ≤ 8 rows, the
-vector-matrix hot path the paper's 5.24× claim targets); C == prefill_chunk
-is the chunked-prefill hot path: a length-S prompt costs ceil(S / chunk)
-kernel launches per quantized linear instead of S, each launch flattening
-B·C rows so the backend dispatcher (``repro.kernels.dispatch``) leaves the
-decode tile regime for the widened small/prefill tiles and amortizes the
-per-tile one-hot build across the chunk, scale/bias still fused into the
-kernel epilogue.  The old decode-step ``lax.scan`` prefill survives only as
-``prefill_scan`` — the exactness reference for the parity tests and the
-baseline BENCH_prefill.json measures against.
+streams after offline ``serve_params`` conversion), the KV cache, and ONE
+jitted step — ``tfm.prefill_step`` — that covers both serving regimes.
+C == 1 is the classic decode step (batch ≤ 8 rows, the vector-matrix hot
+path the paper's 5.24× claim targets); C == prefill_chunk is the chunked-
+prefill hot path (B·C flattened rows per quantized linear, prefill tile
+regime, scale/bias fused in the kernel epilogue).  The old decode-step
+``lax.scan`` prefill survives only as ``prefill_scan`` — the exactness
+reference for the parity tests and the BENCH_prefill.json baseline.
 
-All cache writes are per-slot (per-batch-row scatters at ``cache['pos']``),
-so batch slots hold independent sequences at independent positions:
+Cache layouts (``ServeConfig.kv_block_size``):
 
-* ``prefill_into(slot, prompt)`` — admission: chunk-prefills ONE slot's
-  rows from a fresh state while the other slots sit mid-decode, untouched.
-* ``free_slot(slot)`` — eviction: re-zeros a slot's rows and position.
-* ``prefill(tokens)`` — whole-batch chunked prefill (the ``generate`` path).
+* **Dense** (0, the PR-2 layout): every batch slot owns a private
+  ``max_seq_len`` row per attention layer; admission requires
+  ``prompt + max_new ≤ max_seq_len`` per slot.
+* **Paged** (> 0): attention KV lives in a global pool of fixed-size
+  blocks (``kv_num_blocks``, +1 trash block absorbing idle-row writes),
+  and each slot carries a block *table* mapping logical sequence blocks —
+  a full-attention region and, for sliding-window layers, a ring region —
+  to physical pool blocks (see ``repro.serve.paging``).  Block tables are
+  host-managed: every position-advancing entry point reserves the blocks
+  for its known horizon up front (admission reserves ``prompt + max_new``),
+  so a decode step never allocates and pool exhaustion can only surface at
+  admission, where the scheduler defers instead of failing.  SSM/conv and
+  cross-attention states are position-free and stay per-slot.
+
+Shared-prefix reuse (paged + ``paging.prefix_sharing_supported(cfg)``):
+full prompt blocks are content-hashed (chained, so a hit implies the whole
+prefix matches); an admission whose leading blocks are already resident
+maps them into its table (refcount++) and prefills only the tail — at
+least the final prompt token is always recomputed so admission still
+yields last-position logits.  When that tail write lands inside a shared
+block (prompt length an exact block multiple), the block is copy-on-
+written first (``BlockPool.ensure_exclusive`` + ``tfm.copy_pool_block``).
+Blocks are freed on eviction; the last reference returning to the pool
+also evicts the hash registration.
+
+Block-table contract (device side): ``cache['table']`` is ``(batch,
+mb_full + mb_ring) int32`` of physical ids; logical full block j of slot b
+is ``table[b, j]`` (position p lives in logical block ``p // block_size``
+at offset ``p % block_size``), ring block j is ``table[b, mb_full + j]``.
+Unassigned entries point at the trash block.  The jitted step treats the
+table as read-only data; all assignment happens here on the host.
 
 ``BatchScheduler`` is true continuous batching over the fixed slots:
-admit-on-free via per-slot prefill (no ``Engine.reset``, no head-of-line
-blocking on the longest request of an admission wave), per-slot true prompt
-lengths (no left padding — short prompts never attend to pad tokens), one
-batched decode step per loop tick for every active slot, eviction on
-completion.  A host-side position mirror guards every slot against running
-past ``max_seq_len``.
+admission validates at ``submit()`` (malformed/oversized requests are
+marked failed and returned with the results instead of aborting the run —
+the PR-3 bugfix), admits queued requests into free slots when the pool can
+take them (strict-FIFO deferral on exhaustion), runs ONE batched decode
+step per tick for every active slot, and evicts (frees blocks) on
+completion.
 
 ``Engine.decode_throughput`` measures steady-state decode tokens/s through
-the jitted step (BENCH_serve.json headline); the chunked-prefill and mixed
-prefill+decode scheduler numbers land in BENCH_prefill.json
-(``benchmarks/run.py --only prefill``).
+the jitted step (BENCH_serve.json headline); chunked-prefill, scheduler,
+and paged/shared-prefix numbers land in BENCH_prefill.json
+(``benchmarks/run.py --only prefill`` / ``--only paged``).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +70,7 @@ import numpy as np
 
 from repro.config import ModelConfig, ServeConfig
 from repro.models import transformer as tfm
+from repro.serve import paging
 
 
 class Engine:
@@ -54,34 +78,142 @@ class Engine:
         self.cfg, self.scfg = cfg, scfg
         self.params = serve_tree
         self.batch = scfg.batch_size
-        self.cache = tfm.init_cache(cfg, self.batch, scfg.max_seq_len)
+        self.layout = paging.paged_layout(cfg, scfg)
+        self.cache = tfm.init_cache(cfg, self.batch, scfg.max_seq_len,
+                                    layout=self.layout)
+        paged = self.layout is not None
         # one jitted step for both regimes: (B, C) tokens -> last logits;
         # jax caches a compile per distinct C (decode C=1, the prefill
-        # chunk, and at most one ragged remainder per prompt length)
+        # chunk, and at most one ragged remainder per prompt length).
+        # The static paged layout is closed over, not an argument.
+        layout = self.layout
         self._step = jax.jit(
-            lambda p, c, t: tfm.prefill_step(p, c, t, cfg))
+            lambda p, c, t: tfm.prefill_step(p, c, t, cfg, layout=layout))
         self._decode = self._step                  # (B, 1): decode == C=1
 
         def _scan(p, c, toks):                     # toks (B, S)
             def step(c, t):
-                logits, c = tfm.decode_step(p, c, t[:, None], cfg)
+                logits, c = tfm.prefill_step(p, c, t[:, None], cfg,
+                                             layout=layout)
                 return c, logits
             c, logits = jax.lax.scan(step, c, jnp.moveaxis(toks, 1, 0))
             return c, logits[-1]
         self._prefill_scan = jax.jit(_scan)
-        self._write_slot = jax.jit(tfm.update_slot_cache)
+        self._write_slot = jax.jit(
+            lambda c, s, i: tfm.update_slot_cache(c, s, i, paged=paged))
+        self._copy_block = jax.jit(tfm.copy_pool_block) if paged else None
         # fresh batch-1 slot state for admissions/evictions (immutable —
-        # shared freely, never mutated)
-        self._fresh_slot = tfm.init_cache(cfg, 1, scfg.max_seq_len)
+        # shared freely, never mutated).  In paged mode its dummy 1-block
+        # pools are swapped for the live pools by tfm.adopt_pools.
+        fresh_layout = (dataclasses.replace(layout, num_blocks=0)
+                        if paged else None)
+        self._fresh_slot = tfm.init_cache(cfg, 1, scfg.max_seq_len,
+                                          layout=fresh_layout)
+        if paged:
+            self.pool = paging.BlockPool(
+                layout.num_blocks, layout.block_size,
+                sharing=paging.prefix_sharing_supported(cfg))
+            self._tables = np.full((self.batch, layout.mb_total),
+                                   layout.trash_block, np.int32)
+            self._slot_blocks: List[List[int]] = [[] for _ in
+                                                  range(self.batch)]
+            self._full_count = [0] * self.batch     # assigned full blocks
+            self._ring_ready = [False] * self.batch
+
+    @property
+    def paged(self) -> bool:
+        return self.layout is not None
 
     def reset(self):
         self.cache = tfm.init_cache(self.cfg, self.batch,
-                                    self.scfg.max_seq_len)
+                                    self.scfg.max_seq_len, layout=self.layout)
+        if self.paged:
+            self.pool = paging.BlockPool(
+                self.layout.num_blocks, self.layout.block_size,
+                sharing=self.pool.sharing)
+            self._tables[:] = self.layout.trash_block
+            self._slot_blocks = [[] for _ in range(self.batch)]
+            self._full_count = [0] * self.batch
+            self._ring_ready = [False] * self.batch
+
+    # -- paged block-table management (host side) --------------------------
+
+    def _push_table(self):
+        self.cache = {**self.cache, "table": jnp.asarray(self._tables)}
+
+    def _release_blocks(self, slot: int):
+        for bid in self._slot_blocks[slot]:
+            self.pool.free(bid)
+        self._slot_blocks[slot] = []
+        self._full_count[slot] = 0
+        self._ring_ready[slot] = False
+        self._tables[slot, :] = self.layout.trash_block
+
+    def _reserve(self, slot: int, upto: int):
+        """Assign blocks so slot's table covers positions [0, upto) (full
+        region) and the whole ring region.  Raises BlockPoolExhausted when
+        the pool cannot satisfy it — scheduler admission checks first."""
+        lay = self.layout
+        if lay.mb_ring and not self._ring_ready[slot]:
+            ring = self.pool.alloc(lay.mb_ring)
+            self._tables[slot, lay.mb_full:] = ring
+            self._slot_blocks[slot].extend(ring)
+            self._ring_ready[slot] = True
+        need = lay.blocks_for(upto)
+        cur = self._full_count[slot]
+        if need > cur:
+            fresh = self.pool.alloc(need - cur)
+            self._tables[slot, cur:need] = fresh
+            self._slot_blocks[slot].extend(fresh)
+            self._full_count[slot] = need
+
+    def _admission_plan(self, prompt: np.ndarray, max_new: int):
+        """(hashes, hits, tail_start, cow, fresh_needed) for admitting
+        `prompt` with `max_new` reserved decode tokens, WITHOUT mutating
+        allocator state (the hits are not claimed yet).  ``fresh_needed``
+        is exact: ring blocks + non-shared full blocks (incl. one decode-
+        headroom block, see ``PagedLayout.blocks_for_admission``) + the
+        copy-on-write replacement when the tail write would land in a
+        shared block."""
+        lay = self.layout
+        L = len(prompt)
+        hashes = (paging.block_hashes(prompt, lay.block_size)
+                  if self.pool.sharing else [])
+        hits = self.pool.match_prefix(hashes)
+        shared_tok = len(hits) * lay.block_size
+        tail_start = min(shared_tok, L - 1)
+        cow = tail_start < shared_tok          # tail writes a shared block
+        total = lay.blocks_for_admission(L, max_new)
+        fresh_needed = (total - len(hits)) + (1 if cow else 0) + lay.mb_ring
+        return hashes, hits, tail_start, cow, fresh_needed
+
+    def can_admit(self, prompt, max_new: int):
+        """Pool-capacity check for one admission (no allocator mutation).
+        Returns the admission plan when it fits (truthy; pass it to
+        ``prefill_into(..., plan=...)`` to avoid re-hashing the prompt),
+        ``None`` when the pool cannot take it yet, ``True`` when dense."""
+        if not self.paged:
+            return True
+        prompt = np.asarray(prompt)
+        plan = self._admission_plan(prompt, max_new)
+        return plan if plan[-1] <= self.pool.free_count else None
+
+    # -- capacity ----------------------------------------------------------
 
     def free_slot(self, slot: int):
-        """Zero slot's cache rows + position (eviction / pre-admission)."""
-        self.cache = self._write_slot(self.cache, self._fresh_slot,
-                                      jnp.int32(slot))
+        """Zero slot's cache rows + position (eviction / pre-admission);
+        paged mode also releases the slot's blocks (refcount--, shared
+        blocks stay resident while other holders live)."""
+        sub = self._fresh_sub()
+        self.cache = self._write_slot(self.cache, sub, jnp.int32(slot))
+        if self.paged:
+            self._release_blocks(slot)
+            self._push_table()
+
+    def _fresh_sub(self):
+        if not self.paged:
+            return self._fresh_slot
+        return tfm.adopt_pools(self._fresh_slot, self.cache)
 
     def _check_capacity(self, start: int, new_tokens: int, what: str):
         """Cache writes past max_seq_len are out-of-range scatters — XLA
@@ -93,6 +225,15 @@ class Engine:
                 f"{what} would advance slot positions to {end} > "
                 f"max_seq_len={self.scfg.max_seq_len} (start={start}); "
                 f"reset()/free_slot() or raise max_seq_len")
+
+    def _reserve_all(self, upto: int):
+        if not self.paged:
+            return
+        for i in range(self.batch):
+            self._reserve(i, upto)
+        self._push_table()
+
+    # -- prefill / decode --------------------------------------------------
 
     def prefill(self, tokens: jax.Array, *, chunk: Optional[int] = None,
                 start: Optional[int] = None):
@@ -109,6 +250,7 @@ class Engine:
         if start is None:
             start = int(jax.device_get(jnp.max(self.cache["pos"])))
         self._check_capacity(start, tokens.shape[1], "prefill")
+        self._reserve_all(start + tokens.shape[1])
         chunk = int(chunk or self.scfg.prefill_chunk)
         logits = None
         for off in range(0, tokens.shape[1], chunk):
@@ -119,25 +261,85 @@ class Engine:
     def prefill_scan(self, tokens: jax.Array):
         """Reference prefill: jitted lax.scan of single-token decode steps
         (the pre-chunking path; parity baseline for tests/BENCH_prefill)."""
+        if self.paged:
+            start = int(jax.device_get(jnp.max(self.cache["pos"])))
+            self._reserve_all(start + tokens.shape[1])
         self.cache, logits = self._prefill_scan(self.params, self.cache,
                                                 tokens)
         return logits
 
-    def prefill_into(self, slot: int, prompt, *, chunk: Optional[int] = None):
-        """Per-slot admission prefill: run the chunked prefill of a 1-D
-        prompt through slot's rows from a fresh state; every other slot is
-        untouched (they can sit mid-decode).  Returns last logits (V,)."""
-        toks = jnp.asarray(prompt, jnp.int32)[None, :]
-        if toks.shape[1] == 0:
+    def prefill_into(self, slot: int, prompt, *, chunk: Optional[int] = None,
+                     reserve: int = 0, plan=None):
+        """Per-slot admission prefill of a 1-D prompt into slot's rows from
+        a fresh state; every other slot is untouched (they can sit mid-
+        decode).  Returns last logits (V,).
+
+        Paged mode additionally: releases the slot's previous blocks, maps
+        resident shared-prefix blocks (prefilling only the tail — always at
+        least the final prompt token, so logits exist; a tail write into a
+        still-shared block copy-on-writes it first), reserves blocks out to
+        ``len(prompt) + reserve`` — plus one block of decode headroom —
+        so the subsequent ``reserve`` decode steps never allocate, and
+        registers the freshly written full prompt blocks for future
+        sharing.  Decoding the slot beyond ``reserve`` (and the headroom
+        block) without re-reserving is a contract violation: those writes
+        land in the trash block.  ``plan`` accepts the admission plan a
+        ``can_admit`` call just returned (skips re-hashing the prompt);
+        it is only trusted while the slot holds no blocks.
+        """
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.ndim != 1 or prompt.shape[0] == 0:
             raise ValueError(f"prefill_into(slot={slot}): empty prompt")
-        self._check_capacity(0, toks.shape[1], f"prefill_into(slot={slot})")
+        L = int(prompt.shape[0])
+        self._check_capacity(0, L + max(0, reserve),
+                             f"prefill_into(slot={slot})")
         chunk = int(chunk or self.scfg.prefill_chunk)
-        sub = self._fresh_slot
+        tail_start = 0
+        hashes: list = []
+        n_shared = 0
+        if self.paged:
+            lay = self.layout
+            if plan is None or self._slot_blocks[slot]:
+                self._release_blocks(slot)
+                plan = self._admission_plan(prompt, max(0, reserve))
+            hashes = plan[0]                   # prompt-only: never stale
+            hits = self.pool.take_prefix(hashes)   # claim (incref) the hits
+            # tail/COW derive from the CLAIMED hits, not the plan: if
+            # registrations changed since can_admit, the claim is the truth
+            n_shared = len(hits)
+            shared_tok = n_shared * lay.block_size
+            tail_start = min(shared_tok, L - 1)
+            cow = tail_start < shared_tok
+            self._tables[slot, :n_shared] = hits
+            self._slot_blocks[slot].extend(hits)
+            self._full_count[slot] = n_shared
+            if cow:
+                old = hits[-1]
+                new, copied = self.pool.ensure_exclusive(old)
+                if copied:
+                    self.cache = self._copy_block(
+                        self.cache, jnp.int32(old), jnp.int32(new))
+                    self._tables[slot, n_shared - 1] = new
+                    self._slot_blocks[slot][-1] = new
+            self._reserve(slot, lay.blocks_for_admission(
+                L, max(0, reserve)) * lay.block_size)
+            self._push_table()
+        toks = jnp.asarray(prompt[tail_start:])[None, :]
+        sub = self._fresh_sub()
+        if self.paged:
+            sub = {**sub,
+                   "table": jnp.asarray(self._tables[slot:slot + 1]),
+                   "pos": jnp.full((1,), tail_start, jnp.int32)}
         logits = None
         for start in range(0, toks.shape[1], chunk):
             logits, sub = self._step(self.params, sub,
                                      toks[:, start:start + chunk])
         self.cache = self._write_slot(self.cache, sub, jnp.int32(slot))
+        if self.paged and self.pool.sharing:
+            # publish the fully-written prompt blocks (beyond the shared
+            # ones) for future admissions
+            for j in range(n_shared, L // self.layout.block_size):
+                self.pool.register(int(self._tables[slot, j]), hashes[j])
         return logits[0]
 
     def sample(self, logits: jax.Array, key) -> jax.Array:
@@ -147,11 +349,19 @@ class Engine:
 
     def generate(self, prompts: jax.Array, max_new: int, *,
                  key=None) -> np.ndarray:
-        """Greedy/temperature generation. prompts (B, S) -> (B, max_new)."""
+        """Greedy/temperature generation. prompts (B, S) -> (B, max_new).
+
+        ``max_new == 0`` returns shape (B, 0) — the prefill still runs (the
+        cache is left warm) but no token is emitted; ``max_new == 1`` emits
+        exactly the prefill-sampled token with no decode step.
+        """
         key = key if key is not None else jax.random.PRNGKey(0)
         start = int(jax.device_get(jnp.max(self.cache["pos"])))
         self._check_capacity(start, prompts.shape[1] + max_new, "generate")
+        self._reserve_all(start + prompts.shape[1] + max_new)
         logits = self.prefill(prompts, start=start)
+        if max_new <= 0:
+            return np.zeros((prompts.shape[0], 0), np.int32)
         tok = self.sample(logits, key)
         out = [np.asarray(tok)]
         # token 0 comes from the prefill logits, so only max_new - 1 decode
@@ -173,10 +383,13 @@ class Engine:
         state is untouched), so slot positions are validated up front:
         silently wrapping past max_seq_len would time scatter writes that
         never land (out-of-range updates are dropped) and corrupt the
-        number.
+        number.  Paged mode reserves blocks for the measured horizon (they
+        stay assigned to the slots; reset()/free_slot() reclaims them).
         """
-        self._check_capacity(int(jax.device_get(jnp.max(self.cache["pos"]))),
-                             max(1, warmup) + steps, "decode_throughput")
+        start = int(jax.device_get(jnp.max(self.cache["pos"])))
+        self._check_capacity(start, max(1, warmup) + steps,
+                             "decode_throughput")
+        self._reserve_all(start + max(1, warmup) + steps)
         tok = jnp.ones((self.batch, 1), jnp.int32)
         cache = self.cache
         for _ in range(max(1, warmup)):     # ≥1: compile must stay untimed
@@ -199,6 +412,7 @@ class Request:
     max_new: int
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
+    error: Optional[str] = None
 
 
 class BatchScheduler:
@@ -207,14 +421,25 @@ class BatchScheduler:
     Each loop tick admits queued requests into free slots (per-slot chunked
     prefill at the request's TRUE length — no left padding, no reset of the
     other slots) and then runs ONE batched decode step for every slot.
-    Completed requests are evicted immediately, freeing their slot for the
-    next admission — no head-of-line blocking on the longest request.
+    Completed requests are evicted immediately, freeing their slot (and, in
+    paged mode, their blocks) for the next admission — no head-of-line
+    blocking on the longest request.
+
+    Robustness contract: ``submit()`` validates the request (shape,
+    ``prompt + max_new ≤ max_seq_len``, worst-case block demand ≤ pool) —
+    an invalid request is marked ``done`` with ``error`` set and returned
+    from ``run()`` alongside the completed ones instead of raising mid-
+    drain and abandoning the queue.  Paged admission additionally defers
+    (strict FIFO) while the pool is too full, resuming as evictions free
+    blocks; because every accepted request's worst-case demand fits an
+    empty pool, the drain always makes progress.
     """
 
     def __init__(self, engine: Engine):
         self.engine = engine
         self.slots: list[Optional[Request]] = [None] * engine.batch
         self.queue: list[Request] = []
+        self.rejected: list[Request] = []
         self._next_tok = np.zeros((engine.batch,), np.int32)
         # host mirror of per-slot cache positions: overflow guard without a
         # device sync per tick
@@ -222,7 +447,40 @@ class BatchScheduler:
         self._key = jax.random.PRNGKey(0)
 
     def submit(self, req: Request):
+        """Validate and enqueue.  Invalid requests never enter the queue:
+        they are marked failed (``req.error``) and surface in ``run()``'s
+        results — the PR-3 regression fix (an oversized request used to
+        raise mid-``run()``, abandoning all queued and in-flight work)."""
+        err = self._validate(req)
+        if err is not None:
+            req.error = err
+            req.done = True
+            self.rejected.append(req)
+            return
         self.queue.append(req)
+
+    def _validate(self, req: Request) -> Optional[str]:
+        eng = self.engine
+        prompt = np.asarray(req.prompt)
+        if prompt.ndim != 1 or prompt.shape[0] == 0:
+            return f"request {req.rid}: prompt must be 1-D and non-empty"
+        if req.max_new < 1:
+            return f"request {req.rid}: max_new={req.max_new} < 1"
+        need = prompt.shape[0] + req.max_new
+        if need > eng.scfg.max_seq_len:
+            return (f"request {req.rid}: prompt+max_new={need} exceeds "
+                    f"max_seq_len={eng.scfg.max_seq_len}")
+        if eng.paged:
+            # worst case = admission against an EMPTY pool: no shared hits
+            # (hence no COW either), every block fresh.  If this fits, the
+            # strict-FIFO drain can always make progress.
+            lay = eng.layout
+            worst = lay.mb_ring + lay.blocks_for_admission(
+                prompt.shape[0], req.max_new)
+            if worst > lay.num_blocks:
+                return (f"request {req.rid}: needs {worst} blocks "
+                        f"(pool={lay.num_blocks})")
+        return None
 
     # -- internals ---------------------------------------------------------
 
@@ -238,18 +496,24 @@ class BatchScheduler:
         self._pos[i] = 0
         return req
 
-    def _admit(self, finished: list):
+    def _admit(self, finished: list) -> bool:
+        """Admit queued requests into free slots; returns True if any
+        admission happened.  Strict FIFO: when the pool cannot take the
+        queue head yet, admission stops (it resumes as evictions free
+        blocks) rather than starving it with later, smaller requests."""
         eng = self.engine
+        progressed = False
         for i in range(eng.batch):
             if self.slots[i] is not None or not self.queue:
                 continue
-            req = self.queue.pop(0)
-            need = len(req.prompt) + req.max_new
-            if need > eng.scfg.max_seq_len:
-                raise ValueError(
-                    f"request {req.rid}: prompt+max_new={need} exceeds "
-                    f"max_seq_len={eng.scfg.max_seq_len}")
-            logits = eng.prefill_into(i, req.prompt)
+            req = self.queue[0]
+            plan = eng.can_admit(req.prompt, req.max_new)
+            if plan is None:
+                break
+            self.queue.pop(0)
+            logits = eng.prefill_into(i, req.prompt, reserve=req.max_new,
+                                      plan=None if plan is True else plan)
+            progressed = True
             tok = int(self._sample(logits[None, :])[0])
             req.generated.append(tok)
             self._pos[i] = len(req.prompt)
@@ -258,16 +522,27 @@ class BatchScheduler:
                 finished.append(self._finish(i))
             else:
                 self._next_tok[i] = tok
+        return progressed
 
     def run(self) -> list[Request]:
-        """Drain the queue; returns completed requests in finish order."""
+        """Drain the queue; returns completed requests in finish order
+        (requests rejected at submit() are included up front, ``error``
+        set)."""
         eng = self.engine
         max_seq = eng.scfg.max_seq_len
-        finished: list[Request] = []
+        finished: list[Request] = list(self.rejected)
+        self.rejected = []
         while self.queue or any(s is not None for s in self.slots):
-            self._admit(finished)
+            progressed = self._admit(finished)
             active = [i for i, s in enumerate(self.slots) if s is not None]
             if not active:
+                if self.queue and not progressed:
+                    # cannot happen for requests that passed _validate —
+                    # defensive: an empty engine must be able to admit the
+                    # queue head (its worst-case demand fits an empty pool)
+                    raise RuntimeError(
+                        f"scheduler stalled: {len(self.queue)} queued "
+                        f"requests but no admission possible")
                 continue              # everything admitted was max_new == 1
             for i in range(eng.batch):
                 if self.slots[i] is None and self._pos[i] + 1 >= max_seq:

@@ -1,0 +1,265 @@
+"""Block-paged KV cache: layout, host-side allocator, and prefix hashing.
+
+The dense serve cache gives every batch slot a private ``max_seq_len`` row per
+attention layer, so admission is gated on ``prompt + max_new <= max_seq_len``
+and identical prompt prefixes are recomputed and stored once per request.
+This module supplies the vLLM-style alternative: one global pool of
+fixed-size KV *blocks* per attention layer, per-slot *block tables* mapping
+logical sequence blocks to physical pool blocks, and ref-counted sharing of
+common prompt-prefix blocks.
+
+Division of labour:
+
+* :class:`PagedLayout` — the static geometry (block size, pool size, logical
+  blocks per slot split into a *full-attention* region and a *ring* region
+  for sliding-window layers).  Hashable, so the jitted step can close over
+  it.  Built by :func:`paged_layout` from ``(ModelConfig, ServeConfig)``.
+* :class:`BlockPool` — the host-side allocator: free list, per-block
+  refcounts, and the content-hash -> block map that backs prefix sharing.
+  Pure Python/NumPy; device arrays never flow through it.
+* :func:`block_hashes` — chained content hashes of full prompt blocks.  The
+  chain makes a block's identity include its prefix context, so equal hashes
+  imply equal KV content (same tokens at the same absolute positions).
+
+Device-side storage (see ``repro.models.transformer.init_cache`` /
+``repro.models.attention``): each attention layer's cache becomes a pool
+array with a leading physical-block axis (``num_blocks + 1`` — the extra
+*trash* block absorbs writes from idle batch rows so they can never corrupt
+a live request's blocks), and the cache tree gains one shared
+``table (batch, mb_full + mb_ring) int32`` of physical block ids.  Recurrent
+(SSM) and cross-attention states are position-free and stay per-slot.
+
+Sharing rules:
+
+* Only FULL prompt blocks are ever registered for sharing, and only while a
+  holder is resident (refcount > 0); freeing the last reference evicts the
+  hash entry.  Partial tail blocks and every decode-time block are private.
+* Ring-region blocks are always private: ring content depends on wrap
+  history, not just token identity.
+* Prefix reuse is enabled only for model families whose entire cached state
+  is reconstructable from shared blocks — pure full-attention stacks
+  (:func:`prefix_sharing_supported`).  Hybrid/SSM/windowed families still
+  get paging (pool-capacity admission), just no cross-request reuse,
+  because their recurrent/ring state at the shared boundary is not
+  addressable by content hash.  (Follow-on: state snapshots per ROADMAP.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.config import ModelConfig, ServeConfig
+
+__all__ = ["PagedLayout", "BlockPool", "BlockPoolExhausted", "paged_layout",
+           "block_hashes", "prefix_sharing_supported"]
+
+
+class BlockPoolExhausted(RuntimeError):
+    """Raised by BlockPool.alloc when the free list cannot satisfy a
+    request.  The scheduler avoids it by checking blocks_needed() against
+    free_count before admission (defer, don't crash)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Static paged-cache geometry (hashable: jitted steps close over it).
+
+    ``mb_full`` logical blocks per slot serve the full-attention/MLA layers
+    (absolute position p lives in logical block p // block_size); ``mb_ring``
+    logical blocks serve sliding-window ring buffers (ring slot r lives in
+    logical block mb_full + r // block_size).  The physical pool has
+    ``num_blocks`` allocatable blocks plus one trailing *trash* block
+    (id == num_blocks) that idle batch rows write into.
+    """
+    block_size: int
+    num_blocks: int
+    mb_full: int
+    mb_ring: int
+    ring_slots: int                   # dense ring length (min(max_seq, win))
+    max_seq: int
+
+    @property
+    def mb_total(self) -> int:
+        return self.mb_full + self.mb_ring
+
+    @property
+    def trash_block(self) -> int:
+        return self.num_blocks
+
+    def blocks_for(self, tokens: int) -> int:
+        """Full-region blocks covering positions [0, tokens)."""
+        if self.mb_full == 0:
+            return 0
+        return min(-(-tokens // self.block_size), self.mb_full)
+
+    def blocks_for_admission(self, prompt_len: int, reserve: int) -> int:
+        """Full-region blocks an admission must hold.  With an explicit
+        decode reservation the caller has stated its horizon, so the count
+        is exact (``blocks_for(prompt + reserve)`` — what the scheduler's
+        capacity accounting relies on).  With ``reserve == 0`` (direct
+        engine use, horizon unknown) one block of decode headroom past the
+        prompt is added (when the table allows) so a prefill-then-decode
+        never silently writes the trash block; decoding past that headroom
+        without re-reserving is a contract violation."""
+        if self.mb_full == 0:
+            return 0
+        if reserve > 0:
+            return self.blocks_for(prompt_len + reserve)
+        return min(self.blocks_for(prompt_len) + 1, self.mb_full)
+
+
+def _attn_kinds(cfg: ModelConfig) -> list[str]:
+    from repro.models.transformer import layer_kinds
+    return layer_kinds(cfg)
+
+
+def prefix_sharing_supported(cfg: ModelConfig) -> bool:
+    """True iff every cached layer's state is fully reconstructable from
+    shared prefix blocks: pure full-attention stacks (GQA window=0 or MLA).
+    Recurrent/windowed/cross-attention layers carry per-slot state that a
+    content-hash cannot address, so sharing is disabled for them."""
+    kinds = set(_attn_kinds(cfg))
+    return kinds == {"attn"} and cfg.window == 0 and not cfg.is_encoder
+
+
+def paged_layout(cfg: ModelConfig, scfg: ServeConfig) -> Optional[PagedLayout]:
+    """Build the layout for (cfg, scfg); None when paging is disabled."""
+    bs = scfg.kv_block_size
+    if bs <= 0:
+        return None
+    kinds = _attn_kinds(cfg)
+    has_full = any(k == "attn" for k in kinds) and (
+        cfg.attention == "mla" or cfg.window == 0)
+    has_ring = any(k == "attn" for k in kinds) and (
+        cfg.attention != "mla" and cfg.window > 0)
+    mb_full = -(-scfg.max_seq_len // bs) if has_full else 0
+    ring_slots = min(scfg.max_seq_len, cfg.window) if has_ring else 0
+    if ring_slots and ring_slots % bs:
+        raise ValueError(
+            f"kv_block_size={bs} must divide the sliding-window ring length "
+            f"{ring_slots} (= min(max_seq_len, window)); pick a divisor")
+    mb_ring = ring_slots // bs
+    num = scfg.kv_num_blocks or scfg.batch_size * (mb_full + mb_ring)
+    return PagedLayout(block_size=bs, num_blocks=num, mb_full=mb_full,
+                       mb_ring=mb_ring, ring_slots=ring_slots,
+                       max_seq=scfg.max_seq_len)
+
+
+def block_hashes(tokens: np.ndarray, block_size: int) -> List[bytes]:
+    """Chained hashes of the FULL blocks of a 1-D token array.  Block j's
+    hash covers tokens [0, (j+1)*block_size) through the chain, so a hash
+    hit implies the whole prefix matches, not just that one block."""
+    toks = np.asarray(tokens, np.int64)
+    out: List[bytes] = []
+    h = b""
+    for j in range(len(toks) // block_size):
+        h = hashlib.sha1(
+            h + toks[j * block_size:(j + 1) * block_size].tobytes()).digest()
+        out.append(h)
+    return out
+
+
+class BlockPool:
+    """Host-side block allocator with refcounts and prefix-hash sharing.
+
+    All methods are O(blocks touched); no device arrays pass through here.
+    ``stats`` accumulates admission-time prefix-cache counters for the
+    benchmark harness (hit-rate = hit_tokens / lookup_tokens).
+    """
+
+    def __init__(self, num_blocks: int, block_size: int, *,
+                 sharing: bool = True):
+        self.num_blocks = int(num_blocks)
+        self.block_size = int(block_size)
+        self.sharing = bool(sharing)
+        self._free: List[int] = list(range(self.num_blocks - 1, -1, -1))
+        self._ref = np.zeros(self.num_blocks, np.int64)
+        self._hash_to_bid: dict[bytes, int] = {}
+        self._bid_to_hash: dict[int, bytes] = {}
+        self.stats = {"admissions": 0, "lookup_tokens": 0, "hit_tokens": 0,
+                      "cow_copies": 0}
+
+    # -- bookkeeping -------------------------------------------------------
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def live_refs(self) -> int:
+        return int(self._ref.sum())
+
+    def alloc(self, n: int = 1) -> List[int]:
+        """Take n fresh blocks (refcount 1 each); raises BlockPoolExhausted
+        when fewer than n are free (no partial allocation)."""
+        if n > len(self._free):
+            raise BlockPoolExhausted(
+                f"need {n} blocks, {len(self._free)} free "
+                f"(pool={self.num_blocks})")
+        bids = [self._free.pop() for _ in range(n)]
+        for b in bids:
+            self._ref[b] = 1
+        return bids
+
+    def free(self, bid: int) -> None:
+        """Drop one reference; at zero the block returns to the free list
+        and its hash registration (if any) is evicted."""
+        if self._ref[bid] <= 0:
+            raise ValueError(f"double free of block {bid}")
+        self._ref[bid] -= 1
+        if self._ref[bid] == 0:
+            h = self._bid_to_hash.pop(bid, None)
+            if h is not None and self._hash_to_bid.get(h) == bid:
+                del self._hash_to_bid[h]
+            self._free.append(bid)
+
+    # -- prefix sharing ----------------------------------------------------
+
+    def match_prefix(self, hashes: Sequence[bytes]) -> List[int]:
+        """Longest chain of resident shared blocks for `hashes` (no incref —
+        a capacity estimate for admission control)."""
+        out: List[int] = []
+        if not self.sharing:
+            return out
+        for h in hashes:
+            bid = self._hash_to_bid.get(h)
+            if bid is None:
+                break
+            out.append(bid)
+        return out
+
+    def take_prefix(self, hashes: Sequence[bytes]) -> List[int]:
+        """match_prefix + incref each hit; updates the hit-rate stats
+        (lookup_tokens counts the full-block portion of the prompt)."""
+        hits = self.match_prefix(hashes)
+        for bid in hits:
+            self._ref[bid] += 1
+        self.stats["admissions"] += 1
+        self.stats["lookup_tokens"] += len(hashes) * self.block_size
+        self.stats["hit_tokens"] += len(hits) * self.block_size
+        return hits
+
+    def register(self, bid: int, h: bytes) -> None:
+        """Publish a fully-written prompt block for future sharing.  First
+        writer wins: an existing registration for the same hash is kept
+        (both blocks hold identical content; re-pointing would orphan
+        references)."""
+        if not self.sharing or h in self._hash_to_bid:
+            return
+        self._hash_to_bid[h] = bid
+        self._bid_to_hash[bid] = h
+
+    def ensure_exclusive(self, bid: int) -> tuple[int, bool]:
+        """Copy-on-write: if `bid` is shared (refcount > 1), allocate a
+        private replacement and move one reference to it; the CALLER must
+        copy the device contents bid -> new before writing.  Returns
+        (block to use, whether a copy is required)."""
+        if self._ref[bid] <= 1:
+            return bid, False
+        (new,) = self.alloc(1)
+        self._ref[bid] -= 1
+        self.stats["cow_copies"] += 1
+        return new, True

@@ -162,6 +162,36 @@ def test_autotune_cache_roundtrip(tmp_path):
         dispatch.TUNED_TILES.update(snapshot)
 
 
+def test_autotune_cache_default_path_is_cwd_independent(tmp_path,
+                                                        monkeypatch):
+    """Satellite regression: the import-time load used to resolve
+    autotune_cache.json against the CWD, so a stray cache file in an
+    unrelated working directory silently steered kernel tiles.  The
+    default must be repo-anchored ($REPRO_AUTOTUNE_CACHE outranks it)."""
+    from repro.kernels import dispatch
+    assert os.path.isabs(dispatch.DEFAULT_AUTOTUNE_CACHE)
+    # a stray cache in the CWD must NOT be picked up by a default load
+    stray = {"schema": "autotune_cache_v1", "host_backend": None,
+             "entries": [{"regime": "decode", "nb_bucket": 4096,
+                          "n_bucket": 4096, "tiles": [1, 1, 128]}]}
+    import json as _json
+    (tmp_path / "autotune_cache.json").write_text(_json.dumps(stray))
+    monkeypatch.chdir(tmp_path)
+    snapshot = dict(dispatch.TUNED_TILES)
+    try:
+        dispatch.load_autotune_cache(clear=True)
+        assert ("decode", 4096, 4096) not in dispatch.TUNED_TILES
+        # the env var still routes to an explicit file (and logs the load)
+        monkeypatch.setenv(dispatch.AUTOTUNE_CACHE_ENV,
+                           str(tmp_path / "autotune_cache.json"))
+        loaded = dispatch.load_autotune_cache(clear=True)
+        assert loaded == 1
+        assert dispatch.TUNED_TILES[("decode", 4096, 4096)] == (1, 1, 128)
+    finally:
+        dispatch.TUNED_TILES.clear()
+        dispatch.TUNED_TILES.update(snapshot)
+
+
 @pytest.mark.parametrize("backend", ["pallas_interpret", "scatter"])
 def test_fused_epilogue_scale_bias(backend):
     a = random_ternary(jax.random.fold_in(KEY, 5), (128, 37))

@@ -52,6 +52,7 @@ def test_arch_smoke_train_grad(arch):
         assert np.isfinite(np.asarray(leaf, dtype=np.float32)).all(), path
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["gemma-2b", "mamba2-780m",
                                   "recurrentgemma-2b"])
 def test_decode_matches_prefill(arch):
@@ -67,6 +68,7 @@ def test_decode_matches_prefill(arch):
     np.testing.assert_allclose(lg, full[:, -1], rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["gemma-2b", "mamba2-780m",
                                   "deepseek-v2-lite-16b",
                                   "granite-moe-3b-a800m"])
@@ -89,6 +91,7 @@ def test_rsr_serve_matches_dense_serve(arch):
     assert np.abs(np.asarray(lg1) - np.asarray(lg2)).max() / scale < 2e-4
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["recurrentgemma-2b", "mamba2-780m",
                                   "deepseek-v2-lite-16b"])
 def test_chunked_prefill_matches_decode_steps(arch):

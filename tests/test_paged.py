@@ -1,0 +1,264 @@
+"""Paged KV cache: allocator semantics, pool-exhaustion deferral, refcount
+hygiene, copy-on-write divergence, and paged parity beyond the serve config
+(sliding-window ring buffers, MLA latent caches, hybrid SSM stacks)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ServeConfig, get_config
+from repro.models import transformer as tfm
+from repro.serve import paging
+from repro.serve.engine import BatchScheduler, Engine, Request
+
+KEY = jax.random.PRNGKey(0)
+
+CFG = dataclasses.replace(get_config("gemma-2b").reduced(), vocab_size=64,
+                          num_layers=2, d_ff=64, capacity_factor=64.0)
+
+
+def _engine(scfg: ServeConfig, cfg=CFG):
+    params = tfm.init_params(cfg, KEY)
+    return Engine(cfg, tfm.serve_params(params, cfg), scfg), \
+        tfm.serve_params(params, cfg)
+
+
+# ---------------------------------------------------------------------------
+# BlockPool (host allocator) unit semantics
+# ---------------------------------------------------------------------------
+
+def test_block_pool_alloc_free_refcount():
+    pool = paging.BlockPool(4, 8)
+    a, b = pool.alloc(2)
+    assert pool.free_count == 2 and pool.live_refs == 2
+    pool.free(a)
+    assert pool.free_count == 3
+    with pytest.raises(ValueError):
+        pool.free(a)                         # double free
+    with pytest.raises(paging.BlockPoolExhausted):
+        pool.alloc(4)                        # only 3 free — no partial alloc
+    assert pool.free_count == 3              # failed alloc took nothing
+    pool.free(b)
+    assert pool.free_count == 4 and pool.live_refs == 0
+
+
+def test_block_pool_prefix_sharing_and_eviction():
+    pool = paging.BlockPool(4, 2)
+    toks = np.arange(8, dtype=np.int32)
+    hashes = paging.block_hashes(toks, 2)
+    assert len(hashes) == 4
+    # chained: equal prefixes agree, divergence breaks the chain
+    other = paging.block_hashes(
+        np.concatenate([toks[:4], toks[4:] + 1]), 2)
+    assert other[:2] == hashes[:2] and other[2] != hashes[2]
+    (bid,) = pool.alloc(1)
+    pool.register(bid, hashes[0])
+    assert pool.match_prefix(hashes) == [bid]
+    hits = pool.take_prefix(hashes)          # incref
+    assert hits == [bid] and pool.live_refs == 2
+    pool.free(bid)                           # original holder evicts
+    assert pool.match_prefix(hashes) == [bid]   # still resident (our ref)
+    pool.free(bid)                           # last ref -> hash evicted
+    assert pool.match_prefix(hashes) == []
+    assert pool.free_count == 4
+
+
+def test_block_pool_ensure_exclusive_cow():
+    pool = paging.BlockPool(4, 2)
+    (bid,) = pool.alloc(1)
+    same, copied = pool.ensure_exclusive(bid)
+    assert same == bid and not copied        # refcount 1: no copy
+    pool._ref[bid] += 1                      # simulate a second holder
+    new, copied = pool.ensure_exclusive(bid)
+    assert copied and new != bid
+    assert pool._ref[bid] == 1 and pool._ref[new] == 1
+    assert pool.stats["cow_copies"] == 1
+
+
+def test_paged_layout_geometry_and_validation():
+    scfg = ServeConfig(max_seq_len=64, batch_size=2, kv_block_size=8)
+    lay = paging.paged_layout(CFG, scfg)
+    assert lay.mb_full == 8 and lay.mb_ring == 0
+    assert lay.num_blocks == 2 * 8 and lay.trash_block == 16
+    assert lay.blocks_for(1) == 1 and lay.blocks_for(64) == 8
+    assert paging.paged_layout(CFG, ServeConfig(max_seq_len=64)) is None
+    rg = get_config("recurrentgemma-2b").reduced()     # window = 16
+    lay_rg = paging.paged_layout(rg, scfg)
+    assert lay_rg.mb_full == 0 and lay_rg.mb_ring == 2
+    assert lay_rg.ring_slots == 16
+    with pytest.raises(ValueError):                    # 5 doesn't divide 16
+        paging.paged_layout(rg, dataclasses.replace(scfg, kv_block_size=5))
+    assert paging.prefix_sharing_supported(CFG)
+    assert not paging.prefix_sharing_supported(rg)
+
+
+# ---------------------------------------------------------------------------
+# Engine/scheduler edge cases (PR 3 satellite test coverage)
+# ---------------------------------------------------------------------------
+
+def test_pool_exhaustion_defers_admission_and_frees_all_blocks():
+    """A pool too small for all requests at once must DEFER admissions (not
+    crash) and complete every request as evictions free blocks; afterwards
+    every block is back on the free list (no leaks, refcounts at zero)."""
+    scfg = ServeConfig(max_seq_len=64, batch_size=2, kv_block_size=8,
+                       kv_num_blocks=4)      # 1 slot's worth at a time
+    e, _ = _engine(scfg)
+    sched = BatchScheduler(e)
+    rng = np.random.default_rng(1)
+    for i in range(4):
+        sched.submit(Request(rid=i,
+                             prompt=rng.integers(1, 64, 17).astype(np.int32),
+                             max_new=4))     # 17+4 tokens -> 3 blocks each
+    done = sched.run()
+    assert len(done) == 4
+    assert all(r.done and not r.error and len(r.generated) == 4
+               for r in done)
+    assert e.pool.free_count == e.pool.num_blocks
+    assert e.pool.live_refs == 0
+
+
+def test_request_larger_than_pool_fails_at_submit():
+    scfg = ServeConfig(max_seq_len=64, batch_size=2, kv_block_size=8,
+                       kv_num_blocks=2)
+    e, _ = _engine(scfg)
+    sched = BatchScheduler(e)
+    sched.submit(Request(rid=0, prompt=np.ones(30, np.int32), max_new=4))
+    sched.submit(Request(rid=1, prompt=np.ones(9, np.int32), max_new=3))
+    done = sched.run()
+    by_rid = {r.rid: r for r in done}
+    assert by_rid[0].error and "blocks" in by_rid[0].error
+    assert not by_rid[1].error and len(by_rid[1].generated) == 3
+    assert e.pool.free_count == e.pool.num_blocks
+
+
+def test_cow_divergence_after_shared_prefix():
+    """Copy-on-write coverage: prompts whose length is an exact block
+    multiple share ALL their blocks, so recomputing the final prompt token
+    must COW the last shared block; requests diverging after the shared
+    prefix must each decode their solo-generation tokens."""
+    scfg = ServeConfig(max_seq_len=64, batch_size=3, kv_block_size=8)
+    e, sp = _engine(scfg)
+    rng = np.random.default_rng(2)
+    prefix = rng.integers(1, 64, 16).astype(np.int32)   # 2 full blocks
+    tail = rng.integers(1, 64, 5).astype(np.int32)
+    reqs = [Request(rid=0, prompt=prefix.copy(), max_new=6),
+            Request(rid=1, prompt=prefix.copy(), max_new=6),   # COW case
+            Request(rid=2, prompt=np.concatenate([prefix, tail]),
+                    max_new=6)]                                # divergence
+    sched = BatchScheduler(e)
+    for r in reqs:
+        sched.submit(r)
+    done = sched.run()
+    assert len(done) == 3
+    assert e.pool.stats["cow_copies"] >= 1
+    assert e.pool.stats["hit_tokens"] >= 2 * len(prefix)
+    ref = Engine(CFG, sp, ServeConfig(max_seq_len=64, batch_size=1))
+    for r in sorted(done, key=lambda r: r.rid):
+        ref.reset()
+        want = ref.generate(jnp.asarray(r.prompt)[None, :], r.max_new)[0]
+        np.testing.assert_array_equal(np.asarray(r.generated),
+                                      np.asarray(want))
+    assert e.pool.free_count == e.pool.num_blocks
+
+
+def test_prefill_into_reserve_zero_gets_decode_headroom():
+    """Direct engine use: prefill_into with the default reserve=0 must
+    still leave one block of decode headroom past the prompt, so a
+    subsequent decode step never writes the trash block (regression:
+    exact-block-multiple prompts used to scatter the next token's KV into
+    the trash block and silently corrupt logits)."""
+    scfg = ServeConfig(max_seq_len=64, batch_size=1, kv_block_size=8)
+    e, sp = _engine(scfg)
+    e_d = Engine(CFG, sp, ServeConfig(max_seq_len=64, batch_size=1))
+    prompt = np.arange(1, 17, dtype=np.int32)       # 16 = 2 full blocks
+    lg_p = e.prefill_into(0, prompt)                # reserve=0
+    lg_d = e_d.prefill_into(0, prompt)
+    np.testing.assert_array_equal(np.asarray(lg_p), np.asarray(lg_d))
+    assert e._full_count[0] == 3                    # 2 prompt + 1 headroom
+    t = jnp.argmax(lg_p)[None, None].astype(jnp.int32)
+    for _ in range(3):                              # decode inside headroom
+        lg_p, e.cache = e._decode(e.params, e.cache, t)
+        lg_d, e_d.cache = e_d._decode(e_d.params, e_d.cache, t)
+        np.testing.assert_array_equal(np.asarray(lg_p), np.asarray(lg_d))
+        t = jnp.argmax(lg_p, -1)[:, None].astype(jnp.int32)
+
+
+def test_shared_prefix_admission_skips_prefill_compute():
+    """A prefix hit must admit by mapping blocks, only computing the tail:
+    observable as pool stats hits AND bitwise-identical logits to a cold
+    admission of the same prompt."""
+    scfg = ServeConfig(max_seq_len=64, batch_size=2, kv_block_size=8)
+    e, _ = _engine(scfg)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(1, 64, 21).astype(np.int32)   # 2 full blocks + 5
+    cold = np.asarray(e.prefill_into(0, prompt, reserve=2))
+    assert e.pool.stats["hit_tokens"] == 0
+    warm = np.asarray(e.prefill_into(1, prompt, reserve=2))
+    assert e.pool.stats["hit_tokens"] == 16             # both full blocks
+    np.testing.assert_array_equal(cold, warm)
+    # the shared blocks are the SAME physical ids in both tables
+    np.testing.assert_array_equal(e._tables[0][:2], e._tables[1][:2])
+    assert e._tables[0][2] != e._tables[1][2]           # private tails
+
+
+# ---------------------------------------------------------------------------
+# Paged parity beyond the serve config: ring buffers, MLA, hybrid SSM
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,block", [("recurrentgemma-2b", 8),
+                                        ("deepseek-v2-lite-16b", 4),
+                                        ("mamba2-780m", 8)])
+def test_paged_matches_dense_across_families(arch, block):
+    """Sliding-window ring buffers and MLA latent caches read/write through
+    the block table; SSM recurrent state stays per-slot (mamba2 is the
+    degenerate all-SSM case: an empty table and a zero-block pool must
+    still serve).  Greedy decodes must match the dense layout token-for-
+    token (reduced shapes: XLA dot lowering may reassociate, so token
+    equality + tight logits allclose is the bar here; the bitwise bar
+    lives on the serve config in test_serve)."""
+    cfg = dataclasses.replace(get_config(arch).reduced(), vocab_size=64,
+                              capacity_factor=64.0)
+    params = tfm.init_params(cfg, KEY)
+    sp = tfm.serve_params(params, cfg)
+    scfg = ServeConfig(max_seq_len=32, batch_size=2)
+    e_dense = Engine(cfg, sp, scfg)
+    e_paged = Engine(cfg, sp, dataclasses.replace(scfg, kv_block_size=block))
+    assert e_paged.paged
+    prompts = jax.random.randint(jax.random.PRNGKey(8), (2, 20), 0,
+                                 cfg.vocab_size)        # 20 > window=16: wrap
+    lg_d = np.asarray(e_dense.prefill(prompts, start=0))
+    lg_p = np.asarray(e_paged.prefill(prompts, start=0))
+    np.testing.assert_allclose(lg_p, lg_d, rtol=1e-5, atol=1e-5)
+    e_dense.reset(), e_paged.reset()
+    t_d = e_dense.generate(prompts, max_new=8)
+    t_p = e_paged.generate(prompts, max_new=8)
+    np.testing.assert_array_equal(t_d, t_p)
+
+
+def test_paged_scheduler_mixed_lengths_match_per_request():
+    """Continuous batching over the paged cache: mixed-length traffic must
+    decode per-request-identical tokens (the PR-2 scheduler discipline,
+    now with block tables)."""
+    params = tfm.init_params(CFG, KEY)
+    sp = tfm.serve_params(params, CFG)
+    e = Engine(CFG, sp, ServeConfig(max_seq_len=32, batch_size=2,
+                                    prefill_chunk=4, kv_block_size=4))
+    sched = BatchScheduler(e)
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(1, CFG.vocab_size, n).astype(np.int32)
+               for n in (3, 9, 5, 8)]        # 8: exact block multiple
+    for i, p in enumerate(prompts):
+        sched.submit(Request(rid=i, prompt=p, max_new=4))
+    done = sched.run()
+    assert len(done) == 4
+    ref = Engine(CFG, sp, ServeConfig(max_seq_len=32, batch_size=1,
+                                      prefill_chunk=4))
+    for r in sorted(done, key=lambda r: r.rid):
+        ref.reset()
+        want = ref.generate(jnp.asarray(r.prompt)[None, :], r.max_new)[0]
+        np.testing.assert_array_equal(np.asarray(r.generated),
+                                      np.asarray(want))
+    assert e.pool.free_count == e.pool.num_blocks

@@ -122,3 +122,123 @@ def test_decode_throughput_overflow_guard():
     with pytest.raises(ValueError):
         e.decode_throughput(steps=80)
     e.decode_throughput(steps=2, warmup=1)     # within budget: fine
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache (PR 3): bitwise parity vs the dense layout
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["pallas_interpret", "scatter"])
+def test_paged_generate_bitwise_matches_dense(backend):
+    """The paged-cache parity bar (same discipline as the PR-2 chunk-vs-
+    scan tests): block-paged decode AND prefill must be bitwise-equal to
+    the dense layout on the serve test config, per RSR backend."""
+    cfg = dataclasses.replace(CFG, rsr_backend=backend)
+    params = tfm.init_params(cfg, KEY)
+    sp = tfm.serve_params(params, cfg)
+    scfg = ServeConfig(max_seq_len=64, batch_size=2)
+    e_dense = Engine(cfg, sp, scfg)
+    e_paged = Engine(cfg, sp, dataclasses.replace(scfg, kv_block_size=8))
+    assert e_paged.paged and not e_dense.paged
+    prompts = jax.random.randint(jax.random.PRNGKey(5), (2, 9), 0,
+                                 cfg.vocab_size)
+    lg_d = e_dense.prefill(prompts, start=0)
+    lg_p = e_paged.prefill(prompts, start=0)
+    np.testing.assert_array_equal(np.asarray(lg_d), np.asarray(lg_p))
+    e_dense.reset(), e_paged.reset()
+    t_d = e_dense.generate(prompts, max_new=12)
+    t_p = e_paged.generate(prompts, max_new=12)
+    np.testing.assert_array_equal(t_d, t_p)
+
+
+def test_paged_prefill_chunk_parity():
+    """Paged chunked prefill across chunk sizes (incl. a ragged tail) must
+    produce dense-identical last-position logits."""
+    params = tfm.init_params(CFG, KEY)
+    sp = tfm.serve_params(params, CFG)
+    scfg = ServeConfig(max_seq_len=32, batch_size=2)
+    e_dense = Engine(CFG, sp, scfg)
+    e_paged = Engine(CFG, sp, dataclasses.replace(scfg, kv_block_size=4))
+    prompts = jax.random.randint(jax.random.PRNGKey(6), (2, 12), 0,
+                                 CFG.vocab_size)
+    ref = np.asarray(e_dense.prefill(prompts, start=0))
+    for chunk in (1, 7, 12):
+        e_paged.reset()
+        got = np.asarray(e_paged.prefill(prompts, chunk=chunk, start=0))
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_paged_prefill_into_isolates_slot():
+    """Per-slot paged admission must not disturb another slot's blocks."""
+    params = tfm.init_params(CFG, KEY)
+    sp = tfm.serve_params(params, CFG)
+    e = Engine(CFG, sp, ServeConfig(max_seq_len=64, batch_size=2,
+                                    kv_block_size=8))
+    prompts = jax.random.randint(jax.random.PRNGKey(7), (2, 6), 0,
+                                 CFG.vocab_size)
+    e.prefill(prompts, start=0)
+    table0 = e._tables[0].copy()
+    before = [np.asarray(l) for l in
+              jax.tree.leaves(tfm.slot_cache(e.cache, 0, paged=True))]
+    e.prefill_into(1, np.arange(1, 10, dtype=np.int32), chunk=4)
+    np.testing.assert_array_equal(e._tables[0], table0)
+    after = [np.asarray(l) for l in
+             jax.tree.leaves(tfm.slot_cache(e.cache, 0, paged=True))]
+    # slot 0's view: table/pos rows and its blocks' contents are untouched
+    # (pool arrays are shared, so compare the gathered per-slot view)
+    for a, b in zip(before, after):
+        if a.shape == b.shape and a.ndim >= 1 and a.shape[0] != 1:
+            # pool leaf: compare only slot-0-owned blocks
+            for bid in [x for x in table0 if x != e.layout.trash_block]:
+                np.testing.assert_array_equal(a[..., bid, :, :, :]
+                                              if a.ndim > 4 else a[bid],
+                                              b[..., bid, :, :, :]
+                                              if b.ndim > 4 else b[bid])
+        else:
+            np.testing.assert_array_equal(a, b)
+    assert int(tfm.slot_cache(e.cache, 1, paged=True)["pos"][0]) == 9
+
+
+# ---------------------------------------------------------------------------
+# Scheduler robustness (PR 3 satellite bugfixes)
+# ---------------------------------------------------------------------------
+
+def test_scheduler_oversized_request_does_not_abandon_queue():
+    """Regression: an oversized request used to raise mid-run(), abandoning
+    all queued and in-flight requests.  It must be marked failed at
+    submit() and the rest of the queue must drain normally."""
+    e, _ = _engines()                  # max_seq_len = 64
+    sched = BatchScheduler(e)
+    good = [Request(rid=i, prompt=np.ones(4, np.int32) * (i + 1), max_new=3)
+            for i in range(3)]
+    oversized = Request(rid=99, prompt=np.ones(60, np.int32), max_new=10)
+    bad_shape = Request(rid=98, prompt=np.zeros((0,), np.int32), max_new=2)
+    sched.submit(good[0])
+    sched.submit(oversized)            # rejected, queue keeps draining
+    sched.submit(good[1])
+    sched.submit(bad_shape)
+    sched.submit(good[2])
+    done = sched.run()
+    assert len(done) == 5
+    by_rid = {r.rid: r for r in done}
+    assert by_rid[99].error and "max_seq_len" in by_rid[99].error
+    assert by_rid[98].error
+    for r in good:
+        assert by_rid[r.rid].done and not by_rid[r.rid].error
+        assert len(by_rid[r.rid].generated) == 3
+
+
+def test_generate_max_new_zero_and_one():
+    """Regression: generate(prompts, max_new=0) returned shape (B, 1)
+    because the prefill-sampled token was emitted unconditionally."""
+    e, _ = _engines()
+    prompts = jnp.ones((2, 4), jnp.int32)
+    out0 = e.generate(prompts, max_new=0)
+    assert out0.shape == (2, 0)
+    e.reset()
+    out1 = e.generate(prompts, max_new=1)
+    assert out1.shape == (2, 1)
+    e.reset()
+    out3 = e.generate(prompts, max_new=3)
+    assert out3.shape == (2, 3)
+    np.testing.assert_array_equal(out1, out3[:, :1])   # greedy: same head
