@@ -169,6 +169,11 @@ class ServeConfig:
                                       # reuse (repro.serve.paging)
     kv_num_blocks: int = 0            # global pool size; 0 -> auto (the
                                       # dense-equivalent batch * blocks/slot)
+    paged_attn: str = "auto"          # auto | kernel | gather — paged
+                                      # scoring backend (in-place Pallas
+                                      # kernel vs dense-gather reference;
+                                      # $REPRO_PAGED_ATTN outranks this,
+                                      # kernels.paged_attention resolution)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -6,9 +6,15 @@ Layering: ``rsr_onehot`` is the raw kernel (strict tiles, packed-code
 streaming, fused epilogue); ``ops`` wraps it with padding + index-pytree
 dispatch for research use; ``dispatch`` is the serve hot path — backend
 selection (pallas / pallas_interpret / scatter), the tile autotune table,
-and the params-dict contract the model serve graph speaks."""
+and the params-dict contract the model serve graph speaks.
+``paged_attention`` is the KV side of the serve hot path: decode/append
+attention computed in place over the block-paged KV pools through the
+per-slot block tables (no dense gather), behind the ``REPRO_PAGED_ATTN``
+switch."""
 from repro.kernels.dispatch import (rsr_serve_linear, rsr_serve_matmul,
                                     select_backend, select_tiles)
 from repro.kernels.ops import rsr_matmul_kernel, ternary_matmul_kernel
+from repro.kernels.paged_attention import (paged_gqa_attend, paged_mla_attend,
+                                           select_paged_backend)
 from repro.kernels.rsr_onehot import rsr_onehot_matmul
 from repro.kernels.ternary_dequant import ternary_dequant_matmul

@@ -170,11 +170,13 @@ def select_tiles(b: int, nb: int, n: int) -> tuple[int, int, int]:
 
 
 def save_autotune_cache(path: Optional[str] = None) -> str:
-    """Dump TUNED_TILES to JSON (default: $REPRO_AUTOTUNE_CACHE, else the
+    """Dump TUNED_TILES (and the paged-attention query-tile overlay,
+    TUNED_ATTN_TILES) to JSON (default: $REPRO_AUTOTUNE_CACHE, else the
     repo-anchored autotune_cache.json) so a hardware session's measurements
     persist.
     The payload records the measuring host backend; loads on different
     hardware are refused (CPU-interpreter tiles must not steer TPU runs)."""
+    from repro.kernels.paged_attention import TUNED_ATTN_TILES
     path = path or os.environ.get(AUTOTUNE_CACHE_ENV, DEFAULT_AUTOTUNE_CACHE)
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     payload = {
@@ -184,6 +186,9 @@ def save_autotune_cache(path: Optional[str] = None) -> str:
             {"regime": r, "nb_bucket": nbb, "n_bucket": nbk,
              "tiles": list(t)}
             for (r, nbb, nbk), t in sorted(TUNED_TILES.items())],
+        "attn_entries": [
+            {"regime": r, "c_bucket": cb, "tile_c": t}
+            for (r, cb), t in sorted(TUNED_ATTN_TILES.items())],
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
@@ -198,9 +203,11 @@ def load_autotune_cache(path: Optional[str] = None, *, clear: bool = False,
     The default path is $REPRO_AUTOTUNE_CACHE, else the repo-anchored
     DEFAULT_AUTOTUNE_CACHE — never the CWD.  Every applied overlay is
     logged so an operator can tell which file steered the tiles."""
+    from repro.kernels.paged_attention import TUNED_ATTN_TILES
     path = path or os.environ.get(AUTOTUNE_CACHE_ENV, DEFAULT_AUTOTUNE_CACHE)
     if clear:
         TUNED_TILES.clear()
+        TUNED_ATTN_TILES.clear()
     if not os.path.exists(path):
         return 0
     with open(path) as f:
@@ -214,10 +221,15 @@ def load_autotune_cache(path: Optional[str] = None, *, clear: bool = False,
     for e in entries:
         TUNED_TILES[(str(e["regime"]), int(e["nb_bucket"]),
                      int(e["n_bucket"]))] = tuple(int(v) for v in e["tiles"])
-    if entries:
-        _log.info("loaded %d tuned tile entries over the static table "
-                  "from %s", len(entries), path)
-    return len(entries)
+    attn_entries = payload.get("attn_entries", [])
+    for e in attn_entries:
+        TUNED_ATTN_TILES[(str(e["regime"]),
+                          int(e["c_bucket"]))] = int(e["tile_c"])
+    if entries or attn_entries:
+        _log.info("loaded %d tuned tile entries (+%d paged-attn) over the "
+                  "static tables from %s", len(entries), len(attn_entries),
+                  path)
+    return len(entries) + len(attn_entries)
 
 
 # ---------------------------------------------------------------------------

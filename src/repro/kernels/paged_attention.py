@@ -1,0 +1,440 @@
+"""Pallas TPU kernels: paged attention over the block-paged KV cache.
+
+The JAX paged path (``repro.models.attention._gather_blocks``) is bitwise-
+clean but materializes a dense ``(B, S, ·)`` KV view per layer per step:
+every decode step reads the slot's pool blocks, WRITES an S-row dense copy,
+and the score einsums read that copy back — ~3× the KV bytes of the
+sequence, on exactly the memory-bound decode path the RSR kernel exists to
+accelerate.  The kernels here score queries against the pool blocks **in
+place**: the per-slot block table is a scalar-prefetch operand whose values
+drive the KV BlockSpec index maps (the vLLM-TPU idiom), so each physical
+block is DMA'd HBM→VMEM exactly once per step and no dense view ever
+exists.  Softmax is accumulated online across blocks (flash-style running
+max/sum in VMEM scratch), so arbitrarily long tables stream through a
+fixed-size working set.
+
+Kernel family (one grid shape, ``(B, C-tiles, blocks)``, innermost axis
+sequential):
+
+* :func:`paged_gqa_attend` — GQA/MQA over ``(NB+1, KVH, bs, hd)`` pools.
+  ``ring_slots=0`` is the full-attention causal form; ``ring_slots=W``
+  applies the sliding-window ring-buffer age mask instead (the table's
+  ring region, same slot arithmetic as the dense scan step).
+* :func:`paged_mla_attend` — MLA absorbed-decode over the latent pools
+  ``(NB+1, bs, r)`` / ``(NB+1, bs, dr)``: scores are ``q_lat·c + q_pe·pe``
+  and the value side is the latent ``c`` itself (W_UV is applied by the
+  caller, outside the kernel).
+
+C == 1 is the decode step; C > 1 is the chunked append/prefill form (the
+same kernel, query-tiled).  Both assume the chunk's K/V have already been
+scattered into the pool through the table (an O(C) write the caller owns);
+the kernel replaces only the O(S) gather-then-score.
+
+Numerics vs the gather path: identical masking (same NEG_INF, probabilities
+cast to the cache dtype before the PV product, matching the dense einsums)
+but the softmax is accumulated per block instead of in one shot, so results
+agree to float-associativity (~1e-6 f32), not bitwise.  Greedy decodes are
+token-identical on the serve configs (asserted in tests/test_paged_attn.py);
+the gather path remains the bitwise parity reference behind the
+``REPRO_PAGED_ATTN`` switch.
+
+Backend selection mirrors the RSR dispatch contract
+(:func:`repro.kernels.dispatch.select_backend`): explicit argument >
+``REPRO_PAGED_ATTN`` env var > ``ServeConfig.paged_attn`` > default
+(``kernel``).  ``gather`` restores the PR-3 dense-gather path — the right
+tool when debugging paged-cache corruption (it is bitwise-equal to the
+dense layout, so a divergence under ``gather`` is a table/allocator bug,
+while a divergence only under ``kernel`` is a kernel bug).
+
+Tile regime: the query-tile table below mirrors ``AUTOTUNE_TABLE`` in
+dispatch.py — decode (C == 1) runs untiled, prefill chunks tile C to bound
+the (tile_c, H, ·) working set; measured winners land in
+``TUNED_ATTN_TILES`` (per-(regime, C-bucket)) via :func:`autotune_paged_attn`
+and persist through the same autotune_cache.json that stores the RSR tiles.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.rsr_onehot import default_interpret
+
+__all__ = ["PAGED_ATTN_BACKENDS", "select_paged_backend", "paged_gqa_attend",
+           "paged_mla_attend", "PAGED_ATTN_TILES", "TUNED_ATTN_TILES",
+           "select_attn_tiles", "autotune_paged_attn"]
+
+NEG_INF = -1e30                       # matches repro.models.attention.NEG_INF
+
+PAGED_ATTN_BACKENDS = ("kernel", "gather")
+
+_ENV_VAR = "REPRO_PAGED_ATTN"
+
+
+def select_paged_backend(requested: Optional[str] = None,
+                         cfg_default: Optional[str] = None) -> str:
+    """Resolve the paged-attention backend: explicit arg > $REPRO_PAGED_ATTN
+    > ``ServeConfig.paged_attn`` (``cfg_default``) > ``kernel``.  Same
+    resolution contract as the RSR ``select_backend``; the env var is the
+    operator's override (read at trace time — set it before constructing
+    the Engine whose jitted step should use it)."""
+    for cand in (requested, os.environ.get(_ENV_VAR), cfg_default):
+        if cand and cand != "auto":
+            if cand not in PAGED_ATTN_BACKENDS:
+                raise ValueError(
+                    f"paged-attn backend {cand!r} not in "
+                    f"{PAGED_ATTN_BACKENDS}")
+            return cand
+    return "kernel"
+
+
+# ---------------------------------------------------------------------------
+# Query-tile regime table (the attention analogue of dispatch.AUTOTUNE_TABLE)
+# ---------------------------------------------------------------------------
+
+# rows: (regime, max C, tile_c).  Decode (C == 1) is untiled; small append
+# chunks run whole; prefill chunks tile the query axis so the per-grid-step
+# working set (tile_c · H · hd q/out tiles + scratch) stays VMEM-resident
+# while the KV blocks stream through.
+PAGED_ATTN_TILES = (
+    ("decode", 1, 1),
+    ("small", 8, 8),
+    ("prefill", None, 32),
+)
+
+# Measured per-C-bucket overrides, keyed (regime, c_bucket); populated by
+# autotune_paged_attn() and persisted alongside the RSR tiles in
+# autotune_cache.json (see dispatch.save_autotune_cache / load_autotune_cache).
+TUNED_ATTN_TILES: dict[tuple[str, int], int] = {}
+
+
+def _bucket(v: int) -> int:
+    return 1 << max(0, int(v - 1).bit_length())
+
+
+def _attn_regime(c: int) -> str:
+    for name, max_c, _ in PAGED_ATTN_TILES:
+        if max_c is None or c <= max_c:
+            return name
+    return PAGED_ATTN_TILES[-1][0]
+
+
+def select_attn_tiles(c: int) -> int:
+    """Query tile (tile_c) for a C-token append step.  Measured entries
+    (TUNED_ATTN_TILES) outrank the static regime row; either is clamped to
+    the problem (a tile never exceeds C)."""
+    tuned = TUNED_ATTN_TILES.get((_attn_regime(c), _bucket(c)))
+    if tuned is not None:
+        tile_c = tuned
+    else:
+        for _, max_c, tile_c in PAGED_ATTN_TILES:
+            if max_c is None or c <= max_c:
+                break
+    return max(1, min(tile_c, c))
+
+
+# ---------------------------------------------------------------------------
+# GQA / sliding-window-ring kernel
+# ---------------------------------------------------------------------------
+
+def _gqa_paged_kernel(tbl_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
+                      m_ref, l_ref, acc_ref, *, groups: int, n_blocks: int,
+                      ring_slots: int, p_dtype):
+    """One (slot b, query tile, logical block j) grid step.
+
+    q_ref (1, TC, H, hd) pre-scaled queries; k/v_ref (1, KVH, bs, hd) the
+    pool block addressed through the table (scalar-prefetch index map);
+    pos_ref (1, TC) absolute query positions.  Scratch m/l (KVH, TC, G),
+    acc (KVH, TC, G, hd) carry the online softmax across the innermost
+    (sequential) block axis; the output tile is written on the last block.
+    """
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                  # (TC, H, hd)
+    tc, _, hd = q.shape
+    kvh, bs = k_ref.shape[1], k_ref.shape[2]
+    qp = pos_ref[...].reshape(tc, 1)                  # (TC, 1) query positions
+    kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (tc, bs), 1)
+    if ring_slots:
+        # ring-buffer age mask — identical formula to the dense scan step
+        # (attention.gqa_apply window branch): kpos is the RING SLOT index
+        age = jnp.mod(qp - kpos, ring_slots)
+        valid = age < jnp.minimum(qp + 1, ring_slots)
+        valid = valid & ((qp - age) >= 0)
+    else:
+        valid = kpos <= qp                            # causal
+
+    for h in range(kvh):                              # static unroll (small)
+        qh = q[:, h * groups:(h + 1) * groups, :].reshape(tc * groups, hd)
+        kh = k_ref[0, h].astype(jnp.float32)          # (bs, hd)
+        vh = v_ref[0, h].astype(jnp.float32)
+        s = jax.lax.dot_general(qh, kh, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s.reshape(tc, groups, bs)
+        s = jnp.where(valid[:, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m_ref[h], s.max(-1))      # (TC, G)
+        alpha = jnp.exp(m_ref[h] - m_new)
+        # exp(NEG_INF - NEG_INF) == 1 when a whole block is masked before
+        # any valid key arrives — zero masked probabilities explicitly
+        p = jnp.where(valid[:, None, :], jnp.exp(s - m_new[..., None]), 0.0)
+        l_ref[h] = l_ref[h] * alpha + p.sum(-1)
+        # mirror the gather path's pr.astype(cache dtype) before PV
+        pc = p.reshape(tc * groups, bs).astype(p_dtype).astype(jnp.float32)
+        pv = jax.lax.dot_general(pc, vh, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[h] = acc_ref[h] * alpha[..., None] + pv.reshape(tc, groups,
+                                                                hd)
+        m_ref[h] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _project():
+        l = jnp.maximum(l_ref[...], 1e-30)            # (KVH, TC, G)
+        o = acc_ref[...] / l[..., None]               # (KVH, TC, G, hd)
+        tc_, hd_ = o.shape[1], o.shape[3]
+        o_ref[0] = jnp.moveaxis(o, 0, 1).reshape(
+            tc_, -1, hd_).astype(o_ref.dtype)         # (TC, H, hd)
+
+
+def paged_gqa_attend(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                     table: jax.Array, positions: jax.Array, *,
+                     ring_slots: int = 0, tile_c: Optional[int] = None,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """In-place paged attention over GQA pools -> (B, C, H, hd) float32.
+
+    q         : (B, C, H, hd) queries, already scaled (q / sqrt(hd)) and in
+                the cache dtype — mirrors the gather path's score input.
+    k/v_pool  : (NB+1, KVH, bs, hd) global block pools (+1 trash block).
+    table     : (B, MB) int32 physical block ids (the full-attention or
+                ring region of the slot table).
+    positions : (B, C) int32 absolute query positions (the chunk's K/V must
+                already be written at these positions through the table).
+    ring_slots: 0 -> causal full attention over logical blocks; W > 0 ->
+                sliding-window ring-buffer masking (table is the ring
+                region, MB·bs == W).
+    """
+    b, c, h, hd = q.shape
+    mb = table.shape[1]
+    assert mb > 0, "paged attention over an empty block table"
+    kvh, bs = k_pool.shape[1], k_pool.shape[2]
+    groups = h // kvh
+    if interpret is None:
+        interpret = default_interpret()
+    tc = tile_c or select_attn_tiles(c)
+    tc = max(1, min(tc, c))
+    nc = -(-c // tc)
+    pad = nc * tc - c
+    if pad:                                 # padded queries are sliced away;
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        positions = jnp.pad(positions, ((0, 0), (0, pad)), mode="edge")
+    positions = positions.astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, nc, mb),
+        in_specs=[
+            pl.BlockSpec((1, tc, h, hd), lambda bi, ci, j, tbl: (bi, ci, 0,
+                                                                 0)),
+            pl.BlockSpec((1, kvh, bs, hd),
+                         lambda bi, ci, j, tbl: (tbl[bi, j], 0, 0, 0)),
+            pl.BlockSpec((1, kvh, bs, hd),
+                         lambda bi, ci, j, tbl: (tbl[bi, j], 0, 0, 0)),
+            pl.BlockSpec((1, tc), lambda bi, ci, j, tbl: (bi, ci)),
+        ],
+        out_specs=pl.BlockSpec((1, tc, h, hd),
+                               lambda bi, ci, j, tbl: (bi, ci, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((kvh, tc, groups), jnp.float32),
+            pltpu.VMEM((kvh, tc, groups), jnp.float32),
+            pltpu.VMEM((kvh, tc, groups, hd), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_gqa_paged_kernel, groups=groups,
+                               n_blocks=mb, ring_slots=ring_slots,
+                               p_dtype=k_pool.dtype)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, nc * tc, h, hd), jnp.float32),
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )(table.astype(jnp.int32), q, k_pool, v_pool, positions)
+    return out[:, :c]
+
+
+# ---------------------------------------------------------------------------
+# MLA (latent-cache, absorbed decode) kernel
+# ---------------------------------------------------------------------------
+
+def _mla_paged_kernel(tbl_ref, ql_ref, qp_ref, c_ref, pe_ref, pos_ref, o_ref,
+                      m_ref, l_ref, acc_ref, *, n_blocks: int, scale: float,
+                      p_dtype):
+    """MLA step: scores q_lat·c + q_pe·pe (scaled AFTER the sum, like the
+    absorbed dense path), value side is the latent c itself."""
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ql = ql_ref[0].astype(jnp.float32)                # (TC, H, r)
+    qpe = qp_ref[0].astype(jnp.float32)               # (TC, H, dr)
+    tc, h, r = ql.shape
+    cb = c_ref[0].astype(jnp.float32)                 # (bs, r)
+    peb = pe_ref[0].astype(jnp.float32)               # (bs, dr)
+    bs = cb.shape[0]
+    qp = pos_ref[...].reshape(tc, 1)
+    kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (tc, bs), 1)
+    valid = kpos <= qp
+
+    s = jax.lax.dot_general(ql.reshape(tc * h, r), cb,
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s + jax.lax.dot_general(qpe.reshape(tc * h, -1), peb,
+                                (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    s = s.reshape(tc, h, bs) * scale
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    m_new = jnp.maximum(m_ref[...], s.max(-1))        # (TC, H)
+    alpha = jnp.exp(m_ref[...] - m_new)
+    p = jnp.where(valid[:, None, :], jnp.exp(s - m_new[..., None]), 0.0)
+    l_ref[...] = l_ref[...] * alpha + p.sum(-1)
+    pc = p.reshape(tc * h, bs).astype(p_dtype).astype(jnp.float32)
+    pv = jax.lax.dot_general(pc, cb, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha[..., None] + pv.reshape(tc, h, r)
+    m_ref[...] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _project():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def paged_mla_attend(q_lat: jax.Array, q_pe: jax.Array, c_pool: jax.Array,
+                     pe_pool: jax.Array, table: jax.Array,
+                     positions: jax.Array, *, scale: float,
+                     tile_c: Optional[int] = None,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """In-place paged MLA attention -> o_lat (B, C, H, r) float32.
+
+    q_lat (B, C, H, r) absorbed queries and q_pe (B, C, H, dr) rope
+    queries, both in the cache dtype; c_pool (NB+1, bs, r) latent and
+    pe_pool (NB+1, bs, dr) rope-key pools; table (B, MB); positions (B, C).
+    The caller applies W_UV to the returned latent output.
+    """
+    b, c, h, r = q_lat.shape
+    dr = q_pe.shape[-1]
+    mb = table.shape[1]
+    assert mb > 0, "paged attention over an empty block table"
+    bs = c_pool.shape[1]
+    if interpret is None:
+        interpret = default_interpret()
+    tc = tile_c or select_attn_tiles(c)
+    tc = max(1, min(tc, c))
+    nc = -(-c // tc)
+    pad = nc * tc - c
+    if pad:
+        q_lat = jnp.pad(q_lat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pe = jnp.pad(q_pe, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        positions = jnp.pad(positions, ((0, 0), (0, pad)), mode="edge")
+    positions = positions.astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, nc, mb),
+        in_specs=[
+            pl.BlockSpec((1, tc, h, r), lambda bi, ci, j, tbl: (bi, ci, 0,
+                                                                0)),
+            pl.BlockSpec((1, tc, h, dr), lambda bi, ci, j, tbl: (bi, ci, 0,
+                                                                 0)),
+            pl.BlockSpec((1, bs, r), lambda bi, ci, j, tbl: (tbl[bi, j], 0,
+                                                             0)),
+            pl.BlockSpec((1, bs, dr), lambda bi, ci, j, tbl: (tbl[bi, j], 0,
+                                                              0)),
+            pl.BlockSpec((1, tc), lambda bi, ci, j, tbl: (bi, ci)),
+        ],
+        out_specs=pl.BlockSpec((1, tc, h, r),
+                               lambda bi, ci, j, tbl: (bi, ci, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((tc, h), jnp.float32),
+            pltpu.VMEM((tc, h), jnp.float32),
+            pltpu.VMEM((tc, h, r), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_mla_paged_kernel, n_blocks=mb, scale=scale,
+                               p_dtype=c_pool.dtype)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, nc * tc, h, r), jnp.float32),
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )(table.astype(jnp.int32), q_lat, q_pe, c_pool, pe_pool, positions)
+    return out[:, :c]
+
+
+def _compiler_params():
+    cp = getattr(pltpu, "CompilerParams",
+                 getattr(pltpu, "TPUCompilerParams", None))
+    return cp(dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+
+# ---------------------------------------------------------------------------
+# Offline autotune (query-tile winners -> TUNED_ATTN_TILES -> cache file)
+# ---------------------------------------------------------------------------
+
+def autotune_paged_attn(c: int, *, heads: int = 8, kv_heads: int = 1,
+                        head_dim: int = 128, block_size: int = 16,
+                        num_blocks: int = 16,
+                        candidates=(1, 8, 16, 32, 64),
+                        reps: int = 3, write=None) -> dict:
+    """Measure query-tile candidates for a C-token append step at the given
+    cache geometry; records the winner in TUNED_ATTN_TILES under its
+    (regime, C-bucket) key and (with ``write``) persists it through the
+    shared autotune cache (dispatch.save_autotune_cache)."""
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (1, c, heads, head_dim))
+    k_pool = jax.random.normal(kk, (num_blocks + 1, kv_heads, block_size,
+                                    head_dim))
+    v_pool = jax.random.normal(kv, (num_blocks + 1, kv_heads, block_size,
+                                    head_dim))
+    table = jnp.arange(num_blocks, dtype=jnp.int32)[None, :]
+    positions = jnp.arange(c, dtype=jnp.int32)[None, :]
+    rows = []
+    seen = set()
+    for cand in candidates:
+        tc = max(1, min(cand, c))
+        if tc in seen:
+            continue
+        seen.add(tc)
+        fn = jax.jit(functools.partial(paged_gqa_attend, tile_c=tc))
+        fn(q, k_pool, v_pool, table, positions).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            fn(q, k_pool, v_pool, table, positions).block_until_ready()
+        rows.append((tc, (time.perf_counter() - t0) / reps * 1e6))
+    rows.sort(key=lambda r: r[1])
+    key_t = (_attn_regime(c), _bucket(c))
+    TUNED_ATTN_TILES[key_t] = rows[0][0]
+    out = {"tile_c": rows[0][0], "us": rows[0][1], "rows": rows,
+           "key": key_t}
+    if write:
+        from repro.kernels.dispatch import save_autotune_cache
+        out["cache_path"] = save_autotune_cache(
+            None if write is True else write)
+    return out

@@ -20,12 +20,20 @@ global block pool (``repro.serve.paging``).  Layer storage becomes a pool
 array with a leading physical-block axis — gqa/local ``(NB+1, KVH, bs, hd)``,
 mla ``(NB+1, bs, r)`` — and reads/writes go through the per-slot block
 ``table`` of physical ids: position p (or ring slot r) writes pool block
-``table[b, p // bs]`` at offset ``p % bs``, and attention gathers the
-table's blocks back into the SAME dense (B, KVH, S, hd) view the dense path
-carries, then runs the identical scoring code.  That gather-then-identical-
-math structure is what makes the paged path bitwise-equal to the dense path
-(the parity bar in tests/test_serve.py); a Pallas paged-attention kernel
-that skips the materialized view is the ROADMAP follow-on.
+``table[b, p // bs]`` at offset ``p % bs``.  Scoring then takes one of two
+backends (``paged_backend``, resolved by
+``repro.kernels.paged_attention.select_paged_backend``):
+
+* ``kernel`` (default): the Pallas paged-attention kernel scores the
+  queries against the pool blocks IN PLACE — the block table drives the
+  kernel's KV index maps, softmax accumulates online across blocks, and no
+  dense per-slot view is ever materialized (the O(S) HBM win on decode).
+* ``gather``: the PR-3 reference — the table's blocks are gathered back
+  into the SAME dense (B, KVH, S, hd) view the dense path carries, then
+  the identical scoring code runs.  That gather-then-identical-math
+  structure is what makes this path bitwise-equal to the dense layout
+  (the parity bar in tests/test_serve.py), which is exactly what makes it
+  the right debugging reference for the kernel.
 """
 from __future__ import annotations
 
@@ -37,6 +45,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
+from repro.kernels.paged_attention import paged_gqa_attend, paged_mla_attend
 from repro.models import modules as nn
 
 NEG_INF = -1e30
@@ -200,11 +209,14 @@ def init_gqa(key, cfg: ModelConfig) -> dict:
 def gqa_apply(p: dict, x: jax.Array, *, cfg: ModelConfig, lin,
               window: int = 0, positions: Optional[jax.Array] = None,
               cache: Optional[dict] = None, pos: Optional[jax.Array] = None,
-              table: Optional[jax.Array] = None):
+              table: Optional[jax.Array] = None,
+              paged_backend: str = "gather"):
     """Full-seq when cache is None, else cached chunk step (C = x.shape[1]
     tokens appended at per-slot positions `pos`; C == 1 is classic decode).
-    With ``table`` the cache is a paged block pool — reads/writes are
-    indirected through the block table, the math is unchanged.
+    With ``table`` the cache is a paged block pool — writes are indirected
+    through the block table, and ``paged_backend`` picks the scoring path:
+    the in-place Pallas ``kernel`` or the dense-view ``gather`` reference
+    (see module docstring).
 
     Returns (out, new_cache)."""
     b, s, _ = x.shape
@@ -263,6 +275,12 @@ def gqa_apply(p: dict, x: jax.Array, *, cfg: ModelConfig, lin,
                     table, (slot_t // blk_sz)[:, None], axis=1)[:, 0]
                 ck = ck.at[blk, :, slot_t % blk_sz].set(kt.astype(ck.dtype))
                 cv = cv.at[blk, :, slot_t % blk_sz].set(vt.astype(cv.dtype))
+                if paged_backend == "kernel":
+                    # in-place scoring over the ring blocks: no dense view
+                    qk = (qt[:, None] / math.sqrt(hd)).astype(ck.dtype)
+                    ot = paged_gqa_attend(qk, ck, cv, table, pt[:, None],
+                                          ring_slots=slots)[:, 0]
+                    return (ck, cv), ot.reshape(b, kvh, groups, hd)
                 ckd = _gather_blocks(ck, table)
                 cvd = _gather_blocks(cv, table)
             else:
@@ -294,13 +312,21 @@ def gqa_apply(p: dict, x: jax.Array, *, cfg: ModelConfig, lin,
 
     if table is not None:
         # paged write: position p of row b lands in pool block
-        # table[b, p // bs] at offset p % bs, then the table's blocks are
-        # gathered back into the dense view the scoring code expects
+        # table[b, p // bs] at offset p % bs
         blk_sz = cache["k"].shape[2]
         blk = jnp.take_along_axis(table, positions // blk_sz, axis=1)
         off = positions % blk_sz
         ck = cache["k"].at[blk, :, off].set(k.astype(cache["k"].dtype))
         cv = cache["v"].at[blk, :, off].set(v.astype(cache["v"].dtype))
+        if paged_backend == "kernel":
+            # score in place over the pool blocks (online softmax through
+            # the table); the dense view below is never built
+            qk = (q / math.sqrt(hd)).astype(ck.dtype)
+            out = paged_gqa_attend(qk, ck, cv, table, positions)
+            out = lin(p["wo"], out.astype(x.dtype).reshape(b, s, h * hd))
+            return out, {"k": ck, "v": cv}
+        # gather reference: the table's blocks materialized back into the
+        # dense view the scoring code expects (bitwise-equal to dense)
         ckd = _gather_blocks(ck, table)
         cvd = _gather_blocks(cv, table)
         smax = ckd.shape[2]
@@ -363,7 +389,8 @@ def init_mla(key, cfg: ModelConfig) -> dict:
 
 def mla_apply(p: dict, x: jax.Array, *, cfg: ModelConfig, lin,
               cache: Optional[dict] = None, pos: Optional[jax.Array] = None,
-              table: Optional[jax.Array] = None):
+              table: Optional[jax.Array] = None,
+              paged_backend: str = "gather"):
     b, s, _ = x.shape
     h = cfg.num_heads
     dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
@@ -391,9 +418,15 @@ def mla_apply(p: dict, x: jax.Array, *, cfg: ModelConfig, lin,
     positions = posv[:, None] + jnp.arange(s)[None, :]        # (B, C)
     q_pe = nn.apply_rope(q_pe, positions, theta=cfg.rope_theta)
     k_pe = nn.apply_rope(k_pe, positions, theta=cfg.rope_theta)
+    # absorb W_UK into q:  q_lat[b,c,h,r] = Σ_dn q_nope · W_UK[r, h*dn]
+    # (cache stays in storage dtype — see gqa_apply decode note)
+    w_uk = p["w_uk"]["w"].reshape(r, h, dn)
+    q_lat = jnp.einsum("bchd,rhd->bchr", q_nope.astype(w_uk.dtype),
+                       w_uk, preferred_element_type=jnp.float32)
+    scale = 1.0 / math.sqrt(dn + dr)
     if table is not None:
         # paged latent cache: pools (NB+1, bs, r) / (NB+1, bs, dr); write
-        # through the block table, gather back the dense (B, S, ·) views
+        # through the block table
         blk_sz = cache["c_kv"].shape[1]
         blk = jnp.take_along_axis(table, positions // blk_sz, axis=1)
         off = positions % blk_sz
@@ -401,8 +434,17 @@ def mla_apply(p: dict, x: jax.Array, *, cfg: ModelConfig, lin,
             c_kv.astype(cache["c_kv"].dtype))
         pe_cache = cache["k_pe"].at[blk, off].set(
             k_pe[:, :, 0].astype(cache["k_pe"].dtype))
-        c_d = c_cache[table].reshape(b, -1, r)
-        pe_d = pe_cache[table].reshape(b, -1, dr)
+        if paged_backend == "kernel":
+            # score in place over the latent pool blocks; W_UV applies to
+            # the kernel's latent output in the shared epilogue below
+            o_lat = paged_mla_attend(
+                q_lat.astype(c_cache.dtype), q_pe.astype(pe_cache.dtype),
+                c_cache, pe_cache, table, positions, scale=scale)
+            c_d = None                     # dense views never built
+        else:
+            # gather reference: dense (B, S, ·) views of the table's blocks
+            c_d = c_cache[table].reshape(b, -1, r)
+            pe_d = pe_cache[table].reshape(b, -1, dr)
     else:
         b_idx = jnp.arange(b)[:, None]
         c_cache = cache["c_kv"].at[b_idx, positions].set(
@@ -410,23 +452,18 @@ def mla_apply(p: dict, x: jax.Array, *, cfg: ModelConfig, lin,
         pe_cache = cache["k_pe"].at[b_idx, positions].set(
             k_pe[:, :, 0].astype(cache["k_pe"].dtype))
         c_d, pe_d = c_cache, pe_cache
-    # absorb W_UK into q:  q_lat[b,c,h,r] = Σ_dn q_nope · W_UK[r, h*dn]
-    # (cache stays in storage dtype — see gqa_apply decode note)
-    w_uk = p["w_uk"]["w"].reshape(r, h, dn)
-    q_lat = jnp.einsum("bchd,rhd->bchr", q_nope.astype(w_uk.dtype),
-                       w_uk, preferred_element_type=jnp.float32)
-    scale = 1.0 / math.sqrt(dn + dr)
-    s_lat = jnp.einsum("bchr,bkr->bchk", q_lat.astype(c_d.dtype),
-                       c_d, preferred_element_type=jnp.float32)
-    s_pe = jnp.einsum("bchd,bkd->bchk", q_pe.astype(pe_d.dtype),
-                      pe_d, preferred_element_type=jnp.float32)
-    s_ = (s_lat + s_pe) * scale
-    mask = (jnp.arange(c_d.shape[1])[None, None, :]
-            <= positions[:, :, None])                         # (B,C,S)
-    s_ = jnp.where(mask[:, :, None, :], s_, NEG_INF)
-    pr = jax.nn.softmax(s_, axis=-1).astype(c_d.dtype)
-    o_lat = jnp.einsum("bchk,bkr->bchr", pr, c_d,
-                       preferred_element_type=jnp.float32)
+    if c_d is not None:
+        s_lat = jnp.einsum("bchr,bkr->bchk", q_lat.astype(c_d.dtype),
+                           c_d, preferred_element_type=jnp.float32)
+        s_pe = jnp.einsum("bchd,bkd->bchk", q_pe.astype(pe_d.dtype),
+                          pe_d, preferred_element_type=jnp.float32)
+        s_ = (s_lat + s_pe) * scale
+        mask = (jnp.arange(c_d.shape[1])[None, None, :]
+                <= positions[:, :, None])                     # (B,C,S)
+        s_ = jnp.where(mask[:, :, None, :], s_, NEG_INF)
+        pr = jax.nn.softmax(s_, axis=-1).astype(c_d.dtype)
+        o_lat = jnp.einsum("bchk,bkr->bchr", pr, c_d,
+                           preferred_element_type=jnp.float32)
     w_uv = p["w_uv"]["w"].reshape(r, h, dv)
     out = jnp.einsum("bchr,rhd->bchd", o_lat.astype(w_uv.dtype), w_uv,
                      preferred_element_type=jnp.float32)

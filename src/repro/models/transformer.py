@@ -83,10 +83,13 @@ def init_layer(key, cfg: ModelConfig, kind: str, use_moe: bool) -> dict:
 
 def apply_layer(p: dict, x: jax.Array, *, kind: str, cfg: ModelConfig,
                 lin, image_embeds=None, cache: Optional[dict] = None,
-                pos: Optional[jax.Array] = None, tables=None):
+                pos: Optional[jax.Array] = None, tables=None,
+                paged_attn: str = "gather"):
     """Returns (x, aux_loss, new_cache).  ``tables`` is the paged-mode pair
     (full-attention table, ring table); attention layers pick theirs, SSM /
-    cross-attention state is per-slot and ignores it."""
+    cross-attention state is per-slot and ignores it.  ``paged_attn``
+    selects the paged scoring backend (in-place Pallas ``kernel`` vs the
+    dense-view ``gather`` reference; see repro.kernels.paged_attention)."""
     aux = jnp.zeros((), jnp.float32)
     h = nn.norm_apply(p["ln1"], x, cfg=cfg)
     new_cache = cache
@@ -96,11 +99,13 @@ def apply_layer(p: dict, x: jax.Array, *, kind: str, cfg: ModelConfig,
         if cfg.attention == "mla":
             out, new_cache = attn.mla_apply(p["attn"], h, cfg=cfg, lin=lin,
                                             cache=cache, pos=pos,
-                                            table=table_full)
+                                            table=table_full,
+                                            paged_backend=paged_attn)
         else:
             out, new_cache = attn.gqa_apply(
                 p["attn"], h, cfg=cfg, lin=lin, window=window, cache=cache,
-                pos=pos, table=table_ring if window > 0 else table_full)
+                pos=pos, table=table_ring if window > 0 else table_full,
+                paged_backend=paged_attn)
     elif kind == "xattn":
         out, new_cache = attn.cross_apply(p["attn"], h, image_embeds, cfg=cfg,
                                           lin=lin, cache=cache)
@@ -309,7 +314,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, *,
 
 
 def prefill_step(params: dict, cache: dict, tokens: jax.Array,
-                 cfg: ModelConfig, layout=None) -> tuple:
+                 cfg: ModelConfig, layout=None,
+                 paged_attn: str = "gather") -> tuple:
     """Chunk of C ≥ 1 tokens per sequence against the live cache.
 
     tokens (B, C) -> (last-position logits (B, V), new cache); the per-slot
@@ -320,10 +326,15 @@ def prefill_step(params: dict, cache: dict, tokens: jax.Array,
 
     ``layout`` (a static ``repro.serve.paging.PagedLayout``) switches the
     KV side to the block-paged cache: the shared ``cache['table']`` is
-    split into its full-attention and ring column ranges and handed to the
-    attention layers, which write/read pool blocks through it.  The layer
-    math is otherwise identical, and the table passes through unchanged
-    (block assignment is host-side engine work).
+    split into its full-attention and ring column ranges and handed DOWN
+    TO THE ATTENTION LAYERS AS DEVICE ARRAYS — with ``paged_attn ==
+    "kernel"`` (the default Engine resolution) the table reaches the
+    Pallas paged-attention kernel as a scalar-prefetch operand whose
+    values drive the KV block index maps, so attention runs in place over
+    the pool; with ``"gather"`` the layers materialize the dense per-slot
+    view first (the bitwise parity reference).  The layer math is
+    otherwise identical, and the table passes through unchanged (block
+    assignment is host-side engine work).
     """
     lin = _lin(cfg, quantize=False)
     head_kinds, pat, n_super, tail_kinds = _layer_split(cfg)
@@ -337,7 +348,7 @@ def prefill_step(params: dict, cache: dict, tokens: jax.Array,
     new_head = []
     for p, kind, c in zip(params["head_layers"], head_kinds, cache["head"]):
         x, _, nc = apply_layer(p, x, kind=kind, cfg=cfg, lin=lin, cache=c,
-                               pos=pos, tables=tables)
+                               pos=pos, tables=tables, paged_attn=paged_attn)
         new_head.append(nc)
 
     new_blocks = {}
@@ -349,7 +360,7 @@ def prefill_step(params: dict, cache: dict, tokens: jax.Array,
                 x, _, nc = apply_layer(sb_params[f"slot{j}"], x, kind=kind,
                                        cfg=cfg, lin=lin,
                                        cache=sb_cache[f"slot{j}"], pos=pos,
-                                       tables=tables)
+                                       tables=tables, paged_attn=paged_attn)
                 new_c[f"slot{j}"] = nc
             return x, new_c
         x, new_blocks = jax.lax.scan(superblock, x,
@@ -358,7 +369,7 @@ def prefill_step(params: dict, cache: dict, tokens: jax.Array,
     new_tail = []
     for p, kind, c in zip(params["tail_layers"], tail_kinds, cache["tail"]):
         x, _, nc = apply_layer(p, x, kind=kind, cfg=cfg, lin=lin, cache=c,
-                               pos=pos, tables=tables)
+                               pos=pos, tables=tables, paged_attn=paged_attn)
         new_tail.append(nc)
 
     # only the chunk's last position feeds sampling (interior chunk logits

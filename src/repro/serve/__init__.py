@@ -1,1 +1,36 @@
-"""Subsystem package."""
+"""Serving subsystem: the RSR engine, continuous batching, and the
+block-paged KV cache.
+
+* ``engine``  — ``Engine`` (chunked prefill + decode over one jitted step)
+  and ``BatchScheduler`` (continuous batching with validate-at-submit).
+* ``paging``  — ``PagedLayout`` geometry, the host-side ``BlockPool``
+  allocator (refcounts, chained prefix hashing, copy-on-write, and the
+  LRU warm list of freed-but-still-registered blocks), ``block_hashes``.
+
+The ``REPRO_PAGED_ATTN`` switch
+-------------------------------
+With paging enabled (``ServeConfig.kv_block_size > 0``) attention has two
+scoring backends, resolved at Engine construction (``ServeConfig
+.paged_attn``, outranked by the ``$REPRO_PAGED_ATTN`` env var; see
+``repro.kernels.paged_attention.select_paged_backend``):
+
+* ``kernel`` (default) — the Pallas paged-attention kernel attends in
+  place over the pool blocks through the per-slot block table: one DMA
+  pass over the sequence's KV per layer step, online softmax, no dense
+  per-slot view.  This is the production serve path and the TPU-memory
+  win; it matches ``gather`` to float associativity (~1e-6 f32), with
+  token-identical greedy decodes.
+* ``gather`` — the dense-gather reference: pool blocks are materialized
+  back into the per-slot ``(B, S, ·)`` view and the dense scoring code
+  runs.  It is bitwise-equal to the unpaged dense layout by construction.
+
+When to reach for ``gather``: it is the debugging fallback, not a perf
+mode.  If paged serving misbehaves, rerun under
+``REPRO_PAGED_ATTN=gather`` — if the problem persists, the bug is in the
+block tables / allocator / COW plumbing (compare against a dense-layout
+engine, which must be bitwise-identical); if the problem disappears, the
+bug is in the paged-attention kernel (compare kernel output against the
+gather math directly, as tests/test_paged_attn.py does).  ``gather`` is
+also the right baseline when measuring what the in-place kernel buys,
+e.g. ``benchmarks/run.py --only paged_attn``.
+"""

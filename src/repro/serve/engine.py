@@ -27,6 +27,19 @@ Cache layouts (``ServeConfig.kv_block_size``):
   admission, where the scheduler defers instead of failing.  SSM/conv and
   cross-attention states are position-free and stay per-slot.
 
+Paged attention backend (``ServeConfig.paged_attn``, operator override
+``REPRO_PAGED_ATTN``, resolved once at Engine construction): ``kernel``
+(default) scores decode/prefill queries IN PLACE over the pool blocks with
+the Pallas paged-attention kernel — the block table is a scalar-prefetch
+operand driving the kernel's KV index maps, softmax accumulates online
+across blocks, and no dense per-slot KV view is materialized (1 pass over
+O(S) KV per layer step instead of the gather path's read+write+read).
+``gather`` restores the PR-3 materialize-then-score path, which is
+bitwise-equal to the dense layout — the right debugging reference: a
+divergence that reproduces under ``gather`` is a table/allocator bug, one
+that only appears under ``kernel`` is a kernel bug (and ``kernel`` vs
+``gather`` differ only by float associativity, so greedy tokens match).
+
 Shared-prefix reuse (paged + ``paging.prefix_sharing_supported(cfg)``):
 full prompt blocks are content-hashed (chained, so a hit implies the whole
 prefix matches); an admission whose leading blocks are already resident
@@ -35,8 +48,10 @@ least the final prompt token is always recomputed so admission still
 yields last-position logits.  When that tail write lands inside a shared
 block (prompt length an exact block multiple), the block is copy-on-
 written first (``BlockPool.ensure_exclusive`` + ``tfm.copy_pool_block``).
-Blocks are freed on eviction; the last reference returning to the pool
-also evicts the hash registration.
+Blocks are freed on eviction; a freed block that still carries a hash
+registration moves to the pool's WARM list — matchable by later
+admissions at zero prefill cost, reclaimed LRU-first when ``alloc`` runs
+dry — so a prefix hit no longer requires a resident holder.
 
 Block-table contract (device side): ``cache['table']`` is ``(batch,
 mb_full + mb_ring) int32`` of physical ids; logical full block j of slot b
@@ -69,6 +84,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig, ServeConfig
+from repro.kernels import paged_attention
 from repro.models import transformer as tfm
 from repro.serve import paging
 
@@ -82,19 +98,27 @@ class Engine:
         self.cache = tfm.init_cache(cfg, self.batch, scfg.max_seq_len,
                                     layout=self.layout)
         paged = self.layout is not None
+        # paged scoring backend, resolved ONCE (the jitted step closes over
+        # it): in-place Pallas kernel (default) vs the dense-gather parity
+        # reference.  $REPRO_PAGED_ATTN outranks scfg.paged_attn — set it
+        # before constructing the Engine whose step should use it.
+        self.paged_attn = (paged_attention.select_paged_backend(
+            None, scfg.paged_attn) if paged else None)
+        mode = self.paged_attn or "gather"
         # one jitted step for both regimes: (B, C) tokens -> last logits;
         # jax caches a compile per distinct C (decode C=1, the prefill
         # chunk, and at most one ragged remainder per prompt length).
         # The static paged layout is closed over, not an argument.
         layout = self.layout
         self._step = jax.jit(
-            lambda p, c, t: tfm.prefill_step(p, c, t, cfg, layout=layout))
+            lambda p, c, t: tfm.prefill_step(p, c, t, cfg, layout=layout,
+                                             paged_attn=mode))
         self._decode = self._step                  # (B, 1): decode == C=1
 
         def _scan(p, c, toks):                     # toks (B, S)
             def step(c, t):
                 logits, c = tfm.prefill_step(p, c, t[:, None], cfg,
-                                             layout=layout)
+                                             layout=layout, paged_attn=mode)
                 return c, logits
             c, logits = jax.lax.scan(step, c, jnp.moveaxis(toks, 1, 0))
             return c, logits[-1]
@@ -168,13 +192,15 @@ class Engine:
             self._full_count[slot] = need
 
     def _admission_plan(self, prompt: np.ndarray, max_new: int):
-        """(hashes, hits, tail_start, cow, fresh_needed) for admitting
-        `prompt` with `max_new` reserved decode tokens, WITHOUT mutating
-        allocator state (the hits are not claimed yet).  ``fresh_needed``
-        is exact: ring blocks + non-shared full blocks (incl. one decode-
-        headroom block, see ``PagedLayout.blocks_for_admission``) + the
-        copy-on-write replacement when the tail write would land in a
-        shared block."""
+        """(hashes, hits, tail_start, cow, demand) for admitting `prompt`
+        with `max_new` reserved decode tokens, WITHOUT mutating allocator
+        state (the hits are not claimed yet).  ``demand`` counts the blocks
+        the admission takes OUT of the pool's claimable set: ring blocks +
+        non-shared full blocks (incl. one decode-headroom block, see
+        ``PagedLayout.blocks_for_admission``) + the copy-on-write
+        replacement when the tail write would land in a shared block + any
+        WARM hits (an evicted-but-unreclaimed hit still counts toward
+        ``free_count`` until taking it revives it)."""
         lay = self.layout
         L = len(prompt)
         hashes = (paging.block_hashes(prompt, lay.block_size)
@@ -183,9 +209,14 @@ class Engine:
         shared_tok = len(hits) * lay.block_size
         tail_start = min(shared_tok, L - 1)
         cow = tail_start < shared_tok          # tail writes a shared block
+        # ... but a WARM last hit revives to refcount 1, so ensure_exclusive
+        # will NOT copy — charging it anyway would overstate demand and can
+        # deadlock a request whose worst case exactly fills the pool
+        cow_charge = 1 if (cow and not self.pool.is_warm(hits[-1])) else 0
         total = lay.blocks_for_admission(L, max_new)
-        fresh_needed = (total - len(hits)) + (1 if cow else 0) + lay.mb_ring
-        return hashes, hits, tail_start, cow, fresh_needed
+        warm = sum(1 for bid in hits if self.pool.is_warm(bid))
+        demand = (total - len(hits)) + cow_charge + lay.mb_ring + warm
+        return hashes, hits, tail_start, cow, demand
 
     def can_admit(self, prompt, max_new: int):
         """Pool-capacity check for one admission (no allocator mutation).

@@ -31,9 +31,17 @@ a live request's blocks), and the cache tree gains one shared
 
 Sharing rules:
 
-* Only FULL prompt blocks are ever registered for sharing, and only while a
-  holder is resident (refcount > 0); freeing the last reference evicts the
-  hash entry.  Partial tail blocks and every decode-time block are private.
+* Only FULL prompt blocks are ever registered for sharing.  Partial tail
+  blocks and every decode-time block are private.
+* A registered block whose LAST reference is freed is not returned to the
+  free list immediately: it moves to the WARM list — still content-
+  addressable by its hash (a later admission with the same prefix revives
+  it at zero prefill cost), but reclaimable at any moment.  ``alloc``
+  drains the free list first and then reclaims warm blocks oldest-freed
+  first (LRU), evicting their hash registration; a warm hit therefore no
+  longer requires a resident holder, which lifts hit rates across quiet
+  periods (ROADMAP follow-on (d)).  ``free_count`` counts free + warm —
+  the capacity the scheduler can actually claim.
 * Ring-region blocks are always private: ring content depends on wrap
   history, not just token identity.
 * Prefix reuse is enabled only for model families whose entire cached state
@@ -47,6 +55,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+from collections import OrderedDict
 from typing import List, Optional, Sequence
 
 import numpy as np
@@ -163,11 +172,14 @@ def block_hashes(tokens: np.ndarray, block_size: int) -> List[bytes]:
 
 
 class BlockPool:
-    """Host-side block allocator with refcounts and prefix-hash sharing.
+    """Host-side block allocator with refcounts, prefix-hash sharing, and a
+    warm list of freed-but-still-registered blocks (LRU-reclaimed).
 
     All methods are O(blocks touched); no device arrays pass through here.
     ``stats`` accumulates admission-time prefix-cache counters for the
-    benchmark harness (hit-rate = hit_tokens / lookup_tokens).
+    benchmark harness (hit-rate = hit_tokens / lookup_tokens;
+    ``warm_hit_blocks`` counts revivals of evicted-but-unreclaimed blocks,
+    ``warm_reclaims`` counts warm blocks cannibalized by ``alloc``).
     """
 
     def __init__(self, num_blocks: int, block_size: int, *,
@@ -179,14 +191,26 @@ class BlockPool:
         self._ref = np.zeros(self.num_blocks, np.int64)
         self._hash_to_bid: dict[bytes, int] = {}
         self._bid_to_hash: dict[int, bytes] = {}
+        # freed blocks whose hash registration is kept until reclaimed;
+        # insertion order == freeing order, so popitem(last=False) is LRU
+        self._warm: "OrderedDict[int, bytes]" = OrderedDict()
         self.stats = {"admissions": 0, "lookup_tokens": 0, "hit_tokens": 0,
-                      "cow_copies": 0}
+                      "cow_copies": 0, "warm_hit_blocks": 0,
+                      "warm_reclaims": 0}
 
     # -- bookkeeping -------------------------------------------------------
 
     @property
     def free_count(self) -> int:
-        return len(self._free)
+        """Blocks an alloc() can claim: truly free + warm (reclaimable)."""
+        return len(self._free) + len(self._warm)
+
+    @property
+    def warm_count(self) -> int:
+        return len(self._warm)
+
+    def is_warm(self, bid: int) -> bool:
+        return bid in self._warm
 
     @property
     def live_refs(self) -> int:
@@ -194,33 +218,52 @@ class BlockPool:
 
     def alloc(self, n: int = 1) -> List[int]:
         """Take n fresh blocks (refcount 1 each); raises BlockPoolExhausted
-        when fewer than n are free (no partial allocation)."""
-        if n > len(self._free):
+        when fewer than n are claimable (no partial allocation).  The free
+        list drains first; then warm blocks are reclaimed oldest-freed
+        first, evicting their hash registration."""
+        if n > self.free_count:
             raise BlockPoolExhausted(
-                f"need {n} blocks, {len(self._free)} free "
+                f"need {n} blocks, {self.free_count} free "
                 f"(pool={self.num_blocks})")
-        bids = [self._free.pop() for _ in range(n)]
-        for b in bids:
-            self._ref[b] = 1
+        bids = []
+        for _ in range(n):
+            if self._free:
+                bid = self._free.pop()
+            else:
+                bid, _h = self._warm.popitem(last=False)    # LRU reclaim
+                self._evict_registration(bid)
+                self.stats["warm_reclaims"] += 1
+            self._ref[bid] = 1
+            bids.append(bid)
         return bids
 
+    def _evict_registration(self, bid: int) -> None:
+        h = self._bid_to_hash.pop(bid, None)
+        if h is not None and self._hash_to_bid.get(h) == bid:
+            del self._hash_to_bid[h]
+
     def free(self, bid: int) -> None:
-        """Drop one reference; at zero the block returns to the free list
-        and its hash registration (if any) is evicted."""
+        """Drop one reference.  At zero a hash-registered block moves to
+        the warm list (still matchable, reclaimable); an unregistered one
+        returns straight to the free list."""
         if self._ref[bid] <= 0:
             raise ValueError(f"double free of block {bid}")
         self._ref[bid] -= 1
         if self._ref[bid] == 0:
-            h = self._bid_to_hash.pop(bid, None)
-            if h is not None and self._hash_to_bid.get(h) == bid:
-                del self._hash_to_bid[h]
-            self._free.append(bid)
+            h = self._bid_to_hash.get(bid)
+            if (self.sharing and h is not None
+                    and self._hash_to_bid.get(h) == bid):
+                self._warm[bid] = h        # keep registration until reclaim
+            else:
+                self._evict_registration(bid)
+                self._free.append(bid)
 
     # -- prefix sharing ----------------------------------------------------
 
     def match_prefix(self, hashes: Sequence[bytes]) -> List[int]:
-        """Longest chain of resident shared blocks for `hashes` (no incref —
-        a capacity estimate for admission control)."""
+        """Longest chain of matchable shared blocks for `hashes` — resident
+        holders AND warm (evicted-but-unreclaimed) blocks (no incref — a
+        capacity estimate for admission control)."""
         out: List[int] = []
         if not self.sharing:
             return out
@@ -232,11 +275,18 @@ class BlockPool:
         return out
 
     def take_prefix(self, hashes: Sequence[bytes]) -> List[int]:
-        """match_prefix + incref each hit; updates the hit-rate stats
+        """match_prefix + claim each hit (incref; a warm hit is revived off
+        the warm list first — its contents are still in the pool, so the
+        admission pays zero prefill for it); updates the hit-rate stats
         (lookup_tokens counts the full-block portion of the prompt)."""
         hits = self.match_prefix(hashes)
         for bid in hits:
-            self._ref[bid] += 1
+            if bid in self._warm:
+                del self._warm[bid]        # revive: warm -> resident
+                self._ref[bid] = 1
+                self.stats["warm_hit_blocks"] += 1
+            else:
+                self._ref[bid] += 1
         self.stats["admissions"] += 1
         self.stats["lookup_tokens"] += len(hashes) * self.block_size
         self.stats["hit_tokens"] += len(hits) * self.block_size

@@ -60,9 +60,45 @@ def test_block_pool_prefix_sharing_and_eviction():
     assert hits == [bid] and pool.live_refs == 2
     pool.free(bid)                           # original holder evicts
     assert pool.match_prefix(hashes) == [bid]   # still resident (our ref)
-    pool.free(bid)                           # last ref -> hash evicted
-    assert pool.match_prefix(hashes) == []
-    assert pool.free_count == 4
+    pool.free(bid)                           # last ref -> WARM, not evicted:
+    assert pool.match_prefix(hashes) == [bid]   # matchable until reclaimed
+    assert pool.is_warm(bid) and pool.live_refs == 0
+    assert pool.free_count == 4              # warm blocks are claimable
+
+
+def test_block_pool_warm_hit_after_evict_and_lru_reclaim():
+    """ROADMAP follow-on (d): a prefix hit must not require a resident
+    holder — freed registered blocks stay warm (matchable, revivable at
+    zero prefill cost) until alloc reclaims them, oldest-freed first."""
+    pool = paging.BlockPool(4, 2)
+    toks = np.arange(8, dtype=np.int32)
+    hashes = paging.block_hashes(toks, 2)
+    b0, b1 = pool.alloc(2)
+    pool.register(b0, hashes[0])
+    pool.register(b1, hashes[1])
+    pool.free(b0)
+    pool.free(b1)
+    assert pool.warm_count == 2 and pool.free_count == 4
+    # hit-after-evict: both blocks revive with their contents intact
+    hits = pool.take_prefix(hashes)
+    assert hits == [b0, b1]
+    assert pool.stats["warm_hit_blocks"] == 2 and pool.warm_count == 0
+    assert pool.live_refs == 2
+    pool.free(b0), pool.free(b1)             # back to warm (b0 older)
+    # reclaim-under-pressure: free list (2 blocks) drains first, then the
+    # warm blocks are cannibalized LRU-first and their hashes evicted
+    got = pool.alloc(3)
+    assert pool.stats["warm_reclaims"] == 1
+    assert b0 in got and b1 not in got       # b0 was freed first -> LRU
+    assert pool.match_prefix(hashes) == []   # chain broken at block 0
+    assert pool.match_prefix(hashes[1:]) == [b1]   # b1 itself is still warm
+    (b_last,) = pool.alloc(1)                # reclaims b1 too
+    assert b_last == b1 and pool.stats["warm_reclaims"] == 2
+    with pytest.raises(paging.BlockPoolExhausted):
+        pool.alloc(1)
+    for b in got + [b_last]:
+        pool.free(b)
+    assert pool.free_count == 4 and pool.warm_count == 0
 
 
 def test_block_pool_ensure_exclusive_cow():
@@ -137,8 +173,11 @@ def test_cow_divergence_after_shared_prefix():
     """Copy-on-write coverage: prompts whose length is an exact block
     multiple share ALL their blocks, so recomputing the final prompt token
     must COW the last shared block; requests diverging after the shared
-    prefix must each decode their solo-generation tokens."""
-    scfg = ServeConfig(max_seq_len=64, batch_size=3, kv_block_size=8)
+    prefix must each decode their solo-generation tokens.  (Gather mode —
+    the subject is allocator/COW logic; kernel-mode COW runs in
+    test_paged_attn's scheduler test and the slow tier.)"""
+    scfg = ServeConfig(max_seq_len=64, batch_size=3, kv_block_size=8,
+                       paged_attn="gather")
     e, sp = _engine(scfg)
     rng = np.random.default_rng(2)
     prefix = rng.integers(1, 64, 16).astype(np.int32)   # 2 full blocks
@@ -168,8 +207,10 @@ def test_prefill_into_reserve_zero_gets_decode_headroom():
     still leave one block of decode headroom past the prompt, so a
     subsequent decode step never writes the trash block (regression:
     exact-block-multiple prompts used to scatter the next token's KV into
-    the trash block and silently corrupt logits)."""
-    scfg = ServeConfig(max_seq_len=64, batch_size=1, kv_block_size=8)
+    the trash block and silently corrupt logits).  Gather mode: the compare
+    against the dense engine is bitwise."""
+    scfg = ServeConfig(max_seq_len=64, batch_size=1, kv_block_size=8,
+                       paged_attn="gather")
     e, sp = _engine(scfg)
     e_d = Engine(CFG, sp, ServeConfig(max_seq_len=64, batch_size=1))
     prompt = np.arange(1, 17, dtype=np.int32)       # 16 = 2 full blocks
@@ -185,11 +226,69 @@ def test_prefill_into_reserve_zero_gets_decode_headroom():
         t = jnp.argmax(lg_p, -1)[:, None].astype(jnp.int32)
 
 
+def test_warm_block_hit_survives_full_eviction():
+    """Engine-level ROADMAP (d): after EVERY holder of a shared prefix is
+    evicted, a new admission of the same prompt must still hash-hit the
+    (now warm) blocks and produce logits identical to the cold admission
+    (gather mode: the bitwise bar).  Pool of 8 blocks so the reclaim-under-
+    pressure leg below actually drains the free list."""
+    scfg = ServeConfig(max_seq_len=64, batch_size=2, kv_block_size=8,
+                       kv_num_blocks=8, paged_attn="gather")
+    e, _ = _engine(scfg)
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(1, 64, 21).astype(np.int32)   # 2 full blocks + 5
+    cold = np.asarray(e.prefill_into(0, prompt, reserve=2))
+    e.free_slot(0)                       # no resident holder remains
+    assert e.pool.live_refs == 0 and e.pool.warm_count == 2
+    warm = np.asarray(e.prefill_into(1, prompt, reserve=2))
+    assert e.pool.stats["warm_hit_blocks"] == 2
+    assert e.pool.stats["hit_tokens"] == 16
+    np.testing.assert_array_equal(cold, warm)
+    # under pressure warm blocks are ordinary capacity: the SAME engine's
+    # next big admission reclaims them (oldest first), evicting the hash —
+    # a later lookup of the prefix is then a clean miss, not a hang.
+    # (Allocator-level LRU/reclaim order is unit-tested above.)
+    e.free_slot(1)
+    assert e.pool.warm_count == 2
+    big = rng.integers(1, 64, 57).astype(np.int32)  # 8 blocks: whole pool
+    e.prefill_into(0, big, reserve=0)      # 8-block pool: 6 free + 2 warm
+    assert e.pool.stats["warm_reclaims"] >= 1
+    e.free_slot(0)
+    hit_before = e.pool.stats["hit_tokens"]
+    e.prefill_into(1, prompt, reserve=2)
+    assert e.pool.stats["hit_tokens"] == hit_before     # clean miss
+
+
+def test_warm_cow_hit_readmits_when_pool_exactly_full():
+    """Regression (PR-4 warm list): a request whose worst-case demand
+    exactly fills the pool must stay re-admittable after its blocks go
+    warm.  An exact-block-multiple prompt re-hits its own warm blocks with
+    cow=True, but the warm-revived block has refcount 1 and never actually
+    copies — charging the COW block anyway made ``can_admit`` return None
+    forever and the scheduler raise 'stalled'."""
+    scfg = ServeConfig(max_seq_len=32, batch_size=1, kv_block_size=8,
+                       kv_num_blocks=4, paged_attn="gather")
+    e, _ = _engine(scfg)
+    prompt = np.arange(1, 17, dtype=np.int32)      # 16 = 2 full blocks
+    sched = BatchScheduler(e)
+    sched.submit(Request(rid=0, prompt=prompt.copy(), max_new=16))
+    done = sched.run()                             # cold: worst = 4 == pool
+    assert len(done) == 1 and not done[0].error
+    assert e.pool.warm_count == 2                  # registered blocks warm
+    sched2 = BatchScheduler(e)                     # re-admit the same prompt
+    sched2.submit(Request(rid=1, prompt=prompt.copy(), max_new=16))
+    done2 = sched2.run()                           # must not stall
+    assert len(done2) == 1 and not done2[0].error
+    np.testing.assert_array_equal(done2[0].generated, done[0].generated)
+    assert e.pool.free_count == e.pool.num_blocks
+
+
 def test_shared_prefix_admission_skips_prefill_compute():
     """A prefix hit must admit by mapping blocks, only computing the tail:
     observable as pool stats hits AND bitwise-identical logits to a cold
     admission of the same prompt."""
-    scfg = ServeConfig(max_seq_len=64, batch_size=2, kv_block_size=8)
+    scfg = ServeConfig(max_seq_len=64, batch_size=2, kv_block_size=8,
+                       paged_attn="gather")
     e, _ = _engine(scfg)
     rng = np.random.default_rng(3)
     prompt = rng.integers(1, 64, 21).astype(np.int32)   # 2 full blocks + 5

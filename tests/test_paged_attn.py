@@ -1,0 +1,280 @@
+"""Paged-attention kernel: unit parity vs the gather-path math (GQA full /
+sliding-window ring / MLA latent), engine-level parity vs the gather
+reference on the serve config (both RSR backends), backend resolution, and
+the query-tile regime table.
+
+Parity bar: the kernel accumulates softmax online across blocks, so it
+agrees with the one-shot gather softmax to float associativity (documented
+allclose, ~1e-6 f32), NOT bitwise — greedy decodes must still be token-
+identical (asserted here; the gather path keeps the bitwise-vs-dense bar in
+test_serve.py).  Heavy cross-family × backend sweeps carry @slow per the
+PR-3 tiering."""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ServeConfig, get_config
+from repro.kernels import paged_attention as pattn
+from repro.models import transformer as tfm
+from repro.models.attention import _gather_blocks
+from repro.serve.engine import BatchScheduler, Engine, Request
+
+KEY = jax.random.PRNGKey(0)
+NEG_INF = -1e30
+
+CFG = dataclasses.replace(get_config("gemma-2b").reduced(), vocab_size=64,
+                          num_layers=2, d_ff=64, capacity_factor=64.0)
+
+
+def _engines(scfg_extra=None, cfg=CFG, max_seq=64, batch=2):
+    params = tfm.init_params(cfg, KEY)
+    sp = tfm.serve_params(params, cfg)
+    base = ServeConfig(max_seq_len=max_seq, batch_size=batch, kv_block_size=8)
+    if scfg_extra:
+        base = dataclasses.replace(base, **scfg_extra)
+    e_k = Engine(cfg, sp, dataclasses.replace(base, paged_attn="kernel"))
+    e_g = Engine(cfg, sp, dataclasses.replace(base, paged_attn="gather"))
+    return e_k, e_g, sp
+
+
+# ---------------------------------------------------------------------------
+# Kernel-level parity vs the gather-path math (no model, no engine)
+# ---------------------------------------------------------------------------
+
+def _rand_pool(rng, nb, kvh, bs, hd):
+    k = jnp.asarray(rng.standard_normal((nb + 1, kvh, bs, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((nb + 1, kvh, bs, hd)), jnp.float32)
+    return k, v
+
+
+def test_kernel_gqa_full_matches_gather_math():
+    """(B, C) chunk vs the exact gather-then-score einsums of gqa_apply,
+    across query tilings (tiling must not change per-query results)."""
+    rng = np.random.default_rng(0)
+    B, C, H, KVH, HD, BS, MB, NB = 2, 5, 4, 2, 16, 4, 6, 16
+    g = H // KVH
+    kp, vp = _rand_pool(rng, NB, KVH, BS, HD)
+    table = jnp.asarray(rng.permutation(NB)[:B * MB].reshape(B, MB),
+                        jnp.int32)
+    positions = jnp.asarray([[7, 8, 9, 10, 11], [3, 4, 5, 6, 7]], jnp.int32)
+    q = jnp.asarray(rng.standard_normal((B, C, H, HD)),
+                    jnp.float32) / math.sqrt(HD)
+
+    ckd, cvd = _gather_blocks(kp, table), _gather_blocks(vp, table)
+    s = jnp.einsum("bchgd,bhkd->bchgk", q.reshape(B, C, KVH, g, HD), ckd,
+                   preferred_element_type=jnp.float32)
+    mask = jnp.arange(ckd.shape[2])[None, None, :] <= positions[:, :, None]
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    ref = jnp.einsum("bchgk,bhkd->bchgd", pr, cvd,
+                     preferred_element_type=jnp.float32).reshape(B, C, H, HD)
+
+    for tc in (None, 1, 2, C):
+        out = pattn.paged_gqa_attend(q, kp, vp, table, positions, tile_c=tc)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-6, atol=2e-6)
+        np.testing.assert_array_equal(
+            np.asarray(out).reshape(B, C, -1).argmax(-1),
+            np.asarray(ref).reshape(B, C, -1).argmax(-1))
+
+
+def test_kernel_gqa_ring_matches_gather_math():
+    """Sliding-window ring masking (incl. pre-fill, exact-wrap, and
+    many-times-wrapped positions) vs the dense scan-step formula."""
+    rng = np.random.default_rng(1)
+    B, H, KVH, HD, BS, MB, NB = 2, 4, 2, 16, 4, 6, 16
+    g = H // KVH
+    W = MB * BS
+    kp, vp = _rand_pool(rng, NB, KVH, BS, HD)
+    table = jnp.asarray(rng.permutation(NB)[:B * MB].reshape(B, MB),
+                        jnp.int32)
+    ckd, cvd = _gather_blocks(kp, table), _gather_blocks(vp, table)
+    for pt_val in (0, 3, W - 1, W, 2 * W + 5):
+        pt = jnp.asarray([pt_val, max(0, pt_val - 2)], jnp.int32)
+        qt = jnp.asarray(rng.standard_normal((B, 1, H, HD)),
+                         jnp.float32) / math.sqrt(HD)
+        s = jnp.einsum("bchgd,bhkd->bchgk", qt.reshape(B, 1, KVH, g, HD),
+                       ckd, preferred_element_type=jnp.float32)
+        kpos = jnp.arange(W)[None, :]
+        age = (pt[:, None] - kpos) % W
+        valid = (age >= 0) & (age < jnp.minimum(pt[:, None] + 1, W))
+        valid = valid & ((pt[:, None] - age) >= 0)
+        s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+        ref = jnp.einsum("bchgk,bhkd->bchgd", jax.nn.softmax(s, axis=-1),
+                         cvd, preferred_element_type=jnp.float32)
+        out = pattn.paged_gqa_attend(qt, kp, vp, table, pt[:, None],
+                                     ring_slots=W)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(ref).reshape(B, 1, H, HD),
+                                   rtol=2e-6, atol=2e-6)
+
+
+def test_kernel_mla_matches_gather_math():
+    """MLA latent scoring (q_lat·c + q_pe·pe, post-sum scale, latent value
+    side) vs the absorbed dense-path einsums."""
+    rng = np.random.default_rng(2)
+    B, C, H, R, DR, BS, MB, NB = 2, 3, 4, 8, 4, 4, 5, 12
+    cp = jnp.asarray(rng.standard_normal((NB + 1, BS, R)), jnp.float32)
+    pep = jnp.asarray(rng.standard_normal((NB + 1, BS, DR)), jnp.float32)
+    table = jnp.asarray(rng.permutation(NB)[:B * MB].reshape(B, MB),
+                        jnp.int32)
+    positions = jnp.asarray([[9, 10, 11], [4, 5, 6]], jnp.int32)
+    ql = jnp.asarray(rng.standard_normal((B, C, H, R)), jnp.float32)
+    qpe = jnp.asarray(rng.standard_normal((B, C, H, DR)), jnp.float32)
+    scale = 1.0 / math.sqrt(R + DR)
+    c_d = cp[table].reshape(B, -1, R)
+    pe_d = pep[table].reshape(B, -1, DR)
+    s = (jnp.einsum("bchr,bkr->bchk", ql, c_d,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bchd,bkd->bchk", qpe, pe_d,
+                      preferred_element_type=jnp.float32)) * scale
+    mask = jnp.arange(c_d.shape[1])[None, None, :] <= positions[:, :, None]
+    s = jnp.where(mask[:, :, None, :], s, NEG_INF)
+    ref = jnp.einsum("bchk,bkr->bchr", jax.nn.softmax(s, axis=-1), c_d,
+                     preferred_element_type=jnp.float32)
+    out = pattn.paged_mla_attend(ql, qpe, cp, pep, table, positions,
+                                 scale=scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-6, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level parity: kernel vs gather on the serve config
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["pallas_interpret", "scatter"])
+def test_paged_attn_kernel_decodes_match_gather(backend):
+    """The acceptance bar: on the serve config, the kernel path must decode
+    token-identical greedy sequences vs the gather reference, per RSR
+    backend, with tight-allclose prefill logits."""
+    cfg = dataclasses.replace(CFG, rsr_backend=backend)
+    e_k, e_g, _ = _engines(cfg=cfg)
+    assert e_k.paged_attn == "kernel" and e_g.paged_attn == "gather"
+    prompts = jax.random.randint(jax.random.PRNGKey(9), (2, 9), 0,
+                                 cfg.vocab_size)
+    lg_k = np.asarray(e_k.prefill(prompts, start=0))
+    lg_g = np.asarray(e_g.prefill(prompts, start=0))
+    np.testing.assert_allclose(lg_k, lg_g, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(lg_k.argmax(-1), lg_g.argmax(-1))
+    e_k.reset(), e_g.reset()
+    t_k = e_k.generate(prompts, max_new=12)
+    t_g = e_g.generate(prompts, max_new=12)
+    np.testing.assert_array_equal(t_k, t_g)
+
+
+@pytest.mark.slow
+def test_paged_attn_kernel_scheduler_matches_per_request():
+    """Continuous batching through the kernel path (mixed lengths, shared
+    blocks, COW) must decode per-request-identical tokens vs solo
+    generation — the kernel's per-slot grid makes batched-vs-single
+    structurally row-count-invariant.  (slow: the fast tier already runs
+    the scheduler through the kernel default in test_paged.py.)"""
+    e_k, _, sp = _engines({"prefill_chunk": 4, "kv_block_size": 4},
+                          max_seq=32)
+    sched = BatchScheduler(e_k)
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(1, CFG.vocab_size, n).astype(np.int32)
+               for n in (3, 9, 5, 8)]
+    for i, p in enumerate(prompts):
+        sched.submit(Request(rid=i, prompt=p, max_new=4))
+    done = sched.run()
+    assert len(done) == 4
+    ref = Engine(CFG, sp, ServeConfig(max_seq_len=32, batch_size=1,
+                                      prefill_chunk=4, kv_block_size=4,
+                                      paged_attn="kernel"))
+    for r in sorted(done, key=lambda r: r.rid):
+        ref.reset()
+        want = ref.generate(jnp.asarray(r.prompt)[None, :], r.max_new)[0]
+        np.testing.assert_array_equal(np.asarray(r.generated),
+                                      np.asarray(want))
+    assert e_k.pool.free_count == e_k.pool.num_blocks
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["pallas_interpret", "scatter"])
+@pytest.mark.parametrize("arch,block", [("recurrentgemma-2b", 8),
+                                        ("deepseek-v2-lite-16b", 4)])
+def test_paged_attn_kernel_across_families(arch, block, backend):
+    """Ring-buffer (sliding-window) and MLA cache layouts through the
+    kernel, per RSR backend: token-identical greedy decodes vs the gather
+    reference, tight-allclose prefill logits."""
+    cfg = dataclasses.replace(get_config(arch).reduced(), vocab_size=64,
+                              capacity_factor=64.0, rsr_backend=backend)
+    e_k, e_g, _ = _engines(cfg=cfg, max_seq=32,
+                           scfg_extra={"kv_block_size": block})
+    prompts = jax.random.randint(jax.random.PRNGKey(10), (2, 20), 0,
+                                 cfg.vocab_size)        # 20 > window=16: wrap
+    lg_k = np.asarray(e_k.prefill(prompts, start=0))
+    lg_g = np.asarray(e_g.prefill(prompts, start=0))
+    np.testing.assert_allclose(lg_k, lg_g, rtol=1e-5, atol=1e-5)
+    e_k.reset(), e_g.reset()
+    t_k = e_k.generate(prompts, max_new=8)
+    t_g = e_g.generate(prompts, max_new=8)
+    np.testing.assert_array_equal(t_k, t_g)
+
+
+# ---------------------------------------------------------------------------
+# Backend resolution + tile regimes
+# ---------------------------------------------------------------------------
+
+def test_select_paged_backend_resolution(monkeypatch):
+    monkeypatch.delenv("REPRO_PAGED_ATTN", raising=False)
+    assert pattn.select_paged_backend() == "kernel"          # default
+    assert pattn.select_paged_backend(None, "gather") == "gather"
+    assert pattn.select_paged_backend("kernel", "gather") == "kernel"
+    monkeypatch.setenv("REPRO_PAGED_ATTN", "gather")
+    assert pattn.select_paged_backend() == "gather"          # env
+    assert pattn.select_paged_backend("kernel") == "kernel"  # arg outranks
+    assert pattn.select_paged_backend(None, "kernel") == "gather"
+    with pytest.raises(ValueError):
+        pattn.select_paged_backend("nope")
+    monkeypatch.setenv("REPRO_PAGED_ATTN", "bogus")
+    with pytest.raises(ValueError):
+        pattn.select_paged_backend()
+
+
+def test_engine_resolves_paged_attn_from_env(monkeypatch):
+    """$REPRO_PAGED_ATTN outranks ServeConfig.paged_attn at Engine
+    construction (the operator override, mirroring REPRO_RSR_BACKEND)."""
+    params = tfm.init_params(CFG, KEY)
+    sp = tfm.serve_params(params, CFG)
+    scfg = ServeConfig(max_seq_len=32, batch_size=1, kv_block_size=8)
+    monkeypatch.setenv("REPRO_PAGED_ATTN", "gather")
+    e = Engine(CFG, sp, dataclasses.replace(scfg, paged_attn="kernel"))
+    assert e.paged_attn == "gather"
+    monkeypatch.delenv("REPRO_PAGED_ATTN")
+    assert Engine(CFG, sp, scfg).paged_attn == "kernel"      # auto default
+    assert Engine(CFG, sp, ServeConfig(max_seq_len=32,
+                                       batch_size=1)).paged_attn is None
+
+
+def test_attn_tile_regimes_and_overlay():
+    assert pattn.select_attn_tiles(1) == 1                   # decode
+    assert pattn.select_attn_tiles(5) == 5                   # clamped small
+    assert pattn.select_attn_tiles(8) == 8
+    assert pattn.select_attn_tiles(100) == 32                # prefill row
+    pattn.TUNED_ATTN_TILES[("prefill", 128)] = 16
+    try:
+        assert pattn.select_attn_tiles(100) == 16            # overlay wins
+    finally:
+        pattn.TUNED_ATTN_TILES.clear()
+
+
+def test_attn_tiles_persist_in_autotune_cache(tmp_path):
+    """Measured query tiles ride the shared autotune cache file alongside
+    the RSR tiles and survive a reload."""
+    from repro.kernels import dispatch
+    path = str(tmp_path / "cache.json")
+    pattn.TUNED_ATTN_TILES[("prefill", 64)] = 16
+    try:
+        dispatch.save_autotune_cache(path)
+        pattn.TUNED_ATTN_TILES.clear()
+        n = dispatch.load_autotune_cache(path)
+        assert n >= 1
+        assert pattn.TUNED_ATTN_TILES[("prefill", 64)] == 16
+    finally:
+        pattn.TUNED_ATTN_TILES.clear()

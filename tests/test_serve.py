@@ -131,14 +131,17 @@ def test_decode_throughput_overflow_guard():
 @pytest.mark.parametrize("backend", ["pallas_interpret", "scatter"])
 def test_paged_generate_bitwise_matches_dense(backend):
     """The paged-cache parity bar (same discipline as the PR-2 chunk-vs-
-    scan tests): block-paged decode AND prefill must be bitwise-equal to
-    the dense layout on the serve test config, per RSR backend."""
+    scan tests): block-paged decode AND prefill in GATHER mode must be
+    bitwise-equal to the dense layout on the serve test config, per RSR
+    backend.  (Gather is the parity reference; the in-place kernel's bar is
+    token equality + tight allclose — tests/test_paged_attn.py.)"""
     cfg = dataclasses.replace(CFG, rsr_backend=backend)
     params = tfm.init_params(cfg, KEY)
     sp = tfm.serve_params(params, cfg)
     scfg = ServeConfig(max_seq_len=64, batch_size=2)
     e_dense = Engine(cfg, sp, scfg)
-    e_paged = Engine(cfg, sp, dataclasses.replace(scfg, kv_block_size=8))
+    e_paged = Engine(cfg, sp, dataclasses.replace(scfg, kv_block_size=8,
+                                                  paged_attn="gather"))
     assert e_paged.paged and not e_dense.paged
     prompts = jax.random.randint(jax.random.PRNGKey(5), (2, 9), 0,
                                  cfg.vocab_size)
@@ -152,13 +155,14 @@ def test_paged_generate_bitwise_matches_dense(backend):
 
 
 def test_paged_prefill_chunk_parity():
-    """Paged chunked prefill across chunk sizes (incl. a ragged tail) must
-    produce dense-identical last-position logits."""
+    """Paged chunked prefill (gather mode) across chunk sizes (incl. a
+    ragged tail) must produce dense-identical last-position logits."""
     params = tfm.init_params(CFG, KEY)
     sp = tfm.serve_params(params, CFG)
     scfg = ServeConfig(max_seq_len=32, batch_size=2)
     e_dense = Engine(CFG, sp, scfg)
-    e_paged = Engine(CFG, sp, dataclasses.replace(scfg, kv_block_size=4))
+    e_paged = Engine(CFG, sp, dataclasses.replace(scfg, kv_block_size=4,
+                                                  paged_attn="gather"))
     prompts = jax.random.randint(jax.random.PRNGKey(6), (2, 12), 0,
                                  CFG.vocab_size)
     ref = np.asarray(e_dense.prefill(prompts, start=0))
