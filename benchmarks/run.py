@@ -23,6 +23,12 @@ column carries the headline quantity of that figure (speedup, ratio, k*).
                 engine decode tokens/s per backend, and the
                 packed-code bits/weight budget — written to
                 BENCH_serve.json (tracked per PR)
+  request_plane the priority request plane under pool pressure:
+                preemption / shed / re-admission counts, p50/p99
+                completion latency per priority lane, tokens/s
+                at 1.5x vs 1.0x overcommit, with hard greedy-
+                parity and policy-outcome asserts — written to
+                the ``request_plane`` section of BENCH_serve.json
   prefill_bench the prefill-path trajectory: per-linear
                 amortization at true layer shapes as rows grow
                 (1 -> B·chunk, the prefill tile regime),
@@ -419,10 +425,133 @@ def serve_bench(json_path: str = "BENCH_serve.json", smoke: bool = False):
         assert equal, "serve backends must decode identical tokens"
 
     assert result["meta"]["code_bits_per_weight_packed"] <= 2.0
-    with open(json_path, "w") as f:
-        json.dump(result, f, indent=1, sort_keys=True)
-    print(f"wrote {json_path}", flush=True)
+    _merge_json(json_path, result)       # keep the request_plane section
     return result
+
+
+def request_plane_bench(json_path: str = "BENCH_serve.json",
+                        smoke: bool = False):
+    """Request-plane trajectory -> the ``request_plane`` section of
+    BENCH_serve.json (``--only request_plane``).
+
+    One constrained paged geometry (pool of 9 blocks; each request's worst
+    case is 4, so three concurrent requests oversubscribe it), driven at
+    overcommit 1.0 vs 1.5 through ``PriorityScheduler``: preemption /
+    shed / re-admission counts, p50/p99 completion latency per priority
+    lane, and decode tokens/s.  Token parity of every completed request
+    against an unconstrained solo run is a hard assert, as are the two
+    deterministic policy outcomes (1.0 never preempts — the budget gate;
+    1.5 must preempt at least once — the pool genuinely runs dry) and a
+    deliberately expired-deadline request being shed with TIMEOUT.  The
+    1.5-vs-1.0 throughput comparison is timing-sensitive and goes through
+    the perf gate (warn unless BENCH_STRICT=1).
+    """
+    import dataclasses
+    import jax
+    from repro.config import ServeConfig, get_config
+    from repro.models import transformer as tfm
+    from repro.serve.engine import Engine, Request, RequestStatus
+    from repro.serve.frontend import PriorityScheduler
+
+    cfg = dataclasses.replace(
+        get_config("falcon3-3b-1.58bit").reduced(), vocab_size=256,
+        num_layers=2)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    tree = tfm.serve_params(params, cfg)
+    n_req = 3 if smoke else 6
+    max_new = 20                         # 9 + 20 = 29 tokens -> 4 blocks
+    base = ServeConfig(max_seq_len=32, batch_size=3, kv_block_size=8,
+                       kv_num_blocks=9, prefill_chunk=8, paged_attn="gather")
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, 9).astype(np.int32)
+               for _ in range(n_req)]
+
+    def traffic():
+        reqs = [Request(rid=i, prompt=prompts[i].copy(), max_new=max_new,
+                        priority=i % 3,
+                        deadline_s=120.0 if i % 3 == 0 else None)
+                for i in range(n_req)]
+        # one deliberately expired request: must be SHED (TIMEOUT terminal
+        # state, machine-readable reason), not raise or hang the drain
+        reqs.append(Request(rid=99, prompt=prompts[0].copy(), max_new=4,
+                            priority=2, deadline_s=0.0))
+        return reqs
+
+    ref = Engine(cfg, tree, ServeConfig(max_seq_len=32, batch_size=1))
+    want = {}
+    for i, p in enumerate(prompts):
+        ref.reset()
+        want[i] = np.asarray(ref.generate(p[None, :], max_new)[0])
+
+    section = {
+        "meta": {"schema": "bench_request_plane_v1", "smoke": smoke,
+                 "requests": n_req, "max_new": max_new,
+                 "pool_blocks": base.kv_num_blocks,
+                 "worst_case_blocks_per_request": 4,
+                 "batch": base.batch_size,
+                 "reduced_dims": {"d_model": cfg.d_model, "d_ff": cfg.d_ff,
+                                  "num_layers": cfg.num_layers},
+                 "note": ("gather-mode paged engine on the reduced config; "
+                          "latencies are CPU wall clock — trajectory "
+                          "numbers, not TPU perf")},
+        "overcommit": {},
+    }
+    for oc in (1.0, 1.5):
+        eng = Engine(cfg, tree, dataclasses.replace(base, overcommit=oc))
+        for _timed in (False, True):     # first pass absorbs compiles
+            eng.reset()
+            sched = PriorityScheduler(eng)
+            for r in traffic():
+                sched.submit(r)
+            t0 = time.perf_counter()
+            done = sched.run()
+            dt = time.perf_counter() - t0
+        ok = [r for r in done if r.status is RequestStatus.OK]
+        shed = [r for r in done if r.status is RequestStatus.TIMEOUT]
+        assert len(ok) == n_req, [r.status for r in done]
+        assert len(shed) == 1 and shed[0].rid == 99 and not shed[0].generated
+        for r in ok:                     # hard: greedy parity vs solo runs
+            np.testing.assert_array_equal(np.asarray(r.generated),
+                                          want[r.rid])
+        st = sched.stats
+        if oc > 1.0:
+            assert st["preemptions"] >= 1, \
+                "1.5x overcommit never exercised preemption"
+        else:
+            assert st["preemptions"] == 0, \
+                "the 1.0x budget gate admitted past the pool"
+        assert eng.pool.free_count == eng.pool.num_blocks, "blocks leaked"
+        lanes = {}
+        for lane in (0, 1, 2):
+            lat = sorted(r.completed_at - r.arrival for r in ok
+                         if r.priority == lane)
+            if lat:
+                lanes[str(lane)] = {
+                    "n": len(lat),
+                    "p50_s": round(float(np.percentile(lat, 50)), 4),
+                    "p99_s": round(float(np.percentile(lat, 99)), 4)}
+        toks = sum(len(r.generated) for r in ok)
+        section["overcommit"][f"{oc:.1f}"] = {
+            "tokens_per_s": round(toks / dt, 2),
+            "preemptions": st["preemptions"], "shed": st["shed"],
+            "timeouts": st["timeouts"],
+            "readmissions": st["readmissions"],
+            "readmission_hit_tokens": st["readmission_hit_tokens"],
+            "lane_latency": lanes, "token_parity": True,
+        }
+        emit(f"request_plane_oc{oc:.1f}", dt * 1e6,
+             f"tokens_per_s={toks / dt:.1f};"
+             f"preempt={st['preemptions']};shed={st['shed']};"
+             f"readmit={st['readmissions']}")
+    r10 = section["overcommit"]["1.0"]
+    r15 = section["overcommit"]["1.5"]
+    perf_gate(r15["tokens_per_s"] >= r10["tokens_per_s"],
+              f"1.5x overcommit slower than 1.0x "
+              f"({r15['tokens_per_s']:.1f} vs {r10['tokens_per_s']:.1f} "
+              f"tok/s; timing-sensitive; BENCH_STRICT=1 to enforce)",
+              section)
+    _merge_json(json_path, {"request_plane": section})
+    return section
 
 
 def prefill_bench(json_path: str = "BENCH_prefill.json", smoke: bool = False):
@@ -628,9 +757,10 @@ def prefill_bench(json_path: str = "BENCH_prefill.json", smoke: bool = False):
 
 def _merge_json(json_path: str, result: dict):
     """Write `result` to json_path, preserving any top-level key of an
-    existing file that `result` doesn't provide (prefill_bench and
-    paged_bench co-own BENCH_prefill.json; either can run alone without
-    clobbering the other's sections)."""
+    existing file that `result` doesn't provide (prefill/paged/paged_attn
+    co-own BENCH_prefill.json; serve and request_plane co-own
+    BENCH_serve.json; any can run alone without clobbering the others'
+    sections)."""
     import json
     import os
     if os.path.exists(json_path):
@@ -989,6 +1119,8 @@ def main() -> None:
         "table1": table1_tpu,
         "engine": engine_e2e,
         "serve": lambda: serve_bench(args.json, smoke=args.smoke),
+        "request_plane": lambda: request_plane_bench(args.json,
+                                                     smoke=args.smoke),
         "prefill": lambda: prefill_bench(args.prefill_json,
                                          smoke=args.smoke),
         "paged": lambda: paged_bench(args.prefill_json, smoke=args.smoke),

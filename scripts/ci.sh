@@ -18,12 +18,18 @@
 # and scheduler-vs-per-request token equality, paged asserts paged-vs-
 # dense token equality plus a shared-prefix admission the dense layout
 # rejects, paged_attn asserts kernel-vs-gather decode token equality and
-# the per-step KV bytes accounting.  Timing-sensitive perf comparisons
-# (chunked > scan, paged >= dense) are recorded-and-warned on a loaded
-# machine; BENCH_STRICT=1 restores the hard asserts.  The committed
-# BENCH_serve.json / BENCH_prefill.json are produced by the full runs
-# (`python benchmarks/run.py --only serve|prefill|paged|paged_attn`,
-# merge-preserving writes into BENCH_prefill.json) and tracked per PR.
+# the per-step KV bytes accounting, request_plane asserts greedy parity
+# under overcommit + preemption and the deterministic policy outcomes
+# (no preemption at 1.0x, at least one at 1.5x, expired deadlines shed).
+# Timing-sensitive perf comparisons (chunked > scan, paged >= dense,
+# 1.5x >= 1.0x) are recorded-and-warned on a loaded machine;
+# BENCH_STRICT=1 restores the hard asserts.  The asyncio frontend tests
+# in tests/test_frontend.py carry their own asyncio.wait_for timeout
+# guard, so a dead serve loop fails fast instead of hanging this script.
+# The committed BENCH_serve.json / BENCH_prefill.json are produced by the
+# full runs (`python benchmarks/run.py --only
+# serve|request_plane|prefill|paged|paged_attn`, merge-preserving writes
+# into both JSONs) and tracked per PR.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -52,6 +58,9 @@ if [[ "${1:-}" != "--fast" ]]; then
     echo "== paged-attention smoke benchmark =="
     PYTHONPATH="src:." python benchmarks/run.py --only paged_attn --smoke \
         --prefill-json /tmp/BENCH_prefill_smoke.json
+    echo "== request-plane smoke benchmark =="
+    PYTHONPATH="src:." python benchmarks/run.py --only request_plane --smoke \
+        --json /tmp/BENCH_serve_smoke.json
 fi
 
 echo "CI OK"

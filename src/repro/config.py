@@ -174,6 +174,23 @@ class ServeConfig:
                                       # kernel vs dense-gather reference;
                                       # $REPRO_PAGED_ATTN outranks this,
                                       # kernels.paged_attention resolution)
+    # --- request plane (repro.serve.frontend; priority scheduler only —
+    # the plain FIFO BatchScheduler ignores these) ---
+    overcommit: float = 1.0           # admission budget multiplier: the sum
+                                      # of running requests' WORST-CASE block
+                                      # demands may reach overcommit *
+                                      # kv_num_blocks (>1 admits more traffic
+                                      # than the pool can hold at once; mid-
+                                      # decode exhaustion is resolved by
+                                      # victim preemption)
+    max_preemptions: int = 3          # K: after K evictions a request is
+                                      # PINNED — never picked as a victim
+                                      # again and boosted past every lane —
+                                      # so repeated preemption cannot
+                                      # live-lock it
+    lane_aging_s: float = 2.0         # queue wait that promotes a request
+                                      # one priority lane (starvation-proof
+                                      # aging; <= 0 disables aging)
 
 
 @dataclasses.dataclass(frozen=True)

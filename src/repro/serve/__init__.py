@@ -1,11 +1,100 @@
-"""Serving subsystem: the RSR engine, continuous batching, and the
-block-paged KV cache.
+"""Serving subsystem: the RSR engine, continuous batching, the block-paged
+KV cache, and the async request plane.
 
-* ``engine``  — ``Engine`` (chunked prefill + decode over one jitted step)
-  and ``BatchScheduler`` (continuous batching with validate-at-submit).
-* ``paging``  — ``PagedLayout`` geometry, the host-side ``BlockPool``
-  allocator (refcounts, chained prefix hashing, copy-on-write, and the
-  LRU warm list of freed-but-still-registered blocks), ``block_hashes``.
+* ``engine``   — ``Engine`` (chunked prefill + decode over one jitted
+  step), ``Request`` / ``RequestStatus``, and ``BatchScheduler``
+  (continuous batching with validate-at-submit; strict FIFO, eager
+  worst-case block reservation).
+* ``paging``   — ``PagedLayout`` geometry, the host-side ``BlockPool``
+  allocator (refcounts, chained prefix hashing, copy-on-write, the LRU
+  warm list of freed-but-still-registered blocks, and the deterministic
+  fault-injection seam), ``block_hashes``.
+* ``frontend`` — the production request plane: ``PriorityScheduler``
+  (priority lanes, deadlines, overcommit + preemption) and
+  ``AsyncFrontend`` (asyncio serve loop with per-token streaming).
+
+Request-plane guide
+-------------------
+``BatchScheduler`` is the conservative baseline: admission reserves a
+request's worst case (``prompt + max_new`` blocks) up front, so a decode
+step can never hit pool exhaustion, at the cost of FIFO head-of-line
+blocking and pessimistic capacity.  ``frontend.PriorityScheduler`` is the
+production policy on the same tick machinery:
+
+* **Priority lanes** — ``Request.priority`` (0 = most urgent).  Admission
+  orders the queue by *effective* lane, which improves one step per
+  ``ServeConfig.lane_aging_s`` seconds of queue wait: a lane-3 request
+  that has waited ``3 * lane_aging_s`` competes at lane 0, so no lane
+  starves.
+* **Deadlines (EDF)** — within a lane, earliest absolute deadline
+  (``arrival + deadline_s``) first; requests without deadlines sort last.
+  Deadlines are *enforced*, not just ordered by: an expired running
+  request is cut off with terminal status ``TIMEOUT`` and its partial
+  ``generated`` output kept; an expired or hopeless queued request (the
+  measured per-tick EMA shows its first token cannot land in time) is
+  shed at admission, also ``TIMEOUT`` — graceful terminal states with
+  machine-readable reasons, never exceptions.
+* **Lazy allocation + overcommit** — admission claims only the prompt
+  blocks plus one headroom block; the decode horizon grows block-by-block
+  each tick (``Engine.reserve_tokens``).  The admission gate additionally
+  keeps the sum of running requests' worst-case demands within
+  ``ServeConfig.overcommit * kv_num_blocks``.  At ``1.0`` every running
+  request's final footprint is guaranteed to fit (preemption never
+  fires); above it the plane deliberately oversubscribes and resolves
+  collisions by preemption.
+* **Preemption with bounded retry** — see the pressure narrative below.
+  After ``ServeConfig.max_preemptions`` evictions a request is pinned:
+  exempt from further eviction and boosted past every lane, so repeated
+  preemption degrades its latency but cannot live-lock it.
+
+What happens under pool pressure (the state narrative)
+------------------------------------------------------
+A request moves through ``QUEUED → RUNNING → OK`` when the pool is easy.
+Under pressure the plane walks this ladder, gentlest first:
+
+1. **Defer** — admission finds the lazy plan does not fit the pool's
+   claimable blocks now (or the overcommit budget is full): the request
+   stays QUEUED.  Aging meanwhile raises its effective priority.
+2. **Extend-or-preempt** — a RUNNING slot's next decode position crosses
+   a block boundary and ``reserve_tokens`` finds the pool dry.  The plane
+   evicts the victim with the worst ``(lane, furthest-deadline)`` rank:
+   status PREEMPTED, blocks freed (hash-registered prompt blocks land on
+   the WARM list, still matchable), request re-queued with its original
+   arrival (aging credit kept).  Re-admission prefills ``prompt +
+   generated`` as one sequence — the warm prefix blocks hash-hit, so only
+   the generated tail re-prefills, and greedy tokens continue bitwise
+   exactly where they left off.
+3. **Pin** — after ``max_preemptions`` evictions the request re-enters
+   ahead of every lane and is never chosen as a victim again.
+4. **Shed / timeout** — a deadline turns pressure into a terminal state:
+   queued-and-late becomes TIMEOUT with empty output, running-and-late
+   becomes TIMEOUT with partial output.  Requests that can *never* fit
+   (worst case exceeds the whole pool) never enter the queue at all:
+   REJECTED_CAPACITY at ``submit()``, just as malformed ones are
+   REJECTED_VALIDATION.
+
+``REPRO_*`` environment variables
+---------------------------------
+=====================  ==================================================
+``REPRO_RSR_BACKEND``  Force the RSR matmul backend (``pallas`` |
+                       ``pallas_interpret`` | ``scatter``); outranks
+                       ``ModelConfig.rsr_backend`` in
+                       ``kernels.dispatch``.
+``REPRO_PAGED_ATTN``   Force the paged scoring backend (``kernel`` |
+                       ``gather``); outranks ``ServeConfig.paged_attn``
+                       (see below).
+``REPRO_AUTOTUNE_CACHE``  Path of the kernel autotune cache file
+                       (default ``~/.cache/repro/autotune.json``);
+                       ``off`` disables persistence.
+``REPRO_FAULT_ALLOC``  Deterministic allocator fault injection:
+                       comma-separated 1-based ordinals of ``BlockPool
+                       .alloc`` calls that raise ``BlockPoolExhausted``
+                       (e.g. ``3`` fails the 3rd alloc, ``2,5`` the 2nd
+                       and 5th).  Each listed fault fires exactly once —
+                       the call counter advances past it.  Tests use
+                       the equivalent ``BlockPool(fault_injector=...)``
+                       hook directly.
+=====================  ==================================================
 
 The ``REPRO_PAGED_ATTN`` switch
 -------------------------------

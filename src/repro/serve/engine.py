@@ -76,8 +76,9 @@ and paged/shared-prefix numbers land in BENCH_prefill.json
 from __future__ import annotations
 
 import dataclasses
+import enum
 import time
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -154,7 +155,8 @@ class Engine:
         if self.paged:
             self.pool = paging.BlockPool(
                 self.layout.num_blocks, self.layout.block_size,
-                sharing=self.pool.sharing)
+                sharing=self.pool.sharing,
+                fault_injector=self.pool.fault_injector)
             self._tables[:] = self.layout.trash_block
             self._slot_blocks = [[] for _ in range(self.batch)]
             self._full_count = [0] * self.batch
@@ -191,7 +193,8 @@ class Engine:
             self._slot_blocks[slot].extend(fresh)
             self._full_count[slot] = need
 
-    def _admission_plan(self, prompt: np.ndarray, max_new: int):
+    def _admission_plan(self, prompt: np.ndarray, max_new: int, *,
+                        lazy: bool = False):
         """(hashes, hits, tail_start, cow, demand) for admitting `prompt`
         with `max_new` reserved decode tokens, WITHOUT mutating allocator
         state (the hits are not claimed yet).  ``demand`` counts the blocks
@@ -200,7 +203,13 @@ class Engine:
         ``PagedLayout.blocks_for_admission``) + the copy-on-write
         replacement when the tail write would land in a shared block + any
         WARM hits (an evicted-but-unreclaimed hit still counts toward
-        ``free_count`` until taking it revives it)."""
+        ``free_count`` until taking it revives it).
+
+        ``lazy=True`` plans a LAZY admission (the priority request plane):
+        only the prompt blocks plus one headroom block are demanded up
+        front — the decode horizon is extended block-by-block via
+        ``reserve_tokens`` as positions grow, so ``max_new`` does not enter
+        the demand (it still bounds the caller's worst case elsewhere)."""
         lay = self.layout
         L = len(prompt)
         hashes = (paging.block_hashes(prompt, lay.block_size)
@@ -213,21 +222,52 @@ class Engine:
         # will NOT copy — charging it anyway would overstate demand and can
         # deadlock a request whose worst case exactly fills the pool
         cow_charge = 1 if (cow and not self.pool.is_warm(hits[-1])) else 0
-        total = lay.blocks_for_admission(L, max_new)
+        total = lay.blocks_for_admission(L, 0 if lazy else max_new)
         warm = sum(1 for bid in hits if self.pool.is_warm(bid))
         demand = (total - len(hits)) + cow_charge + lay.mb_ring + warm
         return hashes, hits, tail_start, cow, demand
 
-    def can_admit(self, prompt, max_new: int):
+    def can_admit(self, prompt, max_new: int, *, lazy: bool = False):
         """Pool-capacity check for one admission (no allocator mutation).
         Returns the admission plan when it fits (truthy; pass it to
         ``prefill_into(..., plan=...)`` to avoid re-hashing the prompt),
-        ``None`` when the pool cannot take it yet, ``True`` when dense."""
+        ``None`` when the pool cannot take it yet, ``True`` when dense.
+        ``lazy`` plans prompt+headroom only (see ``_admission_plan``)."""
         if not self.paged:
             return True
         prompt = np.asarray(prompt)
-        plan = self._admission_plan(prompt, max_new)
+        plan = self._admission_plan(prompt, max_new, lazy=lazy)
         return plan if plan[-1] <= self.pool.free_count else None
+
+    def worst_case_blocks(self, prompt_len: int, max_new: int) -> int:
+        """Blocks this request needs resident at its FINAL position (no
+        sharing assumed) — the quantity the priority plane's overcommit
+        budget sums over running requests.  0 when dense."""
+        if not self.paged:
+            return 0
+        lay = self.layout
+        return lay.mb_ring + lay.blocks_for(prompt_len + max_new)
+
+    def reserve_tokens(self, slot: int, upto: int) -> bool:
+        """Lazy-mode decode-horizon extension: grow ``slot``'s block table
+        to cover positions [0, upto) (and the ring region).  Returns False
+        instead of raising when the pool cannot satisfy it — the caller
+        (the priority plane) preempts a victim and retries.  Any partial
+        progress (e.g. ring blocks landed, full blocks did not) is kept:
+        reservation is monotone and the blocks are released on eviction."""
+        if not self.paged:
+            return True
+        lay = self.layout
+        if ((self._ring_ready[slot] or not lay.mb_ring)
+                and lay.blocks_for(upto) <= self._full_count[slot]):
+            return True                      # already covered: no table push
+        try:
+            self._reserve(slot, upto)
+        except paging.BlockPoolExhausted:
+            self._push_table()               # partial ring alloc may exist
+            return False
+        self._push_table()
+        return True
 
     # -- capacity ----------------------------------------------------------
 
@@ -436,14 +476,68 @@ class Engine:
                 "batch": self.batch, "steps": steps}
 
 
+class RequestStatus(enum.Enum):
+    """Machine-readable request state.  Terminal states carry the outcome a
+    client can branch on without parsing ``Request.error`` (which stays the
+    human-readable detail string):
+
+    * ``OK`` — completed normally (``generated`` holds ``max_new`` tokens).
+    * ``REJECTED_VALIDATION`` — malformed at ``submit()`` (shape, max_new,
+      ``prompt + max_new > max_seq_len``); never entered the queue.
+    * ``REJECTED_CAPACITY`` — valid but can never fit this engine (worst-
+      case block demand exceeds the whole pool); never entered the queue.
+    * ``TIMEOUT`` — deadline enforcement fired: either shed at admission
+      (deadline expired / hopeless while queued; ``generated`` empty) or
+      cut off mid-decode (``generated`` holds the partial output).  A
+      graceful terminal state, not an exception.
+
+    Transient states: ``QUEUED`` (accepted, waiting), ``RUNNING`` (in a
+    batch slot), ``PREEMPTED`` (evicted mid-decode by the priority plane to
+    free blocks; back in the queue, re-admission continues the decode).
+    """
+    QUEUED = "QUEUED"
+    RUNNING = "RUNNING"
+    PREEMPTED = "PREEMPTED"
+    OK = "OK"
+    REJECTED_VALIDATION = "REJECTED_VALIDATION"
+    REJECTED_CAPACITY = "REJECTED_CAPACITY"
+    TIMEOUT = "TIMEOUT"
+
+    @property
+    def terminal(self) -> bool:
+        return self in (RequestStatus.OK, RequestStatus.REJECTED_VALIDATION,
+                        RequestStatus.REJECTED_CAPACITY,
+                        RequestStatus.TIMEOUT)
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
     prompt: np.ndarray
     max_new: int
+    priority: int = 0                 # lane; 0 is the most urgent
+    deadline_s: Optional[float] = None  # completion budget in seconds from
+                                        # arrival (EDF ordering + TIMEOUT
+                                        # enforcement); None = no deadline
+    arrival: Optional[float] = None   # scheduler clock at submit() (set by
+                                      # submit() when None)
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
-    error: Optional[str] = None
+    error: Optional[str] = None       # human-readable detail; `status` is
+                                      # the machine-readable reason
+    status: RequestStatus = RequestStatus.QUEUED
+    preemptions: int = 0              # times evicted mid-decode
+    completed_at: Optional[float] = None
+    on_token: Optional[Callable[["Request", int], None]] = \
+        dataclasses.field(default=None, repr=False)  # per-token streaming
+                                                     # callback (frontend)
+
+    @property
+    def deadline(self) -> Optional[float]:
+        """Absolute deadline on the scheduler clock (None = none)."""
+        if self.deadline_s is None or self.arrival is None:
+            return None
+        return self.arrival + self.deadline_s
 
 
 class BatchScheduler:
@@ -458,16 +552,28 @@ class BatchScheduler:
 
     Robustness contract: ``submit()`` validates the request (shape,
     ``prompt + max_new ≤ max_seq_len``, worst-case block demand ≤ pool) —
-    an invalid request is marked ``done`` with ``error`` set and returned
-    from ``run()`` alongside the completed ones instead of raising mid-
-    drain and abandoning the queue.  Paged admission additionally defers
-    (strict FIFO) while the pool is too full, resuming as evictions free
-    blocks; because every accepted request's worst-case demand fits an
-    empty pool, the drain always makes progress.
+    an invalid request is marked ``done`` with a machine-readable terminal
+    ``status`` (``REJECTED_VALIDATION`` / ``REJECTED_CAPACITY``; ``error``
+    keeps the detail string) and returned from ``run()`` alongside the
+    completed ones instead of raising mid-drain and abandoning the queue.
+    Paged admission additionally defers (strict FIFO) while the pool is too
+    full, resuming as evictions free blocks; because every accepted
+    request's worst-case demand fits an empty pool, the drain always makes
+    progress.
+
+    The drain is structured as ``tick()`` steps (one admission pass + one
+    batched decode step, returning the tick's ``(request, token)`` stream
+    events) so the asyncio request plane (``repro.serve.frontend``) can
+    interleave scheduling with an event loop; ``run()`` is the synchronous
+    drain over ``tick()``.  This base class is strict-FIFO with eager
+    worst-case block reservation; ``frontend.PriorityScheduler`` overrides
+    the policy hooks for priority lanes, deadlines, lazy allocation, and
+    preemption.
     """
 
-    def __init__(self, engine: Engine):
+    def __init__(self, engine: Engine, *, clock=None):
         self.engine = engine
+        self.clock = clock if clock is not None else time.monotonic
         self.slots: list[Optional[Request]] = [None] * engine.batch
         self.queue: list[Request] = []
         self.rejected: list[Request] = []
@@ -477,29 +583,42 @@ class BatchScheduler:
         self._pos = [0] * engine.batch
         self._key = jax.random.PRNGKey(0)
 
+    @property
+    def idle(self) -> bool:
+        return not self.queue and all(s is None for s in self.slots)
+
     def submit(self, req: Request):
         """Validate and enqueue.  Invalid requests never enter the queue:
-        they are marked failed (``req.error``) and surface in ``run()``'s
-        results — the PR-3 regression fix (an oversized request used to
-        raise mid-``run()``, abandoning all queued and in-flight work)."""
-        err = self._validate(req)
-        if err is not None:
-            req.error = err
+        they are marked failed (``req.status`` machine-readable, ``req.
+        error`` the detail) and surface in ``run()``'s results — the PR-3
+        regression fix (an oversized request used to raise mid-``run()``,
+        abandoning all queued and in-flight work)."""
+        if req.arrival is None:
+            req.arrival = self.clock()
+        verdict = self._validate(req)
+        if verdict is not None:
+            req.status, req.error = verdict
             req.done = True
+            req.completed_at = self.clock()
             self.rejected.append(req)
             return
+        req.status = RequestStatus.QUEUED
         self.queue.append(req)
 
-    def _validate(self, req: Request) -> Optional[str]:
+    def _validate(self, req: Request):
+        """None when admissible, else (terminal RequestStatus, detail)."""
         eng = self.engine
         prompt = np.asarray(req.prompt)
         if prompt.ndim != 1 or prompt.shape[0] == 0:
-            return f"request {req.rid}: prompt must be 1-D and non-empty"
+            return (RequestStatus.REJECTED_VALIDATION,
+                    f"request {req.rid}: prompt must be 1-D and non-empty")
         if req.max_new < 1:
-            return f"request {req.rid}: max_new={req.max_new} < 1"
+            return (RequestStatus.REJECTED_VALIDATION,
+                    f"request {req.rid}: max_new={req.max_new} < 1")
         need = prompt.shape[0] + req.max_new
         if need > eng.scfg.max_seq_len:
-            return (f"request {req.rid}: prompt+max_new={need} exceeds "
+            return (RequestStatus.REJECTED_VALIDATION,
+                    f"request {req.rid}: prompt+max_new={need} exceeds "
                     f"max_seq_len={eng.scfg.max_seq_len}")
         if eng.paged:
             # worst case = admission against an EMPTY pool: no shared hits
@@ -509,7 +628,8 @@ class BatchScheduler:
             worst = lay.mb_ring + lay.blocks_for_admission(
                 prompt.shape[0], req.max_new)
             if worst > lay.num_blocks:
-                return (f"request {req.rid}: needs {worst} blocks "
+                return (RequestStatus.REJECTED_CAPACITY,
+                        f"request {req.rid}: needs {worst} blocks "
                         f"(pool={lay.num_blocks})")
         return None
 
@@ -519,15 +639,25 @@ class BatchScheduler:
         self._key, sub = jax.random.split(self._key)
         return np.asarray(self.engine.sample(logits, sub))
 
-    def _finish(self, i: int) -> Request:
+    def _finish(self, i: int,
+                status: RequestStatus = RequestStatus.OK) -> Request:
         req = self.slots[i]
         req.done = True
+        req.status = status
+        req.completed_at = self.clock()
         self.slots[i] = None
         self.engine.free_slot(i)
         self._pos[i] = 0
         return req
 
-    def _admit(self, finished: list) -> bool:
+    def _emit(self, req: Request, tok: int, events: list):
+        """Record one generated token as a stream event + fire the
+        request's streaming callback (if any)."""
+        events.append((req, tok))
+        if req.on_token is not None:
+            req.on_token(req, tok)
+
+    def _admit(self, finished: list, events: list) -> bool:
         """Admit queued requests into free slots; returns True if any
         admission happened.  Strict FIFO: when the pool cannot take the
         queue head yet, admission stops (it resumes as evictions free
@@ -545,8 +675,10 @@ class BatchScheduler:
             logits = eng.prefill_into(i, req.prompt, reserve=req.max_new,
                                       plan=None if plan is True else plan)
             progressed = True
+            req.status = RequestStatus.RUNNING
             tok = int(self._sample(logits[None, :])[0])
             req.generated.append(tok)
+            self._emit(req, tok, events)
             self._pos[i] = len(req.prompt)
             self.slots[i] = req
             if len(req.generated) >= req.max_new:
@@ -555,44 +687,61 @@ class BatchScheduler:
                 self._next_tok[i] = tok
         return progressed
 
-    def run(self) -> list[Request]:
-        """Drain the queue; returns completed requests in finish order
-        (requests rejected at submit() are included up front, ``error``
-        set)."""
+    def _decode_once(self, finished: list, events: list):
+        """One batched decode step over every slot: recycle/overflow-check
+        idle rows, run the jitted step, distribute sampled tokens, evict
+        completed requests."""
         eng = self.engine
         max_seq = eng.scfg.max_seq_len
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        for i in range(eng.batch):
+            if self.slots[i] is None and self._pos[i] + 1 >= max_seq:
+                eng.free_slot(i)      # recycle an idle slot's garbage rows
+                self._pos[i] = 0
+            elif self._pos[i] + 1 > max_seq:
+                raise RuntimeError(
+                    f"slot {i} position {self._pos[i]} would overflow "
+                    f"max_seq_len={max_seq}")
+        logits, eng.cache = eng._decode(
+            eng.params, eng.cache,
+            jnp.asarray(self._next_tok)[:, None])
+        toks = self._sample(logits)
+        for i in range(eng.batch):
+            self._pos[i] += 1
+        for i in active:
+            req = self.slots[i]
+            tok = int(toks[i])
+            req.generated.append(tok)
+            self._emit(req, tok, events)
+            self._next_tok[i] = toks[i]
+            if len(req.generated) >= req.max_new:
+                finished.append(self._finish(i))
+
+    def tick(self, finished: list) -> list:
+        """One scheduler step: an admission pass, then (if any slot is
+        active) one batched decode step.  Completed requests are appended
+        to ``finished``; returns this tick's ``(request, token)`` stream
+        events in generation order."""
+        events: list = []
+        progressed = self._admit(finished, events)
+        if not any(s is not None for s in self.slots):
+            if self.queue and not progressed:
+                # cannot happen for requests that passed _validate —
+                # defensive: an empty engine must be able to admit the
+                # queue head (its worst-case demand fits an empty pool)
+                raise RuntimeError(
+                    f"scheduler stalled: {len(self.queue)} queued "
+                    f"requests but no admission possible")
+            return events             # everything admitted was max_new == 1
+        self._decode_once(finished, events)
+        return events
+
+    def run(self) -> list[Request]:
+        """Drain the queue; returns completed requests in finish order
+        (requests rejected at submit() are included up front, ``status``
+        / ``error`` set)."""
         finished: list[Request] = list(self.rejected)
         self.rejected = []
-        while self.queue or any(s is not None for s in self.slots):
-            progressed = self._admit(finished)
-            active = [i for i, s in enumerate(self.slots) if s is not None]
-            if not active:
-                if self.queue and not progressed:
-                    # cannot happen for requests that passed _validate —
-                    # defensive: an empty engine must be able to admit the
-                    # queue head (its worst-case demand fits an empty pool)
-                    raise RuntimeError(
-                        f"scheduler stalled: {len(self.queue)} queued "
-                        f"requests but no admission possible")
-                continue              # everything admitted was max_new == 1
-            for i in range(eng.batch):
-                if self.slots[i] is None and self._pos[i] + 1 >= max_seq:
-                    eng.free_slot(i)  # recycle an idle slot's garbage rows
-                    self._pos[i] = 0
-                elif self._pos[i] + 1 > max_seq:
-                    raise RuntimeError(
-                        f"slot {i} position {self._pos[i]} would overflow "
-                        f"max_seq_len={max_seq}")
-            logits, eng.cache = eng._decode(
-                eng.params, eng.cache,
-                jnp.asarray(self._next_tok)[:, None])
-            toks = self._sample(logits)
-            for i in range(eng.batch):
-                self._pos[i] += 1
-            for i in active:
-                req = self.slots[i]
-                req.generated.append(int(toks[i]))
-                self._next_tok[i] = toks[i]
-                if len(req.generated) >= req.max_new:
-                    finished.append(self._finish(i))
+        while not self.idle:
+            self.tick(finished)
         return finished

@@ -1,0 +1,453 @@
+"""Async request plane: priority lanes, deadlines, overcommit, preemption.
+
+The paper's packed 1.6-bit weight stream makes single-chip decode cheap
+enough that the serve stack, not the matmul, is the availability
+bottleneck: the FIFO ``BatchScheduler`` either stalls a burst behind
+worst-case block reservations or defers it indefinitely on pool
+exhaustion.  This module is the production layer on top of it:
+
+* :class:`PriorityScheduler` — a ``BatchScheduler`` subclass that replaces
+  the FIFO/eager-reservation policy with priority lanes, deadline-aware
+  ordering, lazy block allocation under a configurable overcommit budget,
+  victim preemption on mid-decode pool exhaustion, and graceful
+  degradation (TIMEOUT terminal states instead of exceptions, admission
+  shedding, bounded preemption retries).  Fully synchronous — ``run()``
+  still drains a queue deterministically, which is what the tests and
+  benches drive.
+* :class:`AsyncFrontend` — the asyncio serve loop over a
+  ``PriorityScheduler``: per-token streaming callbacks, an awaitable
+  result per request, and a ``serve()`` coroutine that interleaves
+  scheduler ticks with the event loop so submissions land between ticks.
+
+Admission policy
+----------------
+Queued requests are ordered by ``(effective lane, deadline, arrival)``:
+
+* **Lanes**: ``Request.priority`` (0 = most urgent).  A request's
+  *effective* lane improves by one for every ``ServeConfig.lane_aging_s``
+  seconds it has waited (starvation-proof: any request eventually reaches
+  lane 0).  Requests pinned by the bounded-retry policy (see below) jump
+  every lane.
+* **EDF within a lane**: earlier absolute deadline first; no deadline
+  sorts last.  Ties break by arrival (FIFO).
+
+Admission is *lazy* on a paged engine: only the prompt blocks plus one
+headroom block are claimed up front (``Engine.can_admit(..., lazy=True)``)
+and the decode horizon is extended block-by-block each tick
+(``Engine.reserve_tokens``).  Two gates bound it: the lazy demand must fit
+the pool's claimable blocks now, and the sum of running requests'
+worst-case demands (``Engine.worst_case_blocks``) must stay within
+``overcommit * kv_num_blocks``.  ``overcommit == 1.0`` therefore never
+needs preemption (every running request's final footprint fits);
+``> 1.0`` admits more traffic than the pool can hold at once and resolves
+collisions by preemption.
+
+Preemption
+----------
+When a decode-time extension finds the pool dry, the plane evicts the
+victim with the *worst* ``(lane, -deadline, -arrival)`` ranking — lowest
+priority first, furthest deadline within a lane — frees its blocks (the
+hash-registered prompt blocks land on the pool's WARM list, still
+matchable), counts ``Request.preemptions`` up, and requeues it with
+status ``PREEMPTED``.  Re-admission prefills ``prompt + generated`` as
+one sequence: the warm prefix blocks hash-hit, so only the generated
+tail (plus any partial prompt block) is recomputed — the PR-4 warm-list
+property, now load-bearing.  After ``ServeConfig.max_preemptions``
+evictions a request is PINNED: never picked as a victim again and boosted
+past every lane, so repeated preemption degrades its latency but cannot
+live-lock it.
+
+Deadlines and timeouts
+----------------------
+``Request.deadline_s`` is a completion budget in seconds from arrival,
+measured on the scheduler's injectable ``clock`` (tests pass a fake).  It
+is enforced at three points, always as the graceful ``TIMEOUT`` terminal
+state, never as an exception:
+
+* queued + expired → shed at admission, ``generated`` empty;
+* queued + hopeless (the measured per-tick EMA says even the first token
+  cannot land in time) → shed at admission;
+* running + expired → evicted with the partial ``generated`` kept.
+"""
+from __future__ import annotations
+
+import asyncio
+import itertools
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.serve import paging
+from repro.serve.engine import (BatchScheduler, Engine, Request,
+                                RequestStatus)
+
+__all__ = ["PriorityScheduler", "AsyncFrontend"]
+
+# consecutive no-progress ticks (nothing running, nothing admitted) before
+# the plane declares itself wedged instead of spinning forever — a CI
+# failsafe; deterministic fault injection recovers within one retry, so a
+# healthy plane never gets near this
+_MAX_BARREN_TICKS = 64
+
+
+class PriorityScheduler(BatchScheduler):
+    """Priority/deadline/overcommit request plane over the engine's slots.
+
+    Drop-in for ``BatchScheduler`` (same ``submit()`` / ``tick()`` /
+    ``run()`` surface): with default-priority, no-deadline requests and
+    ``overcommit == 1.0`` it completes the same traffic, but admission is
+    lazy on paged engines and ordering is policy-driven rather than FIFO.
+    ``stats`` counts preemptions / sheds / timeouts / re-admissions for
+    the bench harness.
+    """
+
+    def __init__(self, engine: Engine, *, clock=None):
+        super().__init__(engine, clock=clock)
+        scfg = engine.scfg
+        self.overcommit = max(1.0, float(scfg.overcommit))
+        self.max_preemptions = int(scfg.max_preemptions)
+        self.aging_s = float(scfg.lane_aging_s)
+        self.lazy = engine.paged
+        self._tick_ema: Optional[float] = None    # seconds per decode tick
+        self._barren = 0
+        self.stats = {"ticks": 0, "preemptions": 0, "shed": 0,
+                      "timeouts": 0, "readmissions": 0,
+                      "readmission_hit_tokens": 0, "admissions": 0}
+
+    # -- policy helpers ----------------------------------------------------
+
+    def _pinned(self, req: Request) -> bool:
+        """Bounded-retry policy: after K evictions the request completes at
+        degraded priority (it ate K re-prefills) but is exempt from further
+        preemption and jumps the admission queue — no live-lock."""
+        return req.preemptions >= self.max_preemptions
+
+    def _lane(self, req: Request, now: float) -> int:
+        if self._pinned(req):
+            return -1                  # ahead of every real lane
+        if self.aging_s <= 0:
+            return max(0, req.priority)
+        aged = int((now - req.arrival) / self.aging_s)
+        return max(0, req.priority - aged)
+
+    def _order_key(self, req: Request, now: float):
+        """Admission order: lane, then EDF (no deadline last), then FIFO."""
+        dl = req.deadline
+        return (self._lane(req, now), dl if dl is not None else float("inf"),
+                req.arrival, req.rid)
+
+    def _victim_key(self, req: Request, now: float):
+        """Victim order (max wins): lowest priority lane first, furthest
+        deadline within it, youngest arrival as the tie-break."""
+        dl = req.deadline
+        return (self._lane(req, now), dl if dl is not None else float("inf"),
+                req.arrival)
+
+    # -- graceful degradation ----------------------------------------------
+
+    def _shed_queue(self, now: float, finished: list):
+        """Drop queued requests whose deadline already passed or has become
+        hopeless (even an immediate admission cannot land the first token
+        in time, judged by the measured tick EMA).  TIMEOUT terminal state
+        with a machine-readable reason — not an exception."""
+        keep: List[Request] = []
+        for req in self.queue:
+            dl = req.deadline
+            why = None
+            if dl is not None:
+                if now >= dl:
+                    why = (f"request {req.rid}: shed at admission — "
+                           f"deadline expired {now - dl:.3f}s ago while "
+                           f"queued")
+                elif self._tick_ema:
+                    chunks = -(-len(req.prompt) //
+                               max(1, self.engine.scfg.prefill_chunk))
+                    eta = now + (chunks + 1) * self._tick_ema
+                    if eta > dl:
+                        why = (f"request {req.rid}: shed at admission — "
+                               f"deadline hopeless (first-token eta "
+                               f"+{eta - now:.3f}s, deadline in "
+                               f"{dl - now:.3f}s)")
+            if why is None:
+                keep.append(req)
+            else:
+                req.status = RequestStatus.TIMEOUT
+                req.error = why
+                req.done = True
+                req.completed_at = now
+                self.stats["shed"] += 1
+                finished.append(req)
+        self.queue = keep
+
+    def _timeout_running(self, now: float, finished: list):
+        """Cut off running requests whose deadline passed: partial output
+        stays in ``generated``, terminal status TIMEOUT (never raises)."""
+        for i, req in enumerate(self.slots):
+            if req is None or req.deadline is None or now < req.deadline:
+                continue
+            req.error = (f"request {req.rid}: deadline exceeded after "
+                         f"{len(req.generated)}/{req.max_new} tokens")
+            self.stats["timeouts"] += 1
+            finished.append(self._finish(i, status=RequestStatus.TIMEOUT))
+
+    # -- admission ---------------------------------------------------------
+
+    def _running_worst(self) -> int:
+        eng = self.engine
+        return sum(eng.worst_case_blocks(len(r.prompt), r.max_new)
+                   for r in self.slots if r is not None)
+
+    def _admit(self, finished: list, events: list) -> bool:
+        """Policy-ordered admission into free slots.  Stops at the first
+        candidate that cannot be taken (capacity or budget) — admitting a
+        smaller, lower-ranked request past it would invert priority; aging
+        keeps that candidate from starving regardless."""
+        eng = self.engine
+        now = self.clock()
+        budget = (self.overcommit * eng.layout.num_blocks
+                  if eng.paged else None)
+        progressed = False
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        while free and self.queue:
+            qi = min(range(len(self.queue)),
+                     key=lambda j: self._order_key(self.queue[j], now))
+            req = self.queue[qi]
+            readmit = bool(req.generated)
+            seq = (req.prompt if not readmit else
+                   np.concatenate([np.asarray(req.prompt, np.int32),
+                                   np.asarray(req.generated, np.int32)]))
+            remaining = req.max_new - len(req.generated)
+            plan = True
+            if eng.paged:
+                worst = eng.worst_case_blocks(len(req.prompt), req.max_new)
+                if self._running_worst() + worst > budget:
+                    break
+                plan = eng.can_admit(seq, remaining, lazy=True)
+                if plan is None:
+                    break
+            slot = free.pop(0)
+            hit_before = eng.pool.stats["hit_tokens"] if eng.paged else 0
+            try:
+                logits = eng.prefill_into(
+                    slot, seq, reserve=0 if self.lazy else remaining,
+                    plan=None if plan is True else plan)
+            except paging.BlockPoolExhausted:
+                # the plan said it fits but alloc failed (fault injection,
+                # or a COW/warm race): roll the slot back and defer — the
+                # next tick replans against the true pool state
+                eng.free_slot(slot)
+                break
+            self.queue.pop(qi)
+            progressed = True
+            self.stats["admissions"] += 1
+            if readmit:
+                self.stats["readmissions"] += 1
+                self.stats["readmission_hit_tokens"] += (
+                    eng.pool.stats["hit_tokens"] - hit_before)
+            req.status = RequestStatus.RUNNING
+            tok = int(self._sample(logits[None, :])[0])
+            req.generated.append(tok)
+            self._emit(req, tok, events)
+            self._pos[slot] = len(seq)
+            self.slots[slot] = req
+            if len(req.generated) >= req.max_new:
+                finished.append(self._finish(slot))
+                free.append(slot)
+            else:
+                self._next_tok[slot] = tok
+        return progressed
+
+    # -- preemption --------------------------------------------------------
+
+    def _preempt(self, slot: int) -> Request:
+        """Evict ``slot`` mid-decode: free its blocks (registered prompt
+        blocks go WARM — matchable for the re-admission prefix hit) and
+        requeue the request.  Its ``arrival`` is kept, so aging ranks it
+        ahead of fresher traffic in the same lane."""
+        req = self.slots[slot]
+        req.preemptions += 1
+        req.status = RequestStatus.PREEMPTED
+        self.slots[slot] = None
+        self.engine.free_slot(slot)
+        self._pos[slot] = 0
+        self.queue.append(req)
+        self.stats["preemptions"] += 1
+        return req
+
+    def _pick_victim(self, now: float, exclude: int) -> Optional[int]:
+        """Running slot to evict: worst ``_victim_key`` among non-pinned
+        slots.  ``exclude`` (the slot needing blocks) is only eligible when
+        it is the single running request — self-preemption then frees its
+        own fragmented blocks for a clean warm re-admission."""
+        cands = [i for i, r in enumerate(self.slots)
+                 if r is not None and not self._pinned(r) and i != exclude]
+        if cands:
+            return max(cands,
+                       key=lambda i: self._victim_key(self.slots[i], now))
+        rest = [i for i, r in enumerate(self.slots)
+                if r is not None and i != exclude]
+        if rest:                       # all others pinned: last resort —
+            # stalling the extension would wedge every request, which is
+            # worse for the pinned victim too (it waits either way)
+            return max(rest,
+                       key=lambda i: self._victim_key(self.slots[i], now))
+        if self.slots[exclude] is not None:
+            return exclude             # alone: preempt self, re-admit warm
+        return None
+
+    def _extend_or_preempt(self, now: float):
+        """Lazy-mode pre-decode reservation: every active slot's table must
+        cover its next position before the batched step runs.  Pool
+        exhaustion preempts victims (worst-ranked first) until the
+        extension fits; the victim's own extension is skipped when it is
+        evicted."""
+        if not self.lazy:
+            return
+        eng = self.engine
+        for i in range(eng.batch):
+            if self.slots[i] is None:
+                continue
+            while (self.slots[i] is not None
+                   and not eng.reserve_tokens(i, self._pos[i] + 1)):
+                victim = self._pick_victim(now, exclude=i)
+                if victim is None:
+                    raise RuntimeError(
+                        f"request plane wedged: slot {i} cannot extend its "
+                        f"reservation and no victim remains "
+                        f"(pool={eng.layout.num_blocks}, "
+                        f"free={eng.pool.free_count})")
+                self._preempt(victim)
+
+    # -- the tick ----------------------------------------------------------
+
+    def tick(self, finished: list) -> list:
+        """One plane step: deadline enforcement (running cut-offs, queue
+        shedding), policy-ordered admissions, lazy reservation extension
+        with preemption, then one batched decode step."""
+        events: list = []
+        now = self.clock()
+        self.stats["ticks"] += 1
+        self._timeout_running(now, finished)
+        self._shed_queue(now, finished)
+        progressed = self._admit(finished, events)
+        if not any(s is not None for s in self.slots):
+            if self.queue and not progressed:
+                self._barren += 1
+                if self._barren > _MAX_BARREN_TICKS:
+                    raise RuntimeError(
+                        f"request plane stalled: {len(self.queue)} queued "
+                        f"requests, no admission for {self._barren} ticks")
+            return events
+        self._barren = 0
+        self._extend_or_preempt(now)
+        if any(s is not None for s in self.slots):
+            self._decode_once(finished, events)
+        dt = self.clock() - now
+        if dt > 0:
+            self._tick_ema = (dt if self._tick_ema is None
+                              else 0.8 * self._tick_ema + 0.2 * dt)
+        return events
+
+
+class AsyncFrontend:
+    """asyncio serve loop over a :class:`PriorityScheduler`.
+
+    ``submit()`` (sync, call from the event-loop thread) validates and
+    enqueues a request, returning it immediately; ``result(req)`` awaits
+    its terminal state; ``Request.on_token`` streams tokens as they are
+    generated.  ``serve()`` runs until ``stop()``: each iteration is one
+    scheduler tick followed by an ``await`` point, so concurrent
+    coroutines (new submissions, consumers) interleave with decoding.
+    ``drain()`` is the bounded variant — serve until the plane is idle and
+    return everything that finished — which is what tests and benches use,
+    typically under ``asyncio.wait_for`` as the dead-loop guard.
+
+    Note the decode step itself is synchronous (one jitted device call);
+    the event loop yields *between* ticks, not inside one.
+    """
+
+    def __init__(self, engine: Engine, *, clock=None):
+        self.scheduler = PriorityScheduler(engine, clock=clock)
+        self._next_rid = itertools.count()
+        self._futures: dict[int, asyncio.Future] = {}
+        self._finished: list[Request] = []
+        self._wake: Optional[asyncio.Event] = None
+        self._stopping = False
+
+    def submit(self, prompt, max_new: int, *, priority: int = 0,
+               deadline_s: Optional[float] = None,
+               on_token: Optional[Callable[[Request, int], None]] = None,
+               rid: Optional[int] = None) -> Request:
+        """Enqueue one request; returns the live Request object (watch
+        ``status`` / await ``result()``).  A request rejected at
+        validation comes back already ``done`` with its terminal status."""
+        req = Request(rid=rid if rid is not None else next(self._next_rid),
+                      prompt=np.asarray(prompt, np.int32), max_new=max_new,
+                      priority=priority, deadline_s=deadline_s,
+                      on_token=on_token)
+        self.scheduler.submit(req)
+        if req.done:                   # rejected at submit: settle now
+            self.scheduler.rejected.remove(req)
+            self._settle(req)
+        if self._wake is not None:
+            self._wake.set()
+        return req
+
+    async def result(self, req: Request) -> Request:
+        """Await a request's terminal state (serve()/drain() must be
+        running for progress to happen)."""
+        if req.done:
+            return req
+        fut = self._futures.get(req.rid)
+        if fut is None:
+            fut = self._futures[req.rid] = (
+                asyncio.get_running_loop().create_future())
+        await fut
+        return req
+
+    def _settle(self, req: Request):
+        self._finished.append(req)
+        fut = self._futures.pop(req.rid, None)
+        if fut is not None and not fut.done():
+            fut.set_result(req)
+
+    def _step(self) -> list[Request]:
+        finished: list[Request] = list(self.scheduler.rejected)
+        self.scheduler.rejected = []
+        self.scheduler.tick(finished)
+        for req in finished:
+            self._settle(req)
+        return finished
+
+    async def drain(self) -> list[Request]:
+        """Tick until the plane is idle; returns every request that
+        reached a terminal state during the drain (rejects included)."""
+        drained = [r for r in self.scheduler.rejected]
+        self.scheduler.rejected = []
+        for req in drained:
+            self._settle(req)
+        while not self.scheduler.idle:
+            drained.extend(self._step())
+            await asyncio.sleep(0)
+        return drained
+
+    async def serve(self):
+        """Serve until ``stop()``: tick while there is work, park on an
+        event while idle (a submit() wakes the loop)."""
+        self._wake = asyncio.Event()
+        self._stopping = False
+        try:
+            while not self._stopping:
+                if self.scheduler.idle:
+                    self._wake.clear()
+                    await self._wake.wait()
+                    continue
+                self._step()
+                await asyncio.sleep(0)
+        finally:
+            self._wake = None
+
+    def stop(self):
+        self._stopping = True
+        if self._wake is not None:
+            self._wake.set()

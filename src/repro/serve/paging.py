@@ -55,21 +55,50 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import os
 from collections import OrderedDict
-from typing import List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
 from repro.config import ModelConfig, ServeConfig
 
 __all__ = ["PagedLayout", "BlockPool", "BlockPoolExhausted", "paged_layout",
-           "block_hashes", "prefix_sharing_supported"]
+           "block_hashes", "prefix_sharing_supported", "env_fault_injector"]
 
 
 class BlockPoolExhausted(RuntimeError):
     """Raised by BlockPool.alloc when the free list cannot satisfy a
     request.  The scheduler avoids it by checking blocks_needed() against
-    free_count before admission (defer, don't crash)."""
+    free_count before admission (defer, don't crash); the priority request
+    plane (repro.serve.frontend) additionally CATCHES it mid-decode and
+    preempts a victim instead."""
+
+
+def env_fault_injector() -> Optional[Callable[[int, int], bool]]:
+    """Build a deterministic fault injector from ``$REPRO_FAULT_ALLOC``.
+
+    The variable is a comma-separated list of 1-based ``alloc()`` call
+    ordinals (counted per BlockPool instance, successful or not): each
+    listed call raises :class:`BlockPoolExhausted` before taking any block,
+    then the counter moves on — so every listed fault fires exactly once
+    and a retry of the same logical allocation succeeds.  This makes the
+    exhaustion / preemption / rollback paths testable without hand-tuning
+    pool sizes.  Empty or unset disables injection (returns None).
+    """
+    spec = os.environ.get("REPRO_FAULT_ALLOC", "").strip()
+    if not spec:
+        return None
+    try:
+        ordinals = frozenset(int(tok) for tok in spec.split(",") if tok)
+    except ValueError as e:
+        raise ValueError(
+            f"REPRO_FAULT_ALLOC={spec!r}: expected comma-separated integer "
+            f"alloc ordinals (e.g. '3' or '2,5')") from e
+
+    def injector(call: int, n: int) -> bool:
+        return call in ordinals
+    return injector
 
 
 @dataclasses.dataclass(frozen=True)
@@ -183,7 +212,8 @@ class BlockPool:
     """
 
     def __init__(self, num_blocks: int, block_size: int, *,
-                 sharing: bool = True):
+                 sharing: bool = True,
+                 fault_injector: Optional[Callable[[int, int], bool]] = None):
         self.num_blocks = int(num_blocks)
         self.block_size = int(block_size)
         self.sharing = bool(sharing)
@@ -194,9 +224,17 @@ class BlockPool:
         # freed blocks whose hash registration is kept until reclaimed;
         # insertion order == freeing order, so popitem(last=False) is LRU
         self._warm: "OrderedDict[int, bytes]" = OrderedDict()
+        # fault-injection seam: ``injector(call_ordinal, n_blocks) -> bool``
+        # consulted at the top of every alloc() (1-based ordinal, counted
+        # whether or not the call would succeed); True raises
+        # BlockPoolExhausted before any block is taken.  None falls back to
+        # $REPRO_FAULT_ALLOC parsing (env_fault_injector).
+        self.fault_injector = (fault_injector if fault_injector is not None
+                               else env_fault_injector())
+        self._alloc_calls = 0
         self.stats = {"admissions": 0, "lookup_tokens": 0, "hit_tokens": 0,
                       "cow_copies": 0, "warm_hit_blocks": 0,
-                      "warm_reclaims": 0}
+                      "warm_reclaims": 0, "faults_injected": 0}
 
     # -- bookkeeping -------------------------------------------------------
 
@@ -221,6 +259,12 @@ class BlockPool:
         when fewer than n are claimable (no partial allocation).  The free
         list drains first; then warm blocks are reclaimed oldest-freed
         first, evicting their hash registration."""
+        self._alloc_calls += 1
+        if self.fault_injector and self.fault_injector(self._alloc_calls, n):
+            self.stats["faults_injected"] += 1
+            raise BlockPoolExhausted(
+                f"fault-injected: alloc call #{self._alloc_calls} (n={n}) "
+                f"failed by injector")
         if n > self.free_count:
             raise BlockPoolExhausted(
                 f"need {n} blocks, {self.free_count} free "

@@ -1,0 +1,357 @@
+"""Request plane: priority lanes, EDF + aging, deadline/timeout paths,
+lazy allocation with overcommit, victim preemption with warm-list
+re-admission parity, and the asyncio frontend.
+
+Scheduling-policy tests drive ``PriorityScheduler`` with a fake clock so
+lane aging, EDF ordering, and deadline enforcement are deterministic; the
+overcommit soak test and the preemption-churn test run the full paged
+engine (gather mode — the bitwise parity bar) and check greedy-token
+parity against unconstrained solo runs.  asyncio tests are wrapped in
+``asyncio.wait_for`` so a dead serve loop fails fast instead of hanging
+CI (the ISSUE-6 timeout guard).
+"""
+import asyncio
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import ServeConfig, get_config
+from repro.models import transformer as tfm
+from repro.serve.engine import Engine, Request, RequestStatus
+from repro.serve.frontend import AsyncFrontend, PriorityScheduler
+
+KEY = jax.random.PRNGKey(0)
+
+CFG = dataclasses.replace(get_config("gemma-2b").reduced(), vocab_size=64,
+                          num_layers=2, d_ff=64, capacity_factor=64.0)
+
+ASYNC_TIMEOUT_S = 120.0               # dead-loop guard around asyncio tests
+
+
+def _engine(scfg: ServeConfig, cfg=CFG):
+    params = tfm.init_params(cfg, KEY)
+    sp = tfm.serve_params(params, cfg)
+    return Engine(cfg, sp, scfg), sp
+
+
+class TickClock:
+    """Deterministic fake clock: advances ``dt`` on every call."""
+
+    def __init__(self, dt: float = 0.0, t0: float = 0.0):
+        self.t = t0
+        self.dt = dt
+
+    def __call__(self) -> float:
+        self.t += self.dt
+        return self.t
+
+
+def _run_async(coro):
+    return asyncio.run(asyncio.wait_for(coro, ASYNC_TIMEOUT_S))
+
+
+# ---------------------------------------------------------------------------
+# Machine-readable status enum (ISSUE-6 satellite bugfix)
+# ---------------------------------------------------------------------------
+
+def test_terminal_status_enum_on_rejection_and_completion():
+    """Clients must be able to branch on ``status`` without parsing the
+    free-text ``error`` detail (which stays set)."""
+    scfg = ServeConfig(max_seq_len=32, batch_size=2, kv_block_size=8,
+                       kv_num_blocks=2, paged_attn="gather")
+    e, _ = _engine(scfg)
+    sched = PriorityScheduler(e)
+    sched.submit(Request(rid=0, prompt=np.zeros((0,), np.int32), max_new=2))
+    sched.submit(Request(rid=1, prompt=np.ones(40, np.int32), max_new=4))
+    sched.submit(Request(rid=2, prompt=np.ones(20, np.int32), max_new=4))
+    sched.submit(Request(rid=3, prompt=np.ones(5, np.int32), max_new=3))
+    done = {r.rid: r for r in sched.run()}
+    assert done[0].status is RequestStatus.REJECTED_VALIDATION
+    assert done[1].status is RequestStatus.REJECTED_VALIDATION
+    assert "max_seq_len" in done[1].error
+    assert done[2].status is RequestStatus.REJECTED_CAPACITY
+    assert "blocks" in done[2].error
+    assert done[3].status is RequestStatus.OK and done[3].error is None
+    assert all(done[r].status.terminal for r in done)
+    assert not RequestStatus.PREEMPTED.terminal
+
+
+# ---------------------------------------------------------------------------
+# Admission ordering: lanes, EDF, aging
+# ---------------------------------------------------------------------------
+
+def test_priority_lanes_order_admission():
+    """batch=1 serializes admissions, so finish order == admission order:
+    lower lane number wins regardless of submit order."""
+    e, _ = _engine(ServeConfig(max_seq_len=32, batch_size=1))
+    sched = PriorityScheduler(e, clock=TickClock(0.0))
+    for rid, pri in [(0, 2), (1, 0), (2, 1)]:
+        sched.submit(Request(rid=rid, prompt=np.ones(4, np.int32) * (rid + 1),
+                             max_new=2, priority=pri))
+    done = sched.run()
+    assert [r.rid for r in done] == [1, 2, 0]
+    assert all(r.status is RequestStatus.OK for r in done)
+
+
+def test_edf_orders_within_lane():
+    """Same lane: earliest deadline first, deadline-free requests last."""
+    e, _ = _engine(ServeConfig(max_seq_len=32, batch_size=1))
+    sched = PriorityScheduler(e, clock=TickClock(0.0))
+    for rid, dl in [(0, 50.0), (1, 10.0), (2, None)]:
+        sched.submit(Request(rid=rid, prompt=np.ones(4, np.int32) * (rid + 1),
+                             max_new=2, deadline_s=dl))
+    done = sched.run()
+    assert [r.rid for r in done] == [1, 0, 2]
+
+
+def test_lane_aging_promotes_and_pinning_jumps_queue():
+    """A lane-3 request reaches lane 0 after 3 * lane_aging_s of queue
+    wait; a pinned request (>= max_preemptions evictions) outranks lane 0."""
+    e, _ = _engine(ServeConfig(max_seq_len=32, batch_size=1,
+                               lane_aging_s=2.0))
+    sched = PriorityScheduler(e)
+    req = Request(rid=0, prompt=np.ones(4, np.int32), max_new=2, priority=3,
+                  arrival=0.0)
+    assert sched._lane(req, 0.0) == 3
+    assert sched._lane(req, 2.0) == 2
+    assert sched._lane(req, 6.0) == 0
+    assert sched._lane(req, 100.0) == 0          # never below lane 0 unpinned
+    req.preemptions = sched.max_preemptions
+    assert sched._lane(req, 0.0) == -1           # pinned: ahead of every lane
+    fresh = Request(rid=1, prompt=np.ones(4, np.int32), max_new=2, priority=0,
+                    arrival=50.0)
+    assert sched._order_key(req, 50.0) < sched._order_key(fresh, 50.0)
+
+
+# ---------------------------------------------------------------------------
+# Graceful degradation: TIMEOUT terminal states, never exceptions
+# ---------------------------------------------------------------------------
+
+def test_deadline_timeout_mid_decode_keeps_partial_output():
+    e, _ = _engine(ServeConfig(max_seq_len=64, batch_size=1))
+    sched = PriorityScheduler(e, clock=TickClock(0.1))
+    sched.submit(Request(rid=0, prompt=np.ones(4, np.int32), max_new=50,
+                         deadline_s=2.0))
+    done = sched.run()                           # must NOT raise
+    assert len(done) == 1
+    r = done[0]
+    assert r.status is RequestStatus.TIMEOUT
+    assert 0 < len(r.generated) < 50             # partial output kept
+    assert "deadline" in r.error
+    assert sched.stats["timeouts"] == 1
+
+
+def test_expired_deadline_shed_at_admission():
+    e, _ = _engine(ServeConfig(max_seq_len=32, batch_size=1))
+    sched = PriorityScheduler(e, clock=TickClock(0.1))
+    sched.submit(Request(rid=0, prompt=np.ones(4, np.int32), max_new=4,
+                         deadline_s=0.0))       # expired the moment it lands
+    sched.submit(Request(rid=1, prompt=np.ones(4, np.int32), max_new=4))
+    done = {r.rid: r for r in sched.run()}
+    assert done[0].status is RequestStatus.TIMEOUT
+    assert done[0].generated == [] and "shed" in done[0].error
+    assert done[1].status is RequestStatus.OK    # queue kept draining
+    assert sched.stats["shed"] == 1
+
+
+def test_hopeless_deadline_shed_with_reason():
+    """With a measured tick EMA, a deadline that cannot even see its first
+    token is shed up front instead of burning prefill compute."""
+    e, _ = _engine(ServeConfig(max_seq_len=32, batch_size=1))
+    sched = PriorityScheduler(e, clock=TickClock(0.0, t0=1.0))
+    sched._tick_ema = 10.0                       # 10 s/tick measured
+    sched.submit(Request(rid=0, prompt=np.ones(4, np.int32), max_new=4,
+                         deadline_s=5.0))        # first token eta ~ +20 s
+    done = sched.run()
+    assert done[0].status is RequestStatus.TIMEOUT
+    assert "hopeless" in done[0].error and done[0].generated == []
+
+
+# ---------------------------------------------------------------------------
+# Overcommit + preemption (the ISSUE-6 acceptance soak test)
+# ---------------------------------------------------------------------------
+
+def _soak_scfg(overcommit: float) -> ServeConfig:
+    # 3 requests x worst-case 4 blocks = 12 > pool of 9: the mix cannot be
+    # admitted worst-case, but lazily each admission takes only 3 blocks
+    # (2 prompt + 1 headroom), so at 1.5x all three run and collide on the
+    # 4th block mid-decode -> preemption + warm re-admission.
+    return ServeConfig(max_seq_len=32, batch_size=3, kv_block_size=8,
+                       kv_num_blocks=9, paged_attn="gather",
+                       overcommit=overcommit)
+
+
+def _soak_requests(rng) -> list:
+    return [Request(rid=i, prompt=rng.integers(1, 64, 9).astype(np.int32),
+                    max_new=20) for i in range(3)]
+
+
+def test_overcommit_soak_completes_all_with_token_parity():
+    """A request mix whose worst-case reservation (12 blocks) exceeds the
+    pool (9) must complete every request via preemption + warm-list
+    re-admission — none live-locked, per-request greedy tokens bitwise
+    equal to the same mix run unconstrained."""
+    e, sp = _engine(_soak_scfg(overcommit=1.5))
+    assert e.worst_case_blocks(9, 20) == 4
+    sched = PriorityScheduler(e)
+    rng = np.random.default_rng(11)
+    reqs = _soak_requests(rng)
+    for r in reqs:
+        sched.submit(r)
+    done = {r.rid: r for r in sched.run()}
+    assert len(done) == 3
+    assert all(r.status is RequestStatus.OK and len(r.generated) == 20
+               for r in done.values())
+    assert sched.stats["preemptions"] >= 1       # the pool DID run dry
+    assert sched.stats["readmissions"] >= 1
+    assert sched.stats["readmission_hit_tokens"] > 0   # warm prefix re-hit
+    # no leaks: every block claimable again, refcounts at zero
+    assert e.pool.free_count == e.pool.num_blocks
+    assert e.pool.live_refs == 0
+    # parity vs the unconstrained engine, request by request
+    ref = Engine(CFG, sp, ServeConfig(max_seq_len=32, batch_size=1))
+    for r in reqs:
+        ref.reset()
+        want = ref.generate(np.asarray(r.prompt)[None, :], r.max_new)[0]
+        np.testing.assert_array_equal(np.asarray(r.generated),
+                                      np.asarray(want))
+
+
+def test_overcommit_budget_gate_at_one_never_preempts():
+    """overcommit=1.0: the admission budget keeps the sum of running
+    worst cases within the pool, so preemption can never fire — the third
+    request waits for a completion instead."""
+    e, _ = _engine(_soak_scfg(overcommit=1.0))
+    sched = PriorityScheduler(e)
+    rng = np.random.default_rng(11)
+    for r in _soak_requests(rng):
+        sched.submit(r)
+    done = sched.run()
+    assert len(done) == 3
+    assert all(r.status is RequestStatus.OK and len(r.generated) == 20
+               for r in done)
+    assert sched.stats["preemptions"] == 0
+    assert e.pool.free_count == e.pool.num_blocks
+
+
+# ---------------------------------------------------------------------------
+# Warm-list prefix revival under eviction churn (ISSUE-6 satellite 3)
+# ---------------------------------------------------------------------------
+
+def test_preemption_churn_warm_revival_tail_only_reprefill():
+    """Evict a slot mid-decode (deterministically, via the fault-injection
+    seam — no pool pressure, so the warm blocks survive), re-admit it, and
+    assert the re-admission is a prefix HIT that re-prefills only the
+    generated tail, with bitwise token parity vs an uninterrupted run."""
+    scfg = ServeConfig(max_seq_len=32, batch_size=1, kv_block_size=8,
+                       kv_num_blocks=8, paged_attn="gather")
+    e, sp = _engine(scfg)
+    # admission is alloc call #1 (2 blocks: prompt + headroom); the decode
+    # extension at position 16 is call #2 — fail exactly that one
+    e.pool.fault_injector = lambda call, n: call == 2
+    prompt = np.arange(1, 9, dtype=np.int32)     # 8 = exactly 1 full block
+    sched = PriorityScheduler(e)
+    sched.submit(Request(rid=0, prompt=prompt.copy(), max_new=12))
+    done = sched.run()
+    assert len(done) == 1 and done[0].status is RequestStatus.OK
+    assert len(done[0].generated) == 12
+    assert done[0].preemptions == 1
+    assert sched.stats["preemptions"] == 1
+    assert e.pool.stats["faults_injected"] == 1
+    # the re-admission hash-hit the warm prompt block: exactly the one full
+    # block (8 tokens) revived, the 9-token generated tail re-prefilled
+    assert e.pool.stats["warm_hit_blocks"] == 1
+    assert e.pool.stats["hit_tokens"] == 8
+    assert sched.stats["readmission_hit_tokens"] == 8
+    # bitwise parity vs the uninterrupted run (same engine config, no fault)
+    ref = Engine(CFG, sp, scfg)
+    want = ref.generate(prompt[None, :], 12)[0]
+    np.testing.assert_array_equal(np.asarray(done[0].generated),
+                                  np.asarray(want))
+    assert e.pool.free_count == e.pool.num_blocks
+
+
+def test_pinning_after_max_preemptions_completes():
+    """A request evicted max_preemptions times is pinned: admitted ahead of
+    every lane and never re-picked as a victim — it completes instead of
+    live-locking.  Faults on every extension alloc force repeat evictions."""
+    scfg = ServeConfig(max_seq_len=48, batch_size=1, kv_block_size=8,
+                       kv_num_blocks=8, paged_attn="gather",
+                       max_preemptions=2)
+    e, _ = _engine(scfg)
+    # alloc ordinals: #1 admission (2 blocks, 16 positions), #2 the
+    # extension at position 16 -> fault -> preemption 1; #3 re-admission
+    # (covers 32 positions), #4 the extension at position 32 -> fault ->
+    # preemption 2 (now pinned); #5 the final re-admission
+    e.pool.fault_injector = lambda call, n: call in (2, 4)
+    sched = PriorityScheduler(e)
+    sched.submit(Request(rid=0, prompt=np.arange(1, 9, dtype=np.int32),
+                         max_new=30))                 # 8 + 30 = 38 positions
+    done = sched.run()
+    assert done[0].status is RequestStatus.OK
+    assert len(done[0].generated) == 30
+    assert done[0].preemptions == 2
+    assert sched._pinned(done[0])
+    assert e.pool.stats["faults_injected"] == 2
+
+
+# ---------------------------------------------------------------------------
+# AsyncFrontend: streaming, drain, serve loop (wait_for-guarded)
+# ---------------------------------------------------------------------------
+
+def test_async_drain_streams_tokens():
+    e, _ = _engine(ServeConfig(max_seq_len=32, batch_size=2))
+    fe = AsyncFrontend(e)
+    streamed: dict[int, list] = {}
+
+    def on_token(req, tok):
+        streamed.setdefault(req.rid, []).append(tok)
+
+    async def go():
+        rng = np.random.default_rng(5)
+        reqs = [fe.submit(rng.integers(1, 64, 4 + i).astype(np.int32),
+                          max_new=3, on_token=on_token) for i in range(3)]
+        drained = await fe.drain()
+        results = [await fe.result(r) for r in reqs]
+        return reqs, drained, results
+
+    reqs, drained, results = _run_async(go())
+    assert len(drained) == 3
+    for r in reqs:
+        assert r.status is RequestStatus.OK and len(r.generated) == 3
+        assert streamed[r.rid] == r.generated    # every token streamed live
+    assert results == reqs
+
+
+def test_async_submit_rejection_settles_immediately():
+    e, _ = _engine(ServeConfig(max_seq_len=32, batch_size=2))
+    fe = AsyncFrontend(e)
+
+    async def go():
+        bad = fe.submit(np.zeros((0,), np.int32), max_new=2)
+        assert bad.done                          # settled without a tick
+        return await fe.result(bad)
+
+    bad = _run_async(go())
+    assert bad.status is RequestStatus.REJECTED_VALIDATION
+
+
+def test_async_serve_loop_start_stop():
+    e, _ = _engine(ServeConfig(max_seq_len=32, batch_size=2))
+    fe = AsyncFrontend(e)
+
+    async def go():
+        server = asyncio.create_task(fe.serve())
+        req = fe.submit(np.ones(4, np.int32), max_new=3, priority=1)
+        await fe.result(req)
+        late = fe.submit(np.ones(5, np.int32), max_new=2)   # wakes the loop
+        await fe.result(late)
+        fe.stop()
+        await server
+        return req, late
+
+    req, late = _run_async(go())
+    assert req.status is RequestStatus.OK and len(req.generated) == 3
+    assert late.status is RequestStatus.OK and len(late.generated) == 2

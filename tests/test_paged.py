@@ -101,6 +101,40 @@ def test_block_pool_warm_hit_after_evict_and_lru_reclaim():
     assert pool.free_count == 4 and pool.warm_count == 0
 
 
+def test_block_pool_fault_injection_fires_once():
+    """The injector fails exactly the listed alloc ordinal, takes no
+    blocks, and the counter moves past it (a retry succeeds)."""
+    pool = paging.BlockPool(4, 8, fault_injector=lambda call, n: call == 2)
+    a = pool.alloc(2)                            # call 1: fine
+    with pytest.raises(paging.BlockPoolExhausted):
+        pool.alloc(1)                            # call 2: injected fault
+    assert pool.stats["faults_injected"] == 1
+    assert pool.free_count == 2                  # failed call took nothing
+    b = pool.alloc(2)                            # call 3: fires only once
+    assert pool.free_count == 0 and pool.live_refs == 4
+    for bid in a + b:
+        pool.free(bid)
+
+
+def test_env_fault_injector_parsing(monkeypatch):
+    monkeypatch.delenv("REPRO_FAULT_ALLOC", raising=False)
+    assert paging.env_fault_injector() is None
+    monkeypatch.setenv("REPRO_FAULT_ALLOC", "")
+    assert paging.env_fault_injector() is None
+    monkeypatch.setenv("REPRO_FAULT_ALLOC", "2,5")
+    inj = paging.env_fault_injector()
+    assert inj(2, 1) and inj(5, 3) and not inj(1, 1) and not inj(3, 2)
+    # a fresh pool picks the env injector up automatically
+    pool = paging.BlockPool(4, 8)
+    pool.alloc(1)
+    with pytest.raises(paging.BlockPoolExhausted):
+        pool.alloc(1)
+    assert pool.stats["faults_injected"] == 1
+    monkeypatch.setenv("REPRO_FAULT_ALLOC", "nope")
+    with pytest.raises(ValueError):
+        paging.env_fault_injector()
+
+
 def test_block_pool_ensure_exclusive_cow():
     pool = paging.BlockPool(4, 2)
     (bid,) = pool.alloc(1)
