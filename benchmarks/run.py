@@ -554,6 +554,164 @@ def request_plane_bench(json_path: str = "BENCH_serve.json",
     return section
 
 
+def chaos_bench(json_path: str = "BENCH_serve.json", smoke: bool = False):
+    """Chaos soak -> the ``chaos`` section of BENCH_serve.json
+    (``--only chaos``).
+
+    Mixed-priority traffic on the constrained paged geometry (pool of 9,
+    overcommit 1.5, prefill-token budget 16/tick) driven under a
+    randomized-but-deterministic :class:`~repro.serve.faults.FaultPlan`
+    (seeded; the printed spec replays via ``REPRO_FAULTS``), with the
+    invariant auditor running EVERY tick.  Hard asserts per seed:
+
+    * no wedge — ``run()`` drains (the barren-tick guard would raise);
+    * every request reaches a terminal state, and the only non-OK state
+      is the deliberately poisoned request's FAILED_NUMERIC quarantine;
+    * OK requests decode greedy tokens bitwise-equal to a fault-free
+      solo run; the quarantined request's partial output is a bitwise
+      PREFIX of its fault-free run;
+    * zero block leaks (free count restored, refcounts at zero).
+
+    A second leg simulates a mid-serve crash: snapshot the plane with
+    every request inflight, restore onto a FRESH engine, and assert the
+    drain resumes all of them with bitwise-continuous greedy tokens and
+    warm-hit (tail-only) re-prefill.
+    """
+    import dataclasses
+    import jax
+    from repro.config import ServeConfig, get_config
+    from repro.models import transformer as tfm
+    from repro.serve import audit, faults
+    from repro.serve.engine import Engine, Request, RequestStatus
+    from repro.serve.frontend import PriorityScheduler
+
+    cfg = dataclasses.replace(
+        get_config("falcon3-3b-1.58bit").reduced(), vocab_size=256,
+        num_layers=2)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    tree = tfm.serve_params(params, cfg)
+    n_req = 4 if smoke else 8
+    max_new = 12
+    seeds = (0,) if smoke else (0, 1)
+    base = ServeConfig(max_seq_len=32, batch_size=3, kv_block_size=8,
+                       kv_num_blocks=9, prefill_chunk=8, paged_attn="gather",
+                       overcommit=1.5, max_prefill_tokens_per_tick=16,
+                       audit_interval=1)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, 9).astype(np.int32)
+               for _ in range(n_req)]
+    ref = Engine(cfg, tree, ServeConfig(max_seq_len=32, batch_size=1,
+                                        prefill_chunk=8))
+    want = {}
+    for i, p in enumerate(prompts):                    # the fault-free runs
+        ref.reset()
+        want[i] = np.asarray(ref.generate(p[None, :], max_new)[0])
+
+    section = {
+        "meta": {"schema": "bench_chaos_v1", "smoke": smoke,
+                 "requests": n_req, "max_new": max_new,
+                 "pool_blocks": base.kv_num_blocks,
+                 "overcommit": base.overcommit,
+                 "prefill_budget": base.max_prefill_tokens_per_tick,
+                 "audit_interval": 1,
+                 "note": ("gather-mode paged engine, reduced config; the "
+                          "auditor runs every tick, so a green soak also "
+                          "proves every invariant held under the chaos")},
+        "seeds": {},
+    }
+    for seed in seeds:
+        plan = faults.FaultPlan.random(seed, ticks=32)
+        eng = Engine(cfg, tree, base)
+        sched = PriorityScheduler(eng, fault_plan=plan)
+        for i, p in enumerate(prompts):
+            sched.submit(Request(rid=i, prompt=p.copy(), max_new=max_new,
+                                 priority=i % 3))
+        t0 = time.perf_counter()
+        done = {r.rid: r for r in sched.run()}        # no wedge: it drained
+        dt = time.perf_counter() - t0
+        assert sorted(done) == list(range(n_req)), "not every request terminal"
+        quarantined = [r for r in done.values()
+                       if r.status is RequestStatus.FAILED_NUMERIC]
+        assert len(quarantined) == plan.fired["poison"] <= 1
+        toks = 0
+        for r in done.values():
+            assert r.status in (RequestStatus.OK,
+                                RequestStatus.FAILED_NUMERIC), r.status
+            toks += len(r.generated)
+            if r.status is RequestStatus.OK:
+                assert len(r.generated) == max_new
+                np.testing.assert_array_equal(np.asarray(r.generated),
+                                              want[r.rid])
+            else:                                      # bitwise PREFIX
+                np.testing.assert_array_equal(
+                    np.asarray(r.generated),
+                    want[r.rid][:len(r.generated)])
+        assert eng.pool.free_count == eng.pool.num_blocks, "blocks leaked"
+        assert eng.pool.live_refs == 0
+        audit.audit_scheduler(sched)
+        assert sum(plan.fired.values()) >= 2, \
+            f"vacuous chaos plan {plan.spec!r}: nothing fired"
+        st = sched.stats
+        section["seeds"][str(seed)] = {
+            "spec": plan.spec, "fired": dict(plan.fired),
+            "ok": n_req - len(quarantined), "quarantined": len(quarantined),
+            "tokens_per_s": round(toks / dt, 2),
+            "preemptions": st["preemptions"],
+            "readmissions": st["readmissions"],
+            "prefill_faults": st["prefill_faults"], "shed": st["shed"],
+            "token_parity": True, "zero_leaks": True,
+        }
+        emit(f"chaos_seed{seed}", dt * 1e6,
+             f"tokens_per_s={toks / dt:.1f};"
+             f"fired={sum(plan.fired.values())};"
+             f"preempt={st['preemptions']};quarantined={len(quarantined)}")
+
+    # -- crash-safe snapshot/restore leg ------------------------------------
+    snap_scfg = dataclasses.replace(base, overcommit=1.0,
+                                    max_prefill_tokens_per_tick=0)
+    eng = Engine(cfg, tree, snap_scfg)
+    sched = PriorityScheduler(eng)
+    for i in range(3):                   # 3 x worst-case 3 blocks == pool
+        sched.submit(Request(rid=i, prompt=prompts[i].copy(),
+                             max_new=max_new))
+    finished: list = []
+    for _ in range(4 if smoke else 6):   # mid-serve: everyone inflight
+        sched.tick(finished)
+    assert not finished and all(s is not None for s in sched.slots)
+    cut = {r.rid: len(r.generated) for r in sched.slots}
+    snap = sched.snapshot()
+    eng2 = Engine(cfg, tree, snap_scfg)  # the "crashed" engine is abandoned
+    sched2 = PriorityScheduler(eng2)
+    sched2.restore(snap)
+    t0 = time.perf_counter()
+    done = {r.rid: r for r in sched2.run()}
+    dt = time.perf_counter() - t0
+    assert sorted(done) == [0, 1, 2]
+    for rid, r in done.items():
+        assert r.status is RequestStatus.OK and len(r.generated) == max_new
+        # bitwise-continuous: pre-crash tokens + resumed tokens == solo run
+        np.testing.assert_array_equal(np.asarray(r.generated), want[rid])
+    assert sched2.stats["restored"] == 3
+    assert eng2.pool.stats["hit_tokens"] == 24, \
+        "restore re-prefilled the prompt instead of warm-hitting it"
+    assert eng2.pool.free_count == eng2.pool.num_blocks
+    audit.audit_scheduler(sched2)
+    section["snapshot_restore"] = {
+        "inflight_at_crash": 3,
+        "tokens_at_crash": cut,
+        "registered_blocks_exported": len(snap["registered"]),
+        "resume_warm_hit_tokens": int(eng2.pool.stats["hit_tokens"]),
+        "bitwise_continuous": True,
+        "resume_tokens_per_s": round(
+            sum(max_new - c for c in cut.values()) / dt, 2),
+    }
+    emit("chaos_snapshot_restore", dt * 1e6,
+         f"restored=3;warm_hit_tokens={eng2.pool.stats['hit_tokens']};"
+         f"bitwise_continuous=True")
+    _merge_json(json_path, {"chaos": section})
+    return section
+
+
 def prefill_bench(json_path: str = "BENCH_prefill.json", smoke: bool = False):
     """Prefill-path trajectory benchmark -> BENCH_prefill.json.
 
@@ -1121,6 +1279,7 @@ def main() -> None:
         "serve": lambda: serve_bench(args.json, smoke=args.smoke),
         "request_plane": lambda: request_plane_bench(args.json,
                                                      smoke=args.smoke),
+        "chaos": lambda: chaos_bench(args.json, smoke=args.smoke),
         "prefill": lambda: prefill_bench(args.prefill_json,
                                          smoke=args.smoke),
         "paged": lambda: paged_bench(args.prefill_json, smoke=args.smoke),

@@ -21,6 +21,11 @@
 # the per-step KV bytes accounting, request_plane asserts greedy parity
 # under overcommit + preemption and the deterministic policy outcomes
 # (no preemption at 1.0x, at least one at 1.5x, expired deadlines shed).
+# chaos runs a seeded multi-seam fault plan (allocator, prefill, NaN
+# poisoning, clock jumps) over mixed traffic with the invariant auditor
+# at interval 1 and asserts zero leaks, terminal states everywhere,
+# bitwise parity for unfaulted requests, and a bitwise-continuous
+# snapshot/restore resume.
 # Timing-sensitive perf comparisons (chunked > scan, paged >= dense,
 # 1.5x >= 1.0x) are recorded-and-warned on a loaded machine;
 # BENCH_STRICT=1 restores the hard asserts.  The asyncio frontend tests
@@ -28,8 +33,8 @@
 # guard, so a dead serve loop fails fast instead of hanging this script.
 # The committed BENCH_serve.json / BENCH_prefill.json are produced by the
 # full runs (`python benchmarks/run.py --only
-# serve|request_plane|prefill|paged|paged_attn`, merge-preserving writes
-# into both JSONs) and tracked per PR.
+# serve|request_plane|prefill|paged|paged_attn|chaos`, merge-preserving
+# writes into both JSONs) and tracked per PR.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -44,6 +49,16 @@ else
 fi
 # ${arr[@]+...} guard: expanding an empty array trips `set -u` on bash < 4.4
 python -m pytest -x -q ${MARKER[@]+"${MARKER[@]}"}
+
+# Rerun the serve-plane suites with the invariant auditor on EVERY tick:
+# a green pass here proves the allocator/table/position books stay
+# consistent at each step of every covered scenario, not just at the
+# asserted endpoints.  (Interval 1 is too slow for the default suite;
+# the env var outranks ServeConfig.audit_interval.)
+echo "== serve-plane suites under REPRO_AUDIT_INTERVAL=1 =="
+REPRO_AUDIT_INTERVAL=1 python -m pytest -x -q ${MARKER[@]+"${MARKER[@]}"} \
+    tests/test_serve.py tests/test_paged.py tests/test_frontend.py \
+    tests/test_chaos.py
 
 if [[ "${1:-}" != "--fast" ]]; then
     echo "== serve smoke benchmark =="
@@ -60,6 +75,9 @@ if [[ "${1:-}" != "--fast" ]]; then
         --prefill-json /tmp/BENCH_prefill_smoke.json
     echo "== request-plane smoke benchmark =="
     PYTHONPATH="src:." python benchmarks/run.py --only request_plane --smoke \
+        --json /tmp/BENCH_serve_smoke.json
+    echo "== chaos smoke soak =="
+    PYTHONPATH="src:." python benchmarks/run.py --only chaos --smoke \
         --json /tmp/BENCH_serve_smoke.json
 fi
 

@@ -191,6 +191,26 @@ class ServeConfig:
     lane_aging_s: float = 2.0         # queue wait that promotes a request
                                       # one priority lane (starvation-proof
                                       # aging; <= 0 disables aging)
+    max_prefill_tokens_per_tick: int = 0
+                                      # >0: admission/re-admission prefill is
+                                      # budgeted — at most this many prompt
+                                      # tokens run per tick, a longer tail
+                                      # spans ticks as a resumable prefill
+                                      # job, so a re-admitted giant cannot
+                                      # stall lane-0 decode latency.
+                                      # 0 = prefill to completion (legacy)
+    # --- robustness (repro.serve.faults / repro.serve.audit) ---
+    fault_plan: str = ""              # deterministic fault-injection spec
+                                      # (faults.FaultPlan.parse grammar:
+                                      # alloc@N,prefill@N,poison@T[:S],
+                                      # clock+SEC@T,slow+SEC@T);
+                                      # $REPRO_FAULTS outranks this;
+                                      # "" = no injection
+    audit_interval: int = 0           # audit the scheduler/pool invariants
+                                      # every K ticks (audit.audit_scheduler,
+                                      # raises AuditError on corruption);
+                                      # $REPRO_AUDIT_INTERVAL outranks;
+                                      # 0 disables
 
 
 @dataclasses.dataclass(frozen=True)

@@ -10,8 +10,17 @@ KV cache, and the async request plane.
   warm list of freed-but-still-registered blocks, and the deterministic
   fault-injection seam), ``block_hashes``.
 * ``frontend`` — the production request plane: ``PriorityScheduler``
-  (priority lanes, deadlines, overcommit + preemption) and
-  ``AsyncFrontend`` (asyncio serve loop with per-token streaming).
+  (priority lanes, deadlines, overcommit + preemption, budgeted prefill
+  jobs, crash-safe ``snapshot()``/``restore()``) and ``AsyncFrontend``
+  (asyncio serve loop with per-token streaming).
+* ``faults``   — ``FaultPlan``: one seeded, deterministic schedule that
+  fires at every failure seam the plane owns (allocator, admission
+  prefill, decode numerics, clock jumps, inflated ticks); replayable
+  from a spec string (``$REPRO_FAULTS``).
+* ``audit``    — ``audit_scheduler`` / ``audit_pool``: tick-time
+  re-derivation of every host-side invariant (refcounts, hash registry,
+  warm list, table rows, position mirror, overcommit budget), raising a
+  diagnosable ``AuditError`` at the first inconsistent tick.
 
 Request-plane guide
 -------------------
@@ -93,8 +102,72 @@ Under pressure the plane walks this ladder, gentlest first:
                        and 5th).  Each listed fault fires exactly once —
                        the call counter advances past it.  Tests use
                        the equivalent ``BlockPool(fault_injector=...)``
-                       hook directly.
+                       hook directly.  Back-compat alias: ``alloc@N``
+                       events in ``REPRO_FAULTS`` compose onto the same
+                       injector (both keep firing).
+``REPRO_FAULTS``       Generalized multi-seam fault plan (outranks
+                       ``ServeConfig.fault_plan``).  Comma-separated
+                       spec, grammar ``alloc@N | prefill@N |
+                       poison@T[:S] | clock+SEC@T | slow+SEC@T``:
+                       fail the Nth allocator call / Nth admission
+                       prefill, NaN-poison one active slot's decode
+                       logits at tick T, jump the scheduler clock
+                       forward at the start of tick T, or inflate tick
+                       T's measured duration.  ``faults.FaultPlan
+                       .random(seed)`` prints a replayable spec — a
+                       failing chaos soak reproduces with
+                       ``REPRO_FAULTS=<printed spec>``.
+``REPRO_AUDIT_INTERVAL``  Run the invariant auditor every K scheduler
+                       ticks (outranks ``ServeConfig.audit_interval``;
+                       0 disables).  CI reruns the serve suites at
+                       interval 1, so every green path also proves the
+                       auditor quiet.
 =====================  ==================================================
+
+``AuditError`` failure-mode runbook
+-----------------------------------
+``audit.audit_scheduler`` re-derives the plane's host-side invariants
+from first principles and raises ``AuditError`` at the FIRST tick they
+do not hold; ``.invariant`` names the check, ``.state`` carries the dump
+(free/warm/refcounts, hash registry, tables, positions, queue/slot
+rids).  What a failure implies:
+
+* **I1 refcount conservation** — the pool's refcount vector disagrees
+  with the references the slots actually hold: a double free, a missed
+  free (leak), or a phantom table entry.  Usually an eviction/rollback
+  path that forgot ``_release_blocks`` or released twice.
+* **I2 slot references a free/warm block** — use-after-free in the
+  making: ``alloc`` can hand that block to another request while a live
+  table row still points at it.
+* **I3 hash-registry bijection broken** — ``hash→block`` and
+  ``block→hash`` disagree, or a warm block is not registered: prefix
+  matching would revive the wrong contents (silent wrong tokens).
+* **I4 block partition broken** — a block is in two of {free, warm,
+  referenced} or in none: the allocator's books no longer cover the
+  pool; orphaned blocks leak capacity forever.
+* **I5 table row mismatch** — a slot's host block-table row disagrees
+  with its held-block list (or the full region is not a clean prefix):
+  decode would scatter KV into blocks the allocator thinks are free.
+* **I6 position mirror diverged** — the scheduler's host position
+  mirror no longer equals the device cache positions: overflow guards
+  and block reservations act on wrong offsets.
+* **I7 queue/slot overlap** — a request is queued and running at once,
+  duplicated, or terminal-but-scheduled: the tick loop would decode a
+  corpse or admit twice.
+* **I8 overcommit budget exceeded** — the running worst-case demand
+  walked past ``overcommit * kv_num_blocks``: the admission gate has a
+  hole and preemption storms follow.
+
+Reproducing: every invariant is exercised by the deterministic chaos
+paths — run the suspect workload under ``REPRO_AUDIT_INTERVAL=1`` with a
+seeded plan, e.g. ``REPRO_FAULTS=$(python -c "from repro.serve.faults
+import FaultPlan; print(FaultPlan.random(0).spec)")``, and the auditor
+pins the first broken tick instead of letting the corruption surface as
+wrong tokens hundreds of ticks later.  ``benchmarks/run.py --only
+chaos`` is the canned version: a randomized-but-deterministic fault plan
+over mixed traffic with the auditor at interval 1, asserting zero leaks,
+no wedges, terminal states for every request, and bitwise token parity
+for every request the chaos did not deliberately fail.
 
 The ``REPRO_PAGED_ATTN`` switch
 -------------------------------

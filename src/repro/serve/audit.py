@@ -1,0 +1,210 @@
+"""Tick-time invariant auditing for the serve plane.
+
+The scheduler/pool state machine (block refcounts, warm list, hash
+registry, host position mirror, overcommit budget) is all host-side
+bookkeeping — when it drifts from the device cache the symptom is wrong
+tokens many ticks later, with no breadcrumb back to the tick that broke
+it.  This module is the breadcrumb: :func:`audit_scheduler` re-derives
+every invariant from first principles in O(pool + batch) and raises a
+diagnosable :class:`AuditError` (with a structured state dump) at the
+FIRST tick the state machine is inconsistent.
+
+Invariants checked (paged engines; the layout-independent ones always):
+
+I1  **Refcount conservation** — the pool's per-block refcount vector
+    equals the multiset of references held by the slots' block lists.
+    A mismatch means a leak (freed twice / never freed) or a phantom
+    reference.
+I2  **No slot references a free or warm block** — a table entry into the
+    free/warm set would let ``alloc`` hand a live request's block to
+    someone else (the classic use-after-free).
+I3  **Hash registry bijection** — ``hash → block`` and ``block → hash``
+    agree both ways, and every warm-list entry is hash-registered with
+    the matching hash (a warm block exists only to be matchable).
+I4  **Block partition** — every pool block is in exactly one of
+    {free, warm, referenced}; counts sum to the pool size.
+I5  **Table consistency** — each slot's host table row holds exactly its
+    block list (full region a prefix, ring region when armed, trash
+    everywhere else).
+I6  **Position mirror** — the scheduler's host per-slot position mirror
+    equals the device cache positions (one O(batch) device fetch per
+    audit; this is the only device sync the auditor costs).
+I7  **Queue/slot disjointness** — no request is simultaneously queued
+    and running, no duplicate rids, no terminal request still scheduled.
+I8  **Overcommit budget** (priority plane) — the sum of running
+    requests' worst-case block demands stays within
+    ``overcommit * num_blocks``.
+
+Enable via ``ServeConfig.audit_interval=K`` (audit every K ticks;
+0 disables) or the ``$REPRO_AUDIT_INTERVAL`` override — CI runs the
+whole serve test suite at interval 1 so every green path also proves the
+auditor quiet.  See ``repro/serve/__init__.py`` for the failure-mode
+runbook (what each invariant's failure implies, how to reproduce with a
+seeded ``FaultPlan``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+
+__all__ = ["AuditError", "audit_pool", "audit_scheduler"]
+
+
+class AuditError(RuntimeError):
+    """An invariant audit failed.  ``self.invariant`` names the check
+    (I1..I8 per the module doc), ``self.state`` is the structured dump
+    captured at failure time — everything needed to diagnose without a
+    debugger attached to the (possibly long-gone) run."""
+
+    def __init__(self, invariant: str, msg: str, state: dict):
+        self.invariant = invariant
+        self.state = state
+        lines = [f"audit failed [{invariant}]: {msg}", "state dump:"]
+        for k in sorted(state):
+            lines.append(f"  {k} = {state[k]!r}")
+        super().__init__("\n".join(lines))
+
+
+def _pool_state(pool, slot_blocks) -> dict:
+    return {
+        "free": sorted(pool._free),
+        "warm": list(pool._warm.keys()),
+        "refs_nonzero": {int(b): int(r) for b, r in enumerate(pool._ref)
+                         if r != 0},
+        "hash_to_bid": {h.hex()[:12]: b for h, b in pool._hash_to_bid.items()},
+        "slot_blocks": list(slot_blocks) if slot_blocks is not None else None,
+        "pool_stats": dict(pool.stats),
+    }
+
+
+def audit_pool(pool, slot_blocks: Optional[list] = None) -> None:
+    """Pool-only invariants (I1-I4).  ``slot_blocks`` is the engine's
+    per-slot block-id lists; None skips the reference-side checks (I1,
+    I2) — useful for unit tests that drive a bare BlockPool."""
+    state = _pool_state(pool, slot_blocks)
+    n = pool.num_blocks
+    free = set(pool._free)
+    warm = set(pool._warm.keys())
+    if len(free) != len(pool._free):
+        raise AuditError("I4", "duplicate block ids on the free list", state)
+    if free & warm:
+        raise AuditError("I4", f"blocks both free and warm: "
+                         f"{sorted(free & warm)}", state)
+    referenced = {int(b) for b in np.nonzero(pool._ref)[0]}
+    if (bad := referenced & (free | warm)):
+        raise AuditError("I4", f"blocks with refcount>0 on the free/warm "
+                         f"list: {sorted(bad)}", state)
+    if (neg := [int(b) for b in np.nonzero(pool._ref < 0)[0]]):
+        raise AuditError("I1", f"negative refcounts at blocks {neg}", state)
+    if len(free) + len(warm) + len(referenced) != n:
+        raise AuditError(
+            "I4", f"block partition broken: {len(free)} free + {len(warm)} "
+            f"warm + {len(referenced)} referenced != pool {n} "
+            f"(orphaned blocks leak capacity forever)", state)
+    # I3: hash registry bijection + warm entries registered
+    for h, bid in pool._hash_to_bid.items():
+        if pool._bid_to_hash.get(bid) != h:
+            raise AuditError("I3", f"hash {h.hex()[:12]} -> block {bid} but "
+                             f"block maps back to "
+                             f"{pool._bid_to_hash.get(bid)!r}", state)
+    for bid, h in pool._bid_to_hash.items():
+        if pool._hash_to_bid.get(h) != bid:
+            raise AuditError("I3", f"block {bid} -> hash {h.hex()[:12]} but "
+                             f"hash maps back to "
+                             f"{pool._hash_to_bid.get(h)!r}", state)
+    for bid, h in pool._warm.items():
+        if pool._bid_to_hash.get(bid) != h:
+            raise AuditError("I3", f"warm block {bid} not hash-registered "
+                             f"(a warm block exists only to be matchable)",
+                             state)
+    if slot_blocks is None:
+        return
+    # I1: refcount conservation against the slots' held references
+    counts = np.zeros(n, np.int64)
+    for blocks in slot_blocks:
+        for bid in blocks:
+            counts[bid] += 1
+    if not np.array_equal(counts, np.asarray(pool._ref)):
+        diff = {int(b): (int(counts[b]), int(pool._ref[b]))
+                for b in np.nonzero(counts != pool._ref)[0]}
+        raise AuditError("I1", f"refcount vector != slot-held references "
+                         f"(block: held, ref) {diff}", state)
+    # I2: no slot holds a free/warm block
+    held = {bid for blocks in slot_blocks for bid in blocks}
+    if (bad := held & (free | warm)):
+        raise AuditError("I2", f"slots reference free/warm blocks "
+                         f"{sorted(bad)} — alloc could hand them out "
+                         f"(use-after-free)", state)
+
+
+def audit_scheduler(sched) -> None:
+    """Full scheduler audit (I1-I8; see module doc).  Raises AuditError
+    on the first violated invariant; silent when consistent."""
+    eng = sched.engine
+    if eng.paged:
+        audit_pool(eng.pool, eng._slot_blocks)
+        lay = eng.layout
+        state = _pool_state(eng.pool, eng._slot_blocks)
+        state["tables"] = eng._tables.tolist()
+        # I5: each host table row == exactly the slot's block list
+        for i in range(eng.batch):
+            row = eng._tables[i]
+            real = [int(b) for b in row if b != lay.trash_block]
+            if sorted(real) != sorted(eng._slot_blocks[i]):
+                raise AuditError(
+                    "I5", f"slot {i} table entries {sorted(real)} != held "
+                    f"blocks {sorted(eng._slot_blocks[i])}", state)
+            full = row[:lay.mb_full]
+            fc = eng._full_count[i]
+            if any(b == lay.trash_block for b in full[:fc]) or \
+                    any(b != lay.trash_block for b in full[fc:]):
+                raise AuditError(
+                    "I5", f"slot {i} full region not a clean prefix of "
+                    f"{fc} assigned blocks: {full.tolist()}", state)
+    state = {
+        "pos_host": list(sched._pos),
+        "queue_rids": [r.rid for r in sched.queue],
+        "slot_rids": [None if r is None else r.rid for r in sched.slots],
+        "statuses": {r.rid: r.status.value
+                     for r in sched.queue + [s for s in sched.slots
+                                             if s is not None]},
+    }
+    # I6: host position mirror vs device cache positions
+    dev_pos = np.asarray(jax.device_get(eng.cache["pos"]))
+    state["pos_device"] = dev_pos.tolist()
+    if list(dev_pos) != list(sched._pos):
+        raise AuditError(
+            "I6", "host position mirror diverged from device cache "
+            "positions — overflow guards and paged reservations are "
+            "operating on wrong offsets", state)
+    # I7: queue/slot disjointness, rid uniqueness, status sanity
+    queued = [r.rid for r in sched.queue]
+    running = [r.rid for r in sched.slots if r is not None]
+    if len(set(queued)) != len(queued):
+        raise AuditError("I7", f"duplicate rids in queue: {queued}", state)
+    if len(set(running)) != len(running):
+        raise AuditError("I7", f"duplicate rids across slots: {running}",
+                         state)
+    if (both := set(queued) & set(running)):
+        raise AuditError("I7", f"requests both queued and running: "
+                         f"{sorted(both)}", state)
+    for r in sched.queue:
+        if r.done or r.status.terminal:
+            raise AuditError("I7", f"terminal request {r.rid} "
+                             f"({r.status.value}) still queued", state)
+    for r in sched.slots:
+        if r is not None and (r.done or r.status.terminal):
+            raise AuditError("I7", f"terminal request {r.rid} "
+                             f"({r.status.value}) still holds a slot", state)
+    # I8: overcommit budget (priority plane only)
+    if eng.paged and hasattr(sched, "overcommit"):
+        worst = sched._running_worst()
+        budget = sched.overcommit * eng.layout.num_blocks
+        if worst > budget + 1e-9:
+            state["running_worst"] = worst
+            state["budget"] = budget
+            raise AuditError(
+                "I8", f"running worst-case demand {worst} blocks exceeds "
+                f"overcommit budget {budget:.1f}", state)

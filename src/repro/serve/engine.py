@@ -77,6 +77,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import os
 import time
 from typing import Callable, List, Optional
 
@@ -87,7 +88,7 @@ import numpy as np
 from repro.config import ModelConfig, ServeConfig
 from repro.kernels import paged_attention
 from repro.models import transformer as tfm
-from repro.serve import paging
+from repro.serve import faults, paging
 
 
 class Engine:
@@ -134,6 +135,14 @@ class Engine:
                         if paged else None)
         self._fresh_slot = tfm.init_cache(cfg, 1, scfg.max_seq_len,
                                           layout=fresh_layout)
+        # fault-injection seam (repro.serve.faults): set by the scheduler
+        # when a FaultPlan is active; consulted at the top of every
+        # admission prefill (begin_prefill_job) before any state mutates
+        self.fault_plan: Optional[faults.FaultPlan] = None
+        # slots whose device table row is masked to trash while a
+        # resumable prefill job is in flight (the batched decode step's
+        # writes for that row must be absorbed, not land in real blocks)
+        self._defer_table: set = set()
         if paged:
             self.pool = paging.BlockPool(
                 layout.num_blocks, layout.block_size,
@@ -161,11 +170,19 @@ class Engine:
             self._slot_blocks = [[] for _ in range(self.batch)]
             self._full_count = [0] * self.batch
             self._ring_ready = [False] * self.batch
+        self._defer_table = set()
 
     # -- paged block-table management (host side) --------------------------
 
     def _push_table(self):
-        self.cache = {**self.cache, "table": jnp.asarray(self._tables)}
+        t = self._tables
+        if self._defer_table:
+            # mid-prefill-job slots present as trash rows to the batched
+            # step; the job's own batch-1 sub carries the real row
+            t = t.copy()
+            for i in self._defer_table:
+                t[i, :] = self.layout.trash_block
+        self.cache = {**self.cache, "table": jnp.asarray(t)}
 
     def _release_blocks(self, slot: int):
         for bid in self._slot_blocks[slot]:
@@ -173,6 +190,7 @@ class Engine:
         self._slot_blocks[slot] = []
         self._full_count[slot] = 0
         self._ring_ready[slot] = False
+        self._defer_table.discard(slot)
         self._tables[slot, :] = self.layout.trash_block
 
     def _reserve(self, slot: int, upto: int):
@@ -339,6 +357,130 @@ class Engine:
                                                 tokens)
         return logits
 
+    def begin_prefill_job(self, slot: int, prompt, *, reserve: int = 0,
+                          plan=None) -> "PrefillJob":
+        """Start a RESUMABLE per-slot admission prefill (the allocator
+        half of ``prefill_into``, which is now ``begin`` + ``step(all)`` +
+        ``finish``).  All block claiming happens here — previous blocks
+        released, shared-prefix hits claimed (tail/COW derived from the
+        CLAIMED hits, not the plan: if registrations changed since
+        ``can_admit``, the claim is the truth), blocks reserved out to
+        ``len(prompt) + reserve`` plus decode headroom — so pool
+        exhaustion can only surface now, never mid-job.  Until the job
+        finishes, the slot's DEVICE table row stays masked to trash (the
+        batched decode step may run between job steps; its writes for
+        this row are absorbed) while the job's batch-1 sub carries the
+        real row.  ``plan`` accepts the admission plan a ``can_admit``
+        call just returned (skips re-hashing); it is only trusted while
+        the slot holds no blocks.  Raises ``faults.PrefillFault`` when an
+        active FaultPlan schedules this admission to fail — before any
+        state mutates, so the caller's retry needs no rollback beyond
+        ``free_slot``."""
+        if self.fault_plan is not None and self.fault_plan.take_prefill():
+            raise faults.PrefillFault(
+                f"injected: admission prefill into slot {slot}")
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.ndim != 1 or prompt.shape[0] == 0:
+            raise ValueError(f"prefill_into(slot={slot}): empty prompt")
+        L = int(prompt.shape[0])
+        self._check_capacity(0, L + max(0, reserve),
+                             f"prefill_into(slot={slot})")
+        tail_start = 0
+        hashes: list = []
+        n_shared = 0
+        if self.paged:
+            lay = self.layout
+            if plan is None or self._slot_blocks[slot]:
+                self._release_blocks(slot)
+                plan = self._admission_plan(prompt, max(0, reserve))
+            hashes = plan[0]                   # prompt-only: never stale
+            hits = self.pool.take_prefix(hashes)   # claim (incref) the hits
+            n_shared = len(hits)
+            shared_tok = n_shared * lay.block_size
+            tail_start = min(shared_tok, L - 1)
+            cow = tail_start < shared_tok
+            self._tables[slot, :n_shared] = hits
+            self._slot_blocks[slot].extend(hits)
+            self._full_count[slot] = n_shared
+            if cow:
+                old = hits[-1]
+                new, copied = self.pool.ensure_exclusive(old)
+                if copied:
+                    self.cache = self._copy_block(
+                        self.cache, jnp.int32(old), jnp.int32(new))
+                    self._tables[slot, n_shared - 1] = new
+                    self._slot_blocks[slot][-1] = new
+            self._reserve(slot, lay.blocks_for_admission(
+                L, max(0, reserve)) * lay.block_size)
+            self._defer_table.add(slot)
+            self._push_table()
+        # the slot's MAIN-cache row keeps taking batched decode steps
+        # between job steps (absorbed: trash-masked table row / overwritten
+        # at finish), and an idle row's position may hold garbage decode
+        # increments — restart it at 0 so the scheduler's host mirror can
+        # track it exactly (audit I6) and it cannot creep toward the
+        # max_seq_len overflow guard while the job is parked
+        self.cache["pos"] = self.cache["pos"].at[slot].set(0)
+        toks = jnp.asarray(prompt[tail_start:])[None, :]
+        sub = self._fresh_sub()
+        if self.paged:
+            sub = {**sub,
+                   "table": jnp.asarray(self._tables[slot:slot + 1]),
+                   "pos": jnp.full((1,), tail_start, jnp.int32)}
+        return PrefillJob(self, slot, toks, sub, hashes, n_shared, L)
+
+    def step_prefill_job(self, job: "PrefillJob", max_tokens: int = 0, *,
+                         chunk: Optional[int] = None) -> int:
+        """Run up to ``max_tokens`` of the job's remaining tail tokens
+        (0 = all of them) in ``prefill_chunk``-sized steps; returns the
+        token count actually run.  Paged mode refreshes the job's pool
+        view first (other slots decoded between job steps) and commits
+        the job's pool writes back after, so interleaved batched decodes
+        and multiple concurrent jobs all build on one pool history."""
+        chunk = int(chunk or self.scfg.prefill_chunk)
+        budget = (job.remaining if max_tokens <= 0
+                  else min(int(max_tokens), job.remaining))
+        if budget <= 0:
+            return 0
+        sub = job._sub
+        if self.paged:
+            sub = tfm.adopt_pools(sub, self.cache)
+        end = job._off + budget
+        while job._off < end:
+            take = min(chunk, end - job._off)
+            job.logits, sub = self._step(
+                self.params, sub, job._toks[:, job._off:job._off + take])
+            job._off += take
+        job._sub = sub
+        if self.paged:
+            self.cache = tfm.adopt_pools(self.cache, sub)
+        return budget
+
+    def finish_prefill_job(self, job: "PrefillJob"):
+        """Commit a completed job: write the sub back into the slot's row
+        (unmasking the device table row), publish the freshly written
+        full prompt blocks for sharing, return last logits (V,)."""
+        if not job.done:
+            raise RuntimeError(
+                f"finish_prefill_job(slot={job.slot}): {job.remaining} "
+                f"tail tokens still pending")
+        self._defer_table.discard(job.slot)
+        self.cache = self._write_slot(self.cache, job._sub,
+                                      jnp.int32(job.slot))
+        if self.paged and self.pool.sharing:
+            for j in range(job._n_shared, job._len // self.layout.block_size):
+                self.pool.register(int(self._tables[job.slot, j]),
+                                   job._hashes[j])
+        return job.logits[0]
+
+    def cancel_prefill_job(self, job: "PrefillJob") -> None:
+        """Abandon a mid-flight job (timeout / shutdown): drop the held
+        sub and unmask the table row.  The caller owns the slot cleanup
+        (``free_slot`` releases the blocks the job claimed)."""
+        self._defer_table.discard(job.slot)
+        job._off = job._toks.shape[1]
+        job._sub = None
+
     def prefill_into(self, slot: int, prompt, *, chunk: Optional[int] = None,
                      reserve: int = 0, plan=None):
         """Per-slot admission prefill of a 1-D prompt into slot's rows from
@@ -357,61 +499,64 @@ class Engine:
         land in the trash block.  ``plan`` accepts the admission plan a
         ``can_admit`` call just returned (skips re-hashing the prompt);
         it is only trusted while the slot holds no blocks.
+
+        This is the one-shot form of the resumable prefill-job triple
+        (``begin_prefill_job`` / ``step_prefill_job`` /
+        ``finish_prefill_job``) the priority plane uses to budget
+        re-prefill work per tick.
         """
-        prompt = np.asarray(prompt, np.int32)
-        if prompt.ndim != 1 or prompt.shape[0] == 0:
-            raise ValueError(f"prefill_into(slot={slot}): empty prompt")
-        L = int(prompt.shape[0])
-        self._check_capacity(0, L + max(0, reserve),
-                             f"prefill_into(slot={slot})")
-        chunk = int(chunk or self.scfg.prefill_chunk)
-        tail_start = 0
-        hashes: list = []
-        n_shared = 0
-        if self.paged:
-            lay = self.layout
-            if plan is None or self._slot_blocks[slot]:
-                self._release_blocks(slot)
-                plan = self._admission_plan(prompt, max(0, reserve))
-            hashes = plan[0]                   # prompt-only: never stale
-            hits = self.pool.take_prefix(hashes)   # claim (incref) the hits
-            # tail/COW derive from the CLAIMED hits, not the plan: if
-            # registrations changed since can_admit, the claim is the truth
-            n_shared = len(hits)
-            shared_tok = n_shared * lay.block_size
-            tail_start = min(shared_tok, L - 1)
-            cow = tail_start < shared_tok
-            self._tables[slot, :n_shared] = hits
-            self._slot_blocks[slot].extend(hits)
-            self._full_count[slot] = n_shared
-            if cow:
-                old = hits[-1]
-                new, copied = self.pool.ensure_exclusive(old)
-                if copied:
-                    self.cache = self._copy_block(
-                        self.cache, jnp.int32(old), jnp.int32(new))
-                    self._tables[slot, n_shared - 1] = new
-                    self._slot_blocks[slot][-1] = new
-            self._reserve(slot, lay.blocks_for_admission(
-                L, max(0, reserve)) * lay.block_size)
-            self._push_table()
-        toks = jnp.asarray(prompt[tail_start:])[None, :]
-        sub = self._fresh_sub()
-        if self.paged:
-            sub = {**sub,
-                   "table": jnp.asarray(self._tables[slot:slot + 1]),
-                   "pos": jnp.full((1,), tail_start, jnp.int32)}
-        logits = None
-        for start in range(0, toks.shape[1], chunk):
-            logits, sub = self._step(self.params, sub,
-                                     toks[:, start:start + chunk])
-        self.cache = self._write_slot(self.cache, sub, jnp.int32(slot))
-        if self.paged and self.pool.sharing:
-            # publish the fully-written prompt blocks (beyond the shared
-            # ones) for future admissions
-            for j in range(n_shared, L // self.layout.block_size):
-                self.pool.register(int(self._tables[slot, j]), hashes[j])
-        return logits[0]
+        job = self.begin_prefill_job(slot, prompt, reserve=reserve,
+                                     plan=plan)
+        self.step_prefill_job(job, 0, chunk=chunk)
+        return self.finish_prefill_job(job)
+
+    # -- crash-safe snapshot support (repro.serve.frontend) ----------------
+
+    def _pool_leaf_paths(self):
+        """((section, axis) pairs — pool leaves live under each with the
+        physical-block axis at ``axis``)."""
+        return (("head", 0), ("blocks", 1), ("tail", 0))
+
+    def export_blocks(self, bids: List[int]) -> dict:
+        """Device → host KV contents of the given pool blocks, keyed by
+        ``section + keystr(path)`` per pool leaf (numpy arrays with the
+        selected blocks along each leaf's block axis).  The snapshot half
+        of crash-safe restore: only hash-registered (full prompt) blocks
+        are worth exporting — decode tails re-prefill on resume."""
+        out: dict = {}
+        if not self.paged or not bids:
+            return out
+        idx = jnp.asarray(np.asarray(bids, np.int32))
+        tmap = jax.tree_util.tree_map_with_path
+        for section, axis in self._pool_leaf_paths():
+            def grab(path, a, _section=section, _axis=axis):
+                if tfm._is_pool(path):
+                    out[_section + jax.tree_util.keystr(path)] = np.asarray(
+                        jax.device_get(jnp.take(a, idx, axis=_axis)))
+                return a
+            tmap(grab, self.cache[section])
+        return out
+
+    def import_blocks(self, bids: List[int], kv: dict) -> None:
+        """Host → device upload of ``export_blocks`` output into the given
+        pool block ids (same order as the export's).  The engine must be
+        paged; the caller (scheduler restore) seats the allocator state
+        (``BlockPool.seed_warm``) to match."""
+        if not self.paged or not bids:
+            return
+        idx = jnp.asarray(np.asarray(bids, np.int32))
+        tmap = jax.tree_util.tree_map_with_path
+        cache = dict(self.cache)
+        for section, axis in self._pool_leaf_paths():
+            def put(path, a, _section=section, _axis=axis):
+                key = _section + jax.tree_util.keystr(path)
+                if not tfm._is_pool(path) or key not in kv:
+                    return a
+                upd = jnp.asarray(kv[key], a.dtype)
+                return (a.at[idx].set(upd) if _axis == 0
+                        else a.at[:, idx].set(upd))
+            cache[section] = tmap(put, self.cache[section])
+        self.cache = cache
 
     def sample(self, logits: jax.Array, key) -> jax.Array:
         if self.scfg.temperature <= 0:
@@ -476,6 +621,35 @@ class Engine:
                 "batch": self.batch, "steps": steps}
 
 
+class PrefillJob:
+    """A resumable per-slot admission prefill (see
+    ``Engine.begin_prefill_job``).  All blocks are claimed at ``begin``;
+    the tail tokens then run in budgeted rounds (``step_prefill_job``)
+    across scheduler ticks, the batch-1 sub cache held here in between —
+    per-slot state never touches the batched cache until ``finish``,
+    and the slot's device table row stays masked to trash so interleaved
+    batched decode steps cannot write into the job's blocks."""
+
+    def __init__(self, engine: "Engine", slot: int, toks, sub, hashes,
+                 n_shared: int, length: int):
+        self.slot = slot
+        self.logits = None            # last-step logits (1, V) once run
+        self._toks = toks             # (1, T) tail tokens
+        self._off = 0                 # tail tokens already run
+        self._sub = sub               # held batch-1 cache
+        self._hashes = hashes
+        self._n_shared = n_shared
+        self._len = length            # full sequence length
+
+    @property
+    def remaining(self) -> int:
+        return int(self._toks.shape[1]) - self._off
+
+    @property
+    def done(self) -> bool:
+        return self.remaining <= 0
+
+
 class RequestStatus(enum.Enum):
     """Machine-readable request state.  Terminal states carry the outcome a
     client can branch on without parsing ``Request.error`` (which stays the
@@ -490,6 +664,11 @@ class RequestStatus(enum.Enum):
       (deadline expired / hopeless while queued; ``generated`` empty) or
       cut off mid-decode (``generated`` holds the partial output).  A
       graceful terminal state, not an exception.
+    * ``FAILED_NUMERIC`` — the numeric quarantine fired: this request's
+      decode logits went non-finite (NaN/inf), so it was cut off with its
+      partial output and its blocks freed while the rest of the batch
+      continued bitwise-unchanged (greedy argmax rows are independent).
+      A poisoned request must never silently emit garbage tokens.
 
     Transient states: ``QUEUED`` (accepted, waiting), ``RUNNING`` (in a
     batch slot), ``PREEMPTED`` (evicted mid-decode by the priority plane to
@@ -502,12 +681,13 @@ class RequestStatus(enum.Enum):
     REJECTED_VALIDATION = "REJECTED_VALIDATION"
     REJECTED_CAPACITY = "REJECTED_CAPACITY"
     TIMEOUT = "TIMEOUT"
+    FAILED_NUMERIC = "FAILED_NUMERIC"
 
     @property
     def terminal(self) -> bool:
         return self in (RequestStatus.OK, RequestStatus.REJECTED_VALIDATION,
                         RequestStatus.REJECTED_CAPACITY,
-                        RequestStatus.TIMEOUT)
+                        RequestStatus.TIMEOUT, RequestStatus.FAILED_NUMERIC)
 
 
 @dataclasses.dataclass
@@ -582,6 +762,12 @@ class BatchScheduler:
         # device sync per tick
         self._pos = [0] * engine.batch
         self._key = jax.random.PRNGKey(0)
+        self._tick_no = 0             # 1-based inside tick() (fault plans
+                                      # and the auditor key off it)
+        env_ai = os.environ.get("REPRO_AUDIT_INTERVAL", "").strip()
+        self.audit_interval = (int(env_ai) if env_ai else
+                               int(getattr(engine.scfg, "audit_interval",
+                                           0)))
 
     @property
     def idle(self) -> bool:
@@ -657,6 +843,26 @@ class BatchScheduler:
         if req.on_token is not None:
             req.on_token(req, tok)
 
+    def _maybe_audit(self):
+        """Run the invariant auditor every ``audit_interval`` ticks
+        (0 = never).  Called at the end of every tick, when the state
+        machine claims to be consistent; raises ``audit.AuditError``
+        the first tick it is not."""
+        if self.audit_interval > 0 and self._tick_no % self.audit_interval == 0:
+            from repro.serve import audit     # lazy: avoids import cycle
+            audit.audit_scheduler(self)
+
+    def _decoding_slots(self) -> list[int]:
+        """Slots taking part in this tick's batched decode step — every
+        occupied slot here; the priority plane excludes slots whose
+        admission prefill is still mid-job."""
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def _filter_logits(self, logits, active: list[int]):
+        """Decode-logits hook between the jitted step and sampling; the
+        priority plane's fault plan poisons a row here.  Base: identity."""
+        return logits
+
     def _admit(self, finished: list, events: list) -> bool:
         """Admit queued requests into free slots; returns True if any
         admission happened.  Strict FIFO: when the pool cannot take the
@@ -689,11 +895,14 @@ class BatchScheduler:
 
     def _decode_once(self, finished: list, events: list):
         """One batched decode step over every slot: recycle/overflow-check
-        idle rows, run the jitted step, distribute sampled tokens, evict
-        completed requests."""
+        idle rows, run the jitted step, quarantine rows with non-finite
+        logits (FAILED_NUMERIC — the poisoned request keeps its partial
+        output, its blocks free, every other row is bitwise-unchanged
+        because greedy argmax is row-independent), distribute sampled
+        tokens, evict completed requests."""
         eng = self.engine
         max_seq = eng.scfg.max_seq_len
-        active = [i for i, s in enumerate(self.slots) if s is not None]
+        active = self._decoding_slots()
         for i in range(eng.batch):
             if self.slots[i] is None and self._pos[i] + 1 >= max_seq:
                 eng.free_slot(i)      # recycle an idle slot's garbage rows
@@ -705,11 +914,23 @@ class BatchScheduler:
         logits, eng.cache = eng._decode(
             eng.params, eng.cache,
             jnp.asarray(self._next_tok)[:, None])
+        logits = self._filter_logits(logits, active)
+        # numeric quarantine guard: one fused device-side reduction per
+        # tick, fetched with the sampled tokens
+        finite = np.asarray(jnp.all(jnp.isfinite(logits), axis=-1))
         toks = self._sample(logits)
         for i in range(eng.batch):
             self._pos[i] += 1
         for i in active:
             req = self.slots[i]
+            if not finite[i]:
+                req.error = (
+                    f"request {req.rid}: non-finite decode logits at token "
+                    f"{len(req.generated) + 1}/{req.max_new} — quarantined "
+                    f"with partial output")
+                finished.append(
+                    self._finish(i, status=RequestStatus.FAILED_NUMERIC))
+                continue
             tok = int(toks[i])
             req.generated.append(tok)
             self._emit(req, tok, events)
@@ -723,6 +944,7 @@ class BatchScheduler:
         to ``finished``; returns this tick's ``(request, token)`` stream
         events in generation order."""
         events: list = []
+        self._tick_no += 1
         progressed = self._admit(finished, events)
         if not any(s is not None for s in self.slots):
             if self.queue and not progressed:
@@ -732,8 +954,10 @@ class BatchScheduler:
                 raise RuntimeError(
                     f"scheduler stalled: {len(self.queue)} queued "
                     f"requests but no admission possible")
+            self._maybe_audit()
             return events             # everything admitted was max_new == 1
         self._decode_once(finished, events)
+        self._maybe_audit()
         return events
 
     def run(self) -> list[Request]:

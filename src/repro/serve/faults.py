@@ -1,0 +1,251 @@
+"""Deterministic multi-seam fault injection for the serve plane.
+
+PR 6 left one failure seam: ``$REPRO_FAULT_ALLOC`` fails the Nth
+``BlockPool.alloc`` call.  Production engines see a wider failure surface
+— poisoned numerics out of a flaky accelerator, clock skew from NTP
+steps, ticks inflated by host contention, transient prefill failures —
+and each one exercises a different recovery path (quarantine, shedding,
+EMA-driven hopeless detection, deferral).  A :class:`FaultPlan` is the
+generalization: one seeded, fully deterministic schedule that can fire at
+every seam the scheduler owns, so a chaos soak is reproducible from a
+single spec string.
+
+Seams (spec grammar, comma-separated events):
+
+``alloc@N``
+    The Nth ``BlockPool.alloc`` call (1-based, per pool, counted
+    successful or not) raises ``BlockPoolExhausted`` — same semantics as
+    ``$REPRO_FAULT_ALLOC`` (which remains the back-compat alias for
+    alloc-only plans); each ordinal fires exactly once, so a retry of the
+    same logical allocation succeeds.  Wired by composing onto the pool's
+    existing ``fault_injector`` (:meth:`FaultPlan.chain_alloc`), so both
+    sources of ordinals stay live.
+``prefill@N``
+    The Nth admission prefill (``Engine.prefill_into`` /
+    ``Engine.begin_prefill_job``) raises :class:`PrefillFault` before
+    touching allocator or cache state.  Transient: the scheduler rolls
+    the slot back and retries next tick, exactly like an alloc fault.
+``poison@T`` / ``poison@T:S``
+    At scheduler tick T (1-based), the decode logits of ONE active slot
+    (the ``S % n_active``-th, default S=0) are overwritten with NaN —
+    the numeric-quarantine path must fail exactly that request
+    (``FAILED_NUMERIC``) and leave every other row bitwise-unchanged.
+``clock+S@T``
+    The scheduler clock jumps forward S seconds at the START of tick T
+    (an NTP-step / suspend-resume stand-in: deadlines expire en masse).
+``slow+S@T``
+    S seconds are added INSIDE tick T (at its end, before the duration
+    is measured), inflating the tick-time EMA that drives
+    deadline-hopeless shedding — a host-contention stand-in.
+
+``FaultPlan.random(seed)`` draws a randomized-but-deterministic plan
+(same seed → same spec, printable via ``plan.spec`` and replayable via
+``REPRO_FAULTS=<spec>``), which is what the chaos soak runs under.
+
+Configuration: ``ServeConfig.fault_plan`` holds a spec string;
+``$REPRO_FAULTS`` outranks it (same precedence rule as the other
+``REPRO_*`` overrides).  The plan is stateful (per-seam counters) —
+build a fresh one per scheduler run.
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, Dict, FrozenSet, Optional
+
+import numpy as np
+
+__all__ = ["FaultPlan", "FaultClock", "PrefillFault", "env_fault_plan"]
+
+
+class PrefillFault(RuntimeError):
+    """Injected transient admission-prefill failure.  Raised by the engine
+    BEFORE any allocator or cache mutation, so the scheduler's rollback
+    (free the slot, defer, retry next tick) is exercised without any
+    state to unwind — the retry must then succeed and produce the same
+    tokens as a fault-free run."""
+
+
+class FaultClock:
+    """Injectable-clock wrapper adding a controllable forward offset.
+
+    The scheduler's ``clock`` is replaced with one of these when a plan
+    carries ``clock``/``slow`` events; ``advance()`` moves every
+    subsequent reading forward — monotonicity is preserved (offsets are
+    validated non-negative at parse time), so EDF ordering stays sane
+    while deadlines expire early."""
+
+    def __init__(self, base: Callable[[], float]):
+        self.base = base
+        self.offset = 0.0
+
+    def __call__(self) -> float:
+        return self.base() + self.offset
+
+    def advance(self, seconds: float) -> None:
+        self.offset += float(seconds)
+
+
+def _bad(spec: str, tok: str, why: str) -> ValueError:
+    return ValueError(
+        f"fault plan {spec!r}: bad event {tok!r} ({why}); grammar is "
+        f"alloc@N | prefill@N | poison@T[:S] | clock+SEC@T | slow+SEC@T, "
+        f"comma-separated")
+
+
+class FaultPlan:
+    """A parsed, seeded-or-explicit fault schedule (see module doc).
+
+    Stateful: the prefill counter and per-event ``fired`` tallies advance
+    as the run consumes the plan, so construct one plan per scheduler.
+    ``fired`` is the soak's ground truth that the chaos actually happened
+    (a plan whose events never fire is a vacuous test).
+    """
+
+    def __init__(self, spec: str, *, alloc: FrozenSet[int],
+                 prefill: FrozenSet[int], poison: Dict[int, int],
+                 clock: Dict[int, float], slow: Dict[int, float]):
+        self.spec = spec
+        self.alloc = alloc
+        self.prefill = prefill
+        self.poison = poison
+        self.clock = clock
+        self.slow = slow
+        self._prefill_calls = 0
+        self.fired = {"alloc": 0, "prefill": 0, "poison": 0,
+                      "clock": 0, "slow": 0}
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def parse(cls, spec: str) -> "FaultPlan":
+        """Parse a spec string (see module doc for the grammar)."""
+        alloc: set[int] = set()
+        prefill: set[int] = set()
+        poison: Dict[int, int] = {}
+        clock: Dict[int, float] = {}
+        slow: Dict[int, float] = {}
+        for tok in (t.strip() for t in spec.split(",")):
+            if not tok:
+                continue
+            try:
+                if tok.startswith("alloc@"):
+                    alloc.add(int(tok[len("alloc@"):]))
+                elif tok.startswith("prefill@"):
+                    prefill.add(int(tok[len("prefill@"):]))
+                elif tok.startswith("poison@"):
+                    body = tok[len("poison@"):]
+                    t, _, sel = body.partition(":")
+                    poison[int(t)] = int(sel) if sel else 0
+                elif tok.startswith("clock+"):
+                    sec, _, t = tok[len("clock+"):].partition("@")
+                    clock[int(t)] = float(sec)
+                elif tok.startswith("slow+"):
+                    sec, _, t = tok[len("slow+"):].partition("@")
+                    slow[int(t)] = float(sec)
+                else:
+                    raise _bad(spec, tok, "unknown seam")
+            except (ValueError, TypeError) as e:
+                if isinstance(e, ValueError) and "fault plan" in str(e):
+                    raise
+                raise _bad(spec, tok, "unparsable numbers") from e
+        for t, sec in list(clock.items()) + list(slow.items()):
+            if sec < 0:
+                raise _bad(spec, f"...+{sec}@{t}",
+                           "negative skew would break clock monotonicity")
+        return cls(spec, alloc=frozenset(alloc), prefill=frozenset(prefill),
+                   poison=poison, clock=clock, slow=slow)
+
+    @classmethod
+    def random(cls, seed: int, *, ticks: int = 64, n_alloc: int = 2,
+               n_prefill: int = 1, n_poison: int = 1, n_clock: int = 1,
+               n_slow: int = 2, skew_s: tuple = (0.5, 3.0)) -> "FaultPlan":
+        """Randomized-but-deterministic plan: same seed → same spec.
+
+        Event ticks land in [2, ticks] (tick 1 is left clean so the run
+        always makes some progress first), alloc/prefill ordinals in a
+        small range that early admissions actually reach.  The generated
+        ``spec`` round-trips through :meth:`parse`, so a failing soak is
+        reproduced with ``REPRO_FAULTS=<printed spec>``.
+        """
+        rng = np.random.default_rng(seed)
+        lo = max(2, min(2, ticks))
+        parts = []
+        for _ in range(n_alloc):
+            parts.append(f"alloc@{int(rng.integers(2, 20))}")
+        for _ in range(n_prefill):
+            parts.append(f"prefill@{int(rng.integers(2, 8))}")
+        for _ in range(n_poison):
+            parts.append(f"poison@{int(rng.integers(lo, ticks + 1))}"
+                         f":{int(rng.integers(0, 8))}")
+        for _ in range(n_clock):
+            sec = float(rng.uniform(*skew_s))
+            parts.append(f"clock+{sec:.3f}@{int(rng.integers(lo, ticks + 1))}")
+        for _ in range(n_slow):
+            sec = float(rng.uniform(*skew_s))
+            parts.append(f"slow+{sec:.3f}@{int(rng.integers(lo, ticks + 1))}")
+        return cls.parse(",".join(parts))
+
+    # -- seam hooks (consumed by pool / engine / scheduler) ----------------
+
+    @property
+    def needs_clock(self) -> bool:
+        return bool(self.clock or self.slow)
+
+    def chain_alloc(self, prev: Optional[Callable[[int, int], bool]]
+                    ) -> Optional[Callable[[int, int], bool]]:
+        """Compose the plan's alloc ordinals ONTO an existing pool
+        injector (e.g. one built from $REPRO_FAULT_ALLOC) — both keep
+        firing.  Returns ``prev`` unchanged when the plan has no alloc
+        events."""
+        if not self.alloc:
+            return prev
+
+        def injector(call: int, n: int) -> bool:
+            if call in self.alloc:
+                self.fired["alloc"] += 1
+                return True
+            return bool(prev and prev(call, n))
+        return injector
+
+    def take_prefill(self) -> bool:
+        """Advance the admission-prefill counter; True when this call is
+        scheduled to fail (the engine then raises PrefillFault)."""
+        self._prefill_calls += 1
+        if self._prefill_calls in self.prefill:
+            self.fired["prefill"] += 1
+            return True
+        return False
+
+    def poison_row(self, tick: int, n_active: int) -> Optional[int]:
+        """Active-row index whose decode logits tick ``tick`` poisons
+        (None: no poisoning this tick / nothing active to poison)."""
+        sel = self.poison.get(tick)
+        if sel is None or n_active <= 0:
+            return None
+        self.fired["poison"] += 1
+        return sel % n_active
+
+    def tick_start_skew(self, tick: int) -> float:
+        """Seconds the clock jumps at the start of ``tick`` (0.0: none)."""
+        sec = self.clock.get(tick, 0.0)
+        if sec:
+            self.fired["clock"] += 1
+        return sec
+
+    def tick_end_skew(self, tick: int) -> float:
+        """Seconds added inside ``tick`` before its duration is measured
+        (0.0: none) — inflates the scheduler's tick-time EMA."""
+        sec = self.slow.get(tick, 0.0)
+        if sec:
+            self.fired["slow"] += 1
+        return sec
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"FaultPlan({self.spec!r}, fired={self.fired})"
+
+
+def env_fault_plan(scfg_spec: str = "") -> Optional[FaultPlan]:
+    """Resolve the active fault plan: ``$REPRO_FAULTS`` outranks the
+    ``ServeConfig.fault_plan`` spec; empty/unset means no plan (None)."""
+    spec = os.environ.get("REPRO_FAULTS", "").strip() or (scfg_spec or "")
+    return FaultPlan.parse(spec) if spec.strip() else None

@@ -75,9 +75,11 @@ import asyncio
 import itertools
 from typing import Callable, List, Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.serve import paging
+from repro.serve import faults, paging
 from repro.serve.engine import (BatchScheduler, Engine, Request,
                                 RequestStatus)
 
@@ -101,7 +103,8 @@ class PriorityScheduler(BatchScheduler):
     the bench harness.
     """
 
-    def __init__(self, engine: Engine, *, clock=None):
+    def __init__(self, engine: Engine, *, clock=None,
+                 fault_plan: Optional[faults.FaultPlan] = None):
         super().__init__(engine, clock=clock)
         scfg = engine.scfg
         self.overcommit = max(1.0, float(scfg.overcommit))
@@ -110,9 +113,33 @@ class PriorityScheduler(BatchScheduler):
         self.lazy = engine.paged
         self._tick_ema: Optional[float] = None    # seconds per decode tick
         self._barren = 0
+        # prefill-chunking budget: >0 caps admission/re-admission prefill
+        # tokens per tick, longer tails span ticks as resumable jobs
+        self.prefill_budget = max(
+            0, int(getattr(scfg, "max_prefill_tokens_per_tick", 0)))
+        self._tick_prefill_left: Optional[int] = None
+        self._prefilling: dict[int, object] = {}  # slot -> PrefillJob
         self.stats = {"ticks": 0, "preemptions": 0, "shed": 0,
                       "timeouts": 0, "readmissions": 0,
-                      "readmission_hit_tokens": 0, "admissions": 0}
+                      "readmission_hit_tokens": 0, "admissions": 0,
+                      "prefill_faults": 0, "quarantined": 0, "restored": 0}
+        # fault-injection plan: explicit arg > $REPRO_FAULTS >
+        # scfg.fault_plan.  Wired once here: alloc ordinals compose onto
+        # the pool's existing injector ($REPRO_FAULT_ALLOC stays live as
+        # the back-compat alias), the prefill seam hangs off the engine,
+        # and clock/slow events wrap the injectable clock.
+        self.fault_plan = (fault_plan if fault_plan is not None else
+                           faults.env_fault_plan(
+                               getattr(scfg, "fault_plan", "")))
+        self._fault_clock: Optional[faults.FaultClock] = None
+        if self.fault_plan is not None:
+            engine.fault_plan = self.fault_plan
+            if engine.paged:
+                engine.pool.fault_injector = self.fault_plan.chain_alloc(
+                    engine.pool.fault_injector)
+            if self.fault_plan.needs_clock:
+                self._fault_clock = faults.FaultClock(self.clock)
+                self.clock = self._fault_clock
 
     # -- policy helpers ----------------------------------------------------
 
@@ -138,10 +165,14 @@ class PriorityScheduler(BatchScheduler):
 
     def _victim_key(self, req: Request, now: float):
         """Victim order (max wins): lowest priority lane first, furthest
-        deadline within it, youngest arrival as the tie-break."""
+        deadline within it, then CHEAPEST eviction — fewest generated
+        tokens, since every generated token must re-prefill on
+        re-admission (the prompt prefix rides the warm-list hit, the
+        generated tail is recomputed), so invested work is protected —
+        and youngest arrival as the final tie-break."""
         dl = req.deadline
         return (self._lane(req, now), dl if dl is not None else float("inf"),
-                req.arrival)
+                -len(req.generated), req.arrival)
 
     # -- graceful degradation ----------------------------------------------
 
@@ -207,8 +238,11 @@ class PriorityScheduler(BatchScheduler):
         budget = (self.overcommit * eng.layout.num_blocks
                   if eng.paged else None)
         progressed = False
-        free = [i for i, s in enumerate(self.slots) if s is None]
+        free = [i for i, s in enumerate(self.slots)
+                if s is None and i not in self._prefilling]
         while free and self.queue:
+            if self.prefill_budget > 0 and self._tick_prefill_left <= 0:
+                break                  # this tick's prefill budget is spent
             qi = min(range(len(self.queue)),
                      key=lambda j: self._order_key(self.queue[j], now))
             req = self.queue[qi]
@@ -228,7 +262,7 @@ class PriorityScheduler(BatchScheduler):
             slot = free.pop(0)
             hit_before = eng.pool.stats["hit_tokens"] if eng.paged else 0
             try:
-                logits = eng.prefill_into(
+                job = eng.begin_prefill_job(
                     slot, seq, reserve=0 if self.lazy else remaining,
                     plan=None if plan is True else plan)
             except paging.BlockPoolExhausted:
@@ -237,33 +271,93 @@ class PriorityScheduler(BatchScheduler):
                 # next tick replans against the true pool state
                 eng.free_slot(slot)
                 break
+            except faults.PrefillFault:
+                # injected transient prefill failure: raised before any
+                # allocator/cache mutation, so rollback is the same defer
+                self.stats["prefill_faults"] += 1
+                eng.free_slot(slot)
+                break
             self.queue.pop(qi)
             progressed = True
             self.stats["admissions"] += 1
             if readmit:
                 self.stats["readmissions"] += 1
-                self.stats["readmission_hit_tokens"] += (
-                    eng.pool.stats["hit_tokens"] - hit_before)
+                if eng.paged:
+                    self.stats["readmission_hit_tokens"] += (
+                        eng.pool.stats["hit_tokens"] - hit_before)
             req.status = RequestStatus.RUNNING
-            tok = int(self._sample(logits[None, :])[0])
-            req.generated.append(tok)
-            self._emit(req, tok, events)
-            self._pos[slot] = len(seq)
             self.slots[slot] = req
-            if len(req.generated) >= req.max_new:
-                finished.append(self._finish(slot))
-                free.append(slot)
+            self._pos[slot] = 0
+            ran = eng.step_prefill_job(
+                job, 0 if self.prefill_budget <= 0
+                else self._tick_prefill_left)
+            if self._tick_prefill_left is not None:
+                self._tick_prefill_left -= ran
+            if job.done:
+                self._job_go_live(slot, job, finished, events)
+                if self.slots[slot] is None:
+                    free.append(slot)
             else:
-                self._next_tok[slot] = tok
+                self._prefilling[slot] = job
         return progressed
 
+    def _job_go_live(self, slot: int, job, finished: list,
+                     events: list) -> None:
+        """Complete a prefill job: commit the sub cache, sample the
+        request's next token off the prefill logits, and put the slot
+        into the decode rotation (or finish it when max_new is met)."""
+        logits = self.engine.finish_prefill_job(job)
+        req = self.slots[slot]
+        tok = int(self._sample(logits[None, :])[0])
+        req.generated.append(tok)
+        self._emit(req, tok, events)
+        self._pos[slot] = job._len
+        if len(req.generated) >= req.max_new:
+            finished.append(self._finish(slot))
+        else:
+            self._next_tok[slot] = tok
+
+    def _step_jobs(self, finished: list, events: list) -> None:
+        """Advance in-flight prefill jobs within this tick's token budget
+        (jobs first, then new admissions — a paused job holds claimed
+        blocks, so finishing it is always the best use of the budget)."""
+        for slot in sorted(self._prefilling):
+            if (self._tick_prefill_left is not None
+                    and self._tick_prefill_left <= 0):
+                break
+            job = self._prefilling[slot]
+            ran = self.engine.step_prefill_job(
+                job, 0 if self._tick_prefill_left is None
+                else self._tick_prefill_left)
+            if self._tick_prefill_left is not None:
+                self._tick_prefill_left -= ran
+            if job.done:
+                del self._prefilling[slot]
+                self._job_go_live(slot, job, finished, events)
+
     # -- preemption --------------------------------------------------------
+
+    def _finish(self, i: int,
+                status: RequestStatus = RequestStatus.OK) -> Request:
+        """Finish/evict a slot; a mid-flight prefill job on it (timeout
+        before the job completed) is cancelled first so the held sub and
+        the table-row mask are dropped with the blocks."""
+        job = self._prefilling.pop(i, None)
+        if job is not None:
+            self.engine.cancel_prefill_job(job)
+        if status is RequestStatus.FAILED_NUMERIC:
+            self.stats["quarantined"] += 1
+        return super()._finish(i, status=status)
 
     def _preempt(self, slot: int) -> Request:
         """Evict ``slot`` mid-decode: free its blocks (registered prompt
         blocks go WARM — matchable for the re-admission prefix hit) and
         requeue the request.  Its ``arrival`` is kept, so aging ranks it
-        ahead of fresher traffic in the same lane."""
+        ahead of fresher traffic in the same lane.  A mid-prefill-job slot
+        (last-resort victim) abandons the job's partial work."""
+        job = self._prefilling.pop(slot, None)
+        if job is not None:
+            self.engine.cancel_prefill_job(job)
         req = self.slots[slot]
         req.preemptions += 1
         req.status = RequestStatus.PREEMPTED
@@ -276,21 +370,25 @@ class PriorityScheduler(BatchScheduler):
 
     def _pick_victim(self, now: float, exclude: int) -> Optional[int]:
         """Running slot to evict: worst ``_victim_key`` among non-pinned
-        slots.  ``exclude`` (the slot needing blocks) is only eligible when
-        it is the single running request — self-preemption then frees its
-        own fragmented blocks for a clean warm re-admission."""
-        cands = [i for i, r in enumerate(self.slots)
-                 if r is not None and not self._pinned(r) and i != exclude]
-        if cands:
-            return max(cands,
-                       key=lambda i: self._victim_key(self.slots[i], now))
-        rest = [i for i, r in enumerate(self.slots)
-                if r is not None and i != exclude]
-        if rest:                       # all others pinned: last resort —
-            # stalling the extension would wedge every request, which is
-            # worse for the pinned victim too (it waits either way)
-            return max(rest,
-                       key=lambda i: self._victim_key(self.slots[i], now))
+        decoding slots; then pinned slots (all others pinned: stalling the
+        extension would wedge every request, which is worse for the pinned
+        victim too); then mid-prefill-job slots (their partial prefill is
+        lost — last resort).  ``exclude`` (the slot needing blocks) is
+        only eligible when it is the single running request —
+        self-preemption then frees its own fragmented blocks for a clean
+        warm re-admission."""
+        occupied = [i for i, r in enumerate(self.slots)
+                    if r is not None and i != exclude]
+        tiers = (
+            [i for i in occupied if not self._pinned(self.slots[i])
+             and i not in self._prefilling],
+            [i for i in occupied if i not in self._prefilling],
+            occupied,
+        )
+        for cands in tiers:
+            if cands:
+                return max(cands, key=lambda i: self._victim_key(
+                    self.slots[i], now))
         if self.slots[exclude] is not None:
             return exclude             # alone: preempt self, re-admit warm
         return None
@@ -305,8 +403,9 @@ class PriorityScheduler(BatchScheduler):
             return
         eng = self.engine
         for i in range(eng.batch):
-            if self.slots[i] is None:
-                continue
+            if self.slots[i] is None or i in self._prefilling:
+                continue              # job slots reserved everything at
+                                      # begin; they are not decoding yet
             while (self.slots[i] is not None
                    and not eng.reserve_tokens(i, self._pos[i] + 1)):
                 victim = self._pick_victim(now, exclude=i)
@@ -320,15 +419,52 @@ class PriorityScheduler(BatchScheduler):
 
     # -- the tick ----------------------------------------------------------
 
+    def _decoding_slots(self) -> list[int]:
+        """Occupied slots minus those whose admission prefill is still a
+        mid-flight job (their device table rows are masked to trash; they
+        join the decode rotation when the job finishes)."""
+        return [i for i, s in enumerate(self.slots)
+                if s is not None and i not in self._prefilling]
+
+    def _filter_logits(self, logits, active: list[int]):
+        """Fault-plan seam: poison one active row's decode logits with NaN
+        at the scheduled tick — the quarantine guard downstream must then
+        fail exactly that request."""
+        plan = self.fault_plan
+        if plan is not None and active:
+            row = plan.poison_row(self._tick_no, len(active))
+            if row is not None:
+                logits = logits.at[active[row], :].set(jnp.nan)
+        return logits
+
+    def _apply_end_skew(self):
+        """Fault-plan seam: inflate this tick's measured duration (the
+        EMA driving deadline-hopeless shedding) by advancing the wrapped
+        clock before the duration is read."""
+        if self.fault_plan is not None and self._fault_clock is not None:
+            skew = self.fault_plan.tick_end_skew(self._tick_no)
+            if skew:
+                self._fault_clock.advance(skew)
+
     def tick(self, finished: list) -> list:
-        """One plane step: deadline enforcement (running cut-offs, queue
-        shedding), policy-ordered admissions, lazy reservation extension
-        with preemption, then one batched decode step."""
+        """One plane step: injected clock jumps, deadline enforcement
+        (running cut-offs, queue shedding), in-flight prefill jobs, then
+        policy-ordered admissions — both within the tick's prefill token
+        budget — lazy reservation extension with preemption, one batched
+        decode step, and the end-of-tick invariant audit."""
         events: list = []
+        self._tick_no += 1
+        if self.fault_plan is not None and self._fault_clock is not None:
+            skew = self.fault_plan.tick_start_skew(self._tick_no)
+            if skew:
+                self._fault_clock.advance(skew)
         now = self.clock()
         self.stats["ticks"] += 1
         self._timeout_running(now, finished)
         self._shed_queue(now, finished)
+        self._tick_prefill_left = (self.prefill_budget
+                                   if self.prefill_budget > 0 else None)
+        self._step_jobs(finished, events)
         progressed = self._admit(finished, events)
         if not any(s is not None for s in self.slots):
             if self.queue and not progressed:
@@ -337,16 +473,121 @@ class PriorityScheduler(BatchScheduler):
                     raise RuntimeError(
                         f"request plane stalled: {len(self.queue)} queued "
                         f"requests, no admission for {self._barren} ticks")
+            self._apply_end_skew()
+            self._maybe_audit()
             return events
         self._barren = 0
         self._extend_or_preempt(now)
-        if any(s is not None for s in self.slots):
+        if self._decoding_slots():
             self._decode_once(finished, events)
+        self._apply_end_skew()
         dt = self.clock() - now
         if dt > 0:
             self._tick_ema = (dt if self._tick_ema is None
                               else 0.8 * self._tick_ema + 0.2 * dt)
+        self._maybe_audit()
         return events
+
+    # -- crash-safe snapshot / restore -------------------------------------
+
+    def _fingerprint(self) -> tuple:
+        """Engine-compatibility stamp a snapshot must match to restore."""
+        eng = self.engine
+        lay = eng.layout
+        return (eng.cfg.name, eng.scfg.max_seq_len, eng.batch,
+                None if lay is None else (lay.block_size, lay.num_blocks,
+                                          lay.mb_full, lay.mb_ring))
+
+    @staticmethod
+    def _ser_request(r: Request) -> dict:
+        return {"rid": r.rid,
+                "prompt": np.asarray(r.prompt, np.int32).tolist(),
+                "max_new": r.max_new, "priority": r.priority,
+                "deadline_s": r.deadline_s, "arrival": r.arrival,
+                "generated": list(r.generated),
+                "preemptions": r.preemptions, "status": r.status.value}
+
+    def snapshot(self) -> dict:
+        """Serialize the plane's complete host-side state — queued and
+        inflight requests (mid-prefill-job ones included), scheduler
+        counters, PRNG key, and the allocator's hash-registered blocks
+        WITH their device KV contents — into a picklable dict.
+
+        The design insight that keeps this small: per-slot device state
+        does not need serializing.  An inflight request is resumed by the
+        plane's existing PREEMPTED re-admission path (prefill of
+        ``prompt + generated``), and the only thing that makes that cheap
+        is the warm list — so a snapshot is exactly {requests} +
+        {registered prompt blocks' KV}.  Greedy tokens are a pure
+        function of the token sequence, so the resumed stream is bitwise-
+        continuous whether the prefix blocks were exported (tail-only
+        re-prefill) or not (full re-prefill on non-sharing families —
+        same tokens, just slower).
+        """
+        eng = self.engine
+        snap = {
+            "fingerprint": self._fingerprint(),
+            "tick_no": self._tick_no,
+            "tick_ema": self._tick_ema,
+            "stats": dict(self.stats),
+            "key": np.asarray(jax.device_get(self._key)),
+            "queue": [self._ser_request(r) for r in self.queue],
+            "inflight": [self._ser_request(r) for r in self.slots
+                         if r is not None],
+        }
+        if eng.paged:
+            pool = eng.pool
+            # warm blocks first in LRU order, then resident-registered —
+            # restore seeds them in this order, preserving relative age
+            bids = list(pool._warm.keys()) + [
+                bid for bid in pool._bid_to_hash if bid not in pool._warm]
+            snap["registered"] = [[pool._bid_to_hash[bid].hex(), int(bid)]
+                                  for bid in bids]
+            snap["kv"] = eng.export_blocks(bids)
+        return snap
+
+    def restore(self, snap: dict) -> None:
+        """Rebuild a snapshotted plane onto THIS (fresh) scheduler/engine:
+        upload the registered blocks' KV into the same physical block
+        ids, seat them on the warm list (matchable, refcount 0), and
+        requeue every snapshotted request — inflight ones as PREEMPTED
+        re-admissions whose prompt blocks warm-hit, so only the generated
+        tail re-prefills and the greedy stream continues bitwise where
+        the crash cut it.  Raises on a fingerprint mismatch or a
+        non-fresh engine."""
+        if tuple(snap["fingerprint"]) != self._fingerprint():
+            raise ValueError(
+                f"snapshot fingerprint {snap['fingerprint']} does not "
+                f"match this engine {self._fingerprint()}")
+        eng = self.engine
+        if not self.idle:
+            raise RuntimeError("restore() requires an idle scheduler")
+        if eng.paged and eng.pool.free_count != eng.layout.num_blocks:
+            raise RuntimeError("restore() requires a fresh engine "
+                               "(blocks already allocated)")
+        if eng.paged and snap.get("registered"):
+            bids = [bid for _h, bid in snap["registered"]]
+            for h_hex, bid in snap["registered"]:
+                eng.pool.seed_warm(bid, bytes.fromhex(h_hex))
+            eng.import_blocks(bids, snap["kv"])
+        for d in snap["inflight"] + snap["queue"]:
+            req = Request(rid=d["rid"],
+                          prompt=np.asarray(d["prompt"], np.int32),
+                          max_new=d["max_new"], priority=d["priority"],
+                          deadline_s=d["deadline_s"], arrival=d["arrival"])
+            req.generated = list(d["generated"])
+            req.preemptions = d["preemptions"]
+            # the re-admission path keys off generated, not off the label;
+            # PREEMPTED vs QUEUED here is observability
+            req.status = (RequestStatus.PREEMPTED if req.generated
+                          else RequestStatus.QUEUED)
+            self.queue.append(req)
+        self._tick_no = int(snap["tick_no"])
+        self._tick_ema = snap["tick_ema"]
+        self.stats = dict(snap["stats"])
+        self.stats["restored"] = (self.stats.get("restored", 0)
+                                  + len(snap["inflight"]))
+        self._key = jnp.asarray(np.asarray(snap["key"], np.uint32))
 
 
 class AsyncFrontend:

@@ -336,6 +336,30 @@ class BlockPool:
         self.stats["hit_tokens"] += len(hits) * self.block_size
         return hits
 
+    def seed_warm(self, bid: int, h: bytes) -> None:
+        """Crash-restore seam: claim ``bid`` off the free list and seat it
+        directly on the WARM list under hash ``h`` — registered, refcount
+        0, matchable, reclaimable — as if it had been written, shared and
+        freed in a previous life.  The caller must have uploaded the
+        block's KV contents to the device pool first (Engine.
+        import_blocks); seeding order defines warm-LRU age (seed
+        oldest-first).  Raises when ``bid`` is not free or ``h`` is
+        already registered."""
+        if not self.sharing:
+            raise ValueError("seed_warm requires a sharing-enabled pool")
+        if h in self._hash_to_bid:
+            raise ValueError(
+                f"seed_warm: hash {h.hex()[:12]} already registered to "
+                f"block {self._hash_to_bid[h]}")
+        try:
+            self._free.remove(bid)
+        except ValueError:
+            raise ValueError(f"seed_warm: block {bid} is not free "
+                             f"(ref={int(self._ref[bid])})") from None
+        self._hash_to_bid[h] = bid
+        self._bid_to_hash[bid] = h
+        self._warm[bid] = h
+
     def register(self, bid: int, h: bytes) -> None:
         """Publish a fully-written prompt block for future sharing.  First
         writer wins: an existing registration for the same hash is kept

@@ -1,0 +1,394 @@
+"""Chaos hardening: deterministic multi-seam fault injection, numeric
+quarantine, clock-skew degradation, invariant auditing, and crash-safe
+snapshot/restore.
+
+Every test drives the REAL scheduler/engine (gather mode where paged —
+the bitwise parity bar) under a seeded :class:`FaultPlan`; the green-path
+runs set ``audit_interval=1`` so each tick also proves the auditor quiet.
+The auditor test corrupts live state on purpose and checks the raised
+``AuditError`` names the right invariant — then repairs the corruption
+and re-audits clean, proving the corruption (not ambient state) was the
+trigger."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import ServeConfig, get_config
+from repro.models import transformer as tfm
+from repro.serve import audit, faults
+from repro.serve.engine import Engine, Request, RequestStatus
+from repro.serve.frontend import PriorityScheduler
+
+KEY = jax.random.PRNGKey(0)
+
+CFG = dataclasses.replace(get_config("gemma-2b").reduced(), vocab_size=64,
+                          num_layers=2, d_ff=64, capacity_factor=64.0)
+
+
+def _engine(scfg: ServeConfig, cfg=CFG):
+    params = tfm.init_params(cfg, KEY)
+    sp = tfm.serve_params(params, cfg)
+    return Engine(cfg, sp, scfg), sp
+
+
+class TickClock:
+    """Deterministic fake clock: advances ``dt`` on every call."""
+
+    def __init__(self, dt: float = 0.0, t0: float = 0.0):
+        self.t = t0
+        self.dt = dt
+
+    def __call__(self) -> float:
+        self.t += self.dt
+        return self.t
+
+
+def _solo_want(sp, prompts, max_new, *, prefill_chunk=32, max_seq_len=32):
+    """Unconstrained solo greedy runs — the parity oracle."""
+    ref = Engine(CFG, sp, ServeConfig(max_seq_len=max_seq_len, batch_size=1,
+                                      prefill_chunk=prefill_chunk))
+    want = {}
+    for i, p in enumerate(prompts):
+        ref.reset()
+        want[i] = np.asarray(ref.generate(np.asarray(p)[None, :], max_new)[0])
+    return want
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: grammar, determinism, precedence
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_parse_all_seams():
+    plan = faults.FaultPlan.parse(
+        "alloc@3, alloc@7, prefill@1, poison@5:2, poison@9, "
+        "clock+1.5@4, slow+0.25@6")
+    assert plan.alloc == frozenset({3, 7})
+    assert plan.prefill == frozenset({1})
+    assert plan.poison == {5: 2, 9: 0}
+    assert plan.clock == {4: 1.5}
+    assert plan.slow == {6: 0.25}
+    assert plan.needs_clock
+    assert not faults.FaultPlan.parse("alloc@1").needs_clock
+    for bad in ("gremlin@3", "alloc@x", "poison@", "clock+-2@3", "clock+1"):
+        with pytest.raises(ValueError, match="fault plan"):
+            faults.FaultPlan.parse(bad)
+
+
+def test_fault_plan_seam_hooks_fire_once_and_tally():
+    plan = faults.FaultPlan.parse("prefill@2,poison@3:5,clock+2@4,slow+1@6")
+    assert not plan.take_prefill() and plan.take_prefill()   # calls 1, 2
+    assert not plan.take_prefill()                           # fires once
+    assert plan.poison_row(2, 3) is None
+    assert plan.poison_row(3, 3) == 2                        # 5 % 3
+    assert plan.poison_row(3, 0) is None                     # nothing active
+    assert plan.tick_start_skew(4) == 2.0 and plan.tick_start_skew(5) == 0.0
+    assert plan.tick_end_skew(6) == 1.0
+    assert plan.fired == {"alloc": 0, "prefill": 1, "poison": 1,
+                          "clock": 1, "slow": 1}
+    # alloc ordinals compose onto an existing injector: both keep firing
+    inj = plan2_inj = faults.FaultPlan.parse("alloc@4").chain_alloc(
+        lambda call, n: call == 2)
+    assert not inj(1, 1) and inj(2, 1) and not inj(3, 1) and inj(4, 1)
+    assert faults.FaultPlan.parse("prefill@1").chain_alloc(plan2_inj) \
+        is plan2_inj                    # no alloc events: injector untouched
+
+
+def test_fault_plan_random_is_deterministic_and_replayable():
+    a, b = faults.FaultPlan.random(7), faults.FaultPlan.random(7)
+    assert a.spec == b.spec
+    assert a.spec != faults.FaultPlan.random(8).spec
+    replay = faults.FaultPlan.parse(a.spec)       # printable spec round-trips
+    assert (replay.alloc, replay.prefill, replay.poison, replay.clock,
+            replay.slow) == (a.alloc, a.prefill, a.poison, a.clock, a.slow)
+    assert a.alloc and a.prefill and a.poison and a.clock and a.slow
+    assert all(2 <= t <= 64 for t in
+               list(a.poison) + list(a.clock) + list(a.slow))
+
+
+def test_env_fault_plan_precedence(monkeypatch):
+    monkeypatch.delenv("REPRO_FAULTS", raising=False)
+    assert faults.env_fault_plan("") is None
+    assert faults.env_fault_plan("alloc@5").alloc == frozenset({5})
+    monkeypatch.setenv("REPRO_FAULTS", "prefill@2")
+    plan = faults.env_fault_plan("alloc@5")       # env outranks scfg
+    assert plan.prefill == frozenset({2}) and not plan.alloc
+
+
+# ---------------------------------------------------------------------------
+# Numeric quarantine: poisoned logits fail ONE request, the rest are bitwise
+# ---------------------------------------------------------------------------
+
+def test_poison_quarantines_one_request_rest_bitwise():
+    scfg = ServeConfig(max_seq_len=32, batch_size=3, kv_block_size=8,
+                       kv_num_blocks=6, paged_attn="gather",
+                       fault_plan="poison@3:1", audit_interval=1)
+    e, sp = _engine(scfg)
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(1, 64, 8).astype(np.int32) for _ in range(3)]
+    max_new = 8
+    want = _solo_want(sp, prompts, max_new)
+    sched = PriorityScheduler(e)
+    for i, p in enumerate(prompts):
+        sched.submit(Request(rid=i, prompt=p.copy(), max_new=max_new))
+    done = {r.rid: r for r in sched.run()}
+    assert len(done) == 3 and sched.fault_plan.fired["poison"] == 1
+    bad = done[1]                       # poison@3:1 -> active row 1 = slot 1
+    assert bad.status is RequestStatus.FAILED_NUMERIC
+    assert "non-finite" in bad.error and "quarantined" in bad.error
+    assert 0 < len(bad.generated) < max_new      # partial output kept ...
+    np.testing.assert_array_equal(                # ... and a bitwise PREFIX
+        np.asarray(bad.generated), want[1][:len(bad.generated)])
+    for rid in (0, 2):                  # the rest of the batch: untouched
+        assert done[rid].status is RequestStatus.OK
+        np.testing.assert_array_equal(np.asarray(done[rid].generated),
+                                      want[rid])
+    assert sched.stats["quarantined"] == 1
+    assert e.pool.free_count == e.pool.num_blocks    # quarantine freed blocks
+    assert e.pool.live_refs == 0
+
+
+# ---------------------------------------------------------------------------
+# Transient prefill fault: rolled back, retried, fault-free parity
+# ---------------------------------------------------------------------------
+
+def test_prefill_fault_is_transient_and_parity_preserving():
+    scfg = ServeConfig(max_seq_len=32, batch_size=2, kv_block_size=8,
+                       kv_num_blocks=8, paged_attn="gather",
+                       fault_plan="prefill@1", audit_interval=1)
+    e, sp = _engine(scfg)
+    rng = np.random.default_rng(12)
+    prompts = [rng.integers(1, 64, 9).astype(np.int32) for _ in range(2)]
+    want = _solo_want(sp, prompts, 6)
+    sched = PriorityScheduler(e)
+    for i, p in enumerate(prompts):
+        sched.submit(Request(rid=i, prompt=p.copy(), max_new=6))
+    done = {r.rid: r for r in sched.run()}
+    assert sched.fault_plan.fired["prefill"] == 1
+    assert sched.stats["prefill_faults"] == 1
+    for i in range(2):                  # the faulted admission retried clean
+        assert done[i].status is RequestStatus.OK
+        np.testing.assert_array_equal(np.asarray(done[i].generated), want[i])
+    assert e.pool.free_count == e.pool.num_blocks
+    assert e.pool.live_refs == 0
+
+
+# ---------------------------------------------------------------------------
+# Clock faults: jumps expire deadlines, slow ticks trip hopeless shedding
+# ---------------------------------------------------------------------------
+
+def test_clock_jump_times_out_running_request_gracefully():
+    scfg = ServeConfig(max_seq_len=32, batch_size=1,
+                       fault_plan="clock+100@3", audit_interval=1)
+    e, _ = _engine(scfg)
+    sched = PriorityScheduler(e, clock=TickClock(0.01))
+    sched.submit(Request(rid=0, prompt=np.arange(1, 5, dtype=np.int32),
+                         max_new=25, deadline_s=50.0))
+    done = sched.run()                  # must terminate, not raise or hang
+    assert len(done) == 1 and done[0].status is RequestStatus.TIMEOUT
+    assert "deadline exceeded" in done[0].error
+    assert 0 < len(done[0].generated) < 25       # partial output preserved
+    assert sched.fault_plan.fired["clock"] == 1
+    assert sched.stats["timeouts"] == 1
+
+
+def test_slow_tick_inflates_ema_and_sheds_hopeless_deadline():
+    scfg = ServeConfig(max_seq_len=32, batch_size=1,
+                       fault_plan="slow+40@1", audit_interval=1)
+    e, _ = _engine(scfg)
+    sched = PriorityScheduler(e, clock=TickClock(0.01))
+    sched.submit(Request(rid=0, prompt=np.arange(1, 5, dtype=np.int32),
+                         max_new=2))
+    finished: list = []
+    while not sched.idle:
+        sched.tick(finished)
+    assert finished[0].status is RequestStatus.OK
+    assert sched.fault_plan.fired["slow"] == 1
+    assert sched._tick_ema is not None and sched._tick_ema > 10.0
+    # the contended-host EMA now says a 5s deadline cannot land a token
+    sched.submit(Request(rid=1, prompt=np.arange(1, 5, dtype=np.int32),
+                         max_new=2, deadline_s=5.0))
+    sched.tick(finished)
+    assert finished[-1].rid == 1
+    assert finished[-1].status is RequestStatus.TIMEOUT
+    assert "hopeless" in finished[-1].error
+    assert sched.stats["shed"] == 1
+
+
+# ---------------------------------------------------------------------------
+# The auditor: catches deliberate corruption, names the invariant, and is
+# quiet again once the corruption is repaired
+# ---------------------------------------------------------------------------
+
+def test_auditor_catches_corruptions_and_names_invariants():
+    scfg = ServeConfig(max_seq_len=32, batch_size=2, kv_block_size=8,
+                       kv_num_blocks=6, paged_attn="gather")
+    e, _ = _engine(scfg)
+    sched = PriorityScheduler(e)
+    sched.submit(Request(rid=0, prompt=np.arange(1, 9, dtype=np.int32),
+                         max_new=4))
+    done = sched.run()
+    assert done[0].status is RequestStatus.OK
+    audit.audit_scheduler(sched)        # healthy post-run state: silent
+
+    def expect(invariant):
+        with pytest.raises(audit.AuditError) as ei:
+            audit.audit_scheduler(sched)
+        assert ei.value.invariant == invariant
+        assert "state dump" in str(ei.value) and ei.value.state
+        return ei.value
+
+    # I4: refcount>0 for a block sitting on the free list
+    bid = e.pool._free[0]
+    e.pool._ref[bid] += 1
+    expect("I4")
+    e.pool._ref[bid] -= 1
+    # I1: a slot claims a reference the pool never granted
+    e._slot_blocks[0].append(bid)
+    expect("I1")
+    e._slot_blocks[0].pop()
+    # I3: hash registry bijection broken (warm block re-pointed)
+    warm_bid = next(iter(e.pool._warm))
+    h = e.pool._bid_to_hash[warm_bid]
+    e.pool._bid_to_hash[warm_bid] = b"\x00" * len(h)
+    expect("I3")
+    e.pool._bid_to_hash[warm_bid] = h
+    # I6: host position mirror drifts from the device cache
+    sched._pos[0] += 1
+    expect("I6")
+    sched._pos[0] -= 1
+    # I7: a terminal request still scheduled
+    sched.queue.append(done[0])
+    expect("I7")
+    sched.queue.clear()
+    audit.audit_scheduler(sched)        # every repair verified: silent again
+
+
+# ---------------------------------------------------------------------------
+# Seeded chaos soak (compact; the full randomized soak is `bench --only
+# chaos`): every seam fires, every request terminal, OK parity bitwise
+# ---------------------------------------------------------------------------
+
+def test_chaos_soak_all_seams_terminal_and_parity():
+    spec = "alloc@4,prefill@2,poison@6:1,clock+0.6@9,slow+0.8@5"
+    scfg = ServeConfig(max_seq_len=32, batch_size=3, kv_block_size=8,
+                       kv_num_blocks=9, prefill_chunk=8, paged_attn="gather",
+                       overcommit=1.5, max_prefill_tokens_per_tick=16,
+                       fault_plan=spec, audit_interval=1)
+    e, sp = _engine(scfg)
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(1, 64, 9).astype(np.int32) for _ in range(5)]
+    max_new = 12
+    want = _solo_want(sp, prompts, max_new, prefill_chunk=8)
+    sched = PriorityScheduler(e)
+    for i, p in enumerate(prompts):
+        sched.submit(Request(rid=i, prompt=p.copy(), max_new=max_new,
+                             priority=i % 3,
+                             deadline_s=300.0 if i == 0 else None))
+    done = {r.rid: r for r in sched.run()}     # no wedge: run() returned
+    assert sorted(done) == [0, 1, 2, 3, 4]     # every request terminal
+    fired = sched.fault_plan.fired
+    assert fired["prefill"] == 1               # the seams actually fired
+    assert fired["alloc"] + fired["poison"] + fired["clock"] \
+        + fired["slow"] >= 2
+    quarantined = [r for r in done.values()
+                   if r.status is RequestStatus.FAILED_NUMERIC]
+    assert len(quarantined) == fired["poison"] <= 1
+    for r in done.values():
+        assert r.status in (RequestStatus.OK, RequestStatus.FAILED_NUMERIC)
+        if r.status is RequestStatus.OK:       # bitwise vs fault-free solo
+            assert len(r.generated) == max_new
+            np.testing.assert_array_equal(np.asarray(r.generated),
+                                          want[r.rid])
+        else:                                  # quarantine: bitwise PREFIX
+            np.testing.assert_array_equal(
+                np.asarray(r.generated), want[r.rid][:len(r.generated)])
+    assert e.pool.free_count == e.pool.num_blocks    # zero leaks under chaos
+    assert e.pool.live_refs == 0
+    audit.audit_scheduler(sched)
+
+
+# ---------------------------------------------------------------------------
+# Crash-safe snapshot/restore: bitwise-continuous resume on a fresh engine
+# ---------------------------------------------------------------------------
+
+def test_snapshot_restore_resumes_inflight_bitwise():
+    scfg = ServeConfig(max_seq_len=32, batch_size=3, kv_block_size=8,
+                       kv_num_blocks=12, paged_attn="gather",
+                       audit_interval=1)
+    e, sp = _engine(scfg)
+    rng = np.random.default_rng(14)
+    prompts = [rng.integers(1, 64, 9).astype(np.int32) for _ in range(3)]
+    max_new = 20
+    want = _solo_want(sp, prompts, max_new)
+    sched = PriorityScheduler(e)
+    for i, p in enumerate(prompts):
+        sched.submit(Request(rid=i, prompt=p.copy(), max_new=max_new))
+    finished: list = []
+    for _ in range(5):                  # mid-serve: everyone inflight
+        sched.tick(finished)
+    assert not finished and all(s is not None for s in sched.slots)
+    progress = {r.rid: len(r.generated) for r in sched.slots}
+    assert all(0 < n < max_new for n in progress.values())
+    snap = sched.snapshot()
+    assert len(snap["inflight"]) == 3 and not snap["queue"]
+    assert len(snap["registered"]) == 3        # one full prompt block each
+    assert snap["kv"]                          # ... with device KV exported
+
+    # "crash": the old engine/scheduler are simply abandoned.  A fresh
+    # engine (same params/config — the fingerprint) restores the snapshot.
+    e2 = Engine(CFG, sp, scfg)
+    sched2 = PriorityScheduler(e2)
+    sched2.submit(Request(rid=9, prompt=np.arange(1, 5, dtype=np.int32),
+                          max_new=2))
+    with pytest.raises(RuntimeError, match="idle"):
+        sched2.restore(snap)                   # guard: restore is boot-time
+    sched2.queue.clear()
+    with pytest.raises(ValueError, match="fingerprint"):
+        sched2.restore({**snap, "fingerprint": ("other-model", 32, 3, None)})
+    sched2.restore(snap)
+    assert sched2.stats["restored"] == 3
+    done = {r.rid: r for r in sched2.run()}
+    assert sorted(done) == [0, 1, 2]
+    for rid, r in done.items():
+        assert r.status is RequestStatus.OK
+        assert len(r.generated) == max_new
+        # the resumed stream continues bitwise where the crash cut it
+        np.testing.assert_array_equal(np.asarray(r.generated), want[rid])
+    # resume was tail-only: every request's full prompt block warm-hit
+    # instead of re-prefilling (8 tokens x 3 requests)
+    assert e2.pool.stats["hit_tokens"] == 24
+    assert e2.pool.stats["warm_hit_blocks"] == 3
+    assert e2.pool.free_count == e2.pool.num_blocks
+    assert e2.pool.live_refs == 0
+    audit.audit_scheduler(sched2)
+
+
+def test_snapshot_restore_dense_engine_full_reprefill():
+    """Non-paged engines snapshot too — no block KV to export, so resume
+    is a full re-prefill of prompt+generated: slower, same tokens."""
+    scfg = ServeConfig(max_seq_len=32, batch_size=2, audit_interval=1)
+    e, sp = _engine(scfg)
+    rng = np.random.default_rng(15)
+    prompts = [rng.integers(1, 64, n).astype(np.int32) for n in (6, 7)]
+    max_new = 12
+    want = _solo_want(sp, prompts, max_new)
+    sched = PriorityScheduler(e)
+    for i, p in enumerate(prompts):
+        sched.submit(Request(rid=i, prompt=p.copy(), max_new=max_new))
+    finished: list = []
+    for _ in range(3):
+        sched.tick(finished)
+    assert not finished
+    snap = sched.snapshot()
+    assert len(snap["inflight"]) == 2 and "registered" not in snap
+    e2 = Engine(CFG, sp, scfg)
+    sched2 = PriorityScheduler(e2)
+    sched2.restore(snap)
+    done = {r.rid: r for r in sched2.run()}
+    assert sched2.stats["restored"] == 2
+    for rid in (0, 1):
+        assert done[rid].status is RequestStatus.OK
+        np.testing.assert_array_equal(np.asarray(done[rid].generated),
+                                      want[rid])

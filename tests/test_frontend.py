@@ -298,6 +298,86 @@ def test_pinning_after_max_preemptions_completes():
 
 
 # ---------------------------------------------------------------------------
+# Evict-cost-aware victim ranking (ISSUE-7 satellite)
+# ---------------------------------------------------------------------------
+
+def test_victim_key_protects_invested_work():
+    """At equal lane and deadline, the victim (max key wins) is the request
+    with the FEWEST generated tokens — every generated token is re-prefill
+    cost at re-admission, so a long-running request outranks a fresh one.
+    Lane and deadline still dominate the cost term."""
+    e, _ = _engine(ServeConfig(max_seq_len=32, batch_size=1))
+    sched = PriorityScheduler(e)
+    now = 0.0                            # no queue wait: lanes == priorities
+
+    def req(rid, gen, priority=1, deadline_s=None):
+        r = Request(rid=rid, prompt=np.ones(4, np.int32), max_new=30,
+                    priority=priority, deadline_s=deadline_s, arrival=0.0)
+        r.generated = [1] * gen
+        return r
+
+    old, fresh = req(0, gen=10), req(1, gen=1)
+    assert sched._victim_key(fresh, now) > sched._victim_key(old, now)
+    # deadline outranks invested work: the further deadline is evicted even
+    # though it is the more expensive re-prefill
+    far = req(2, gen=10, deadline_s=100.0)
+    near = req(3, gen=0, deadline_s=50.0)
+    assert sched._victim_key(far, now) > sched._victim_key(near, now)
+    # lane outranks both
+    low = req(4, gen=20, priority=2)
+    assert sched._victim_key(low, now) > sched._victim_key(fresh, now)
+
+
+# ---------------------------------------------------------------------------
+# Prefill-token budget: giant prompts span ticks without stalling decode
+# (ISSUE-7 satellite; fake-clock regression)
+# ---------------------------------------------------------------------------
+
+def test_prefill_budget_spans_ticks_without_stalling_decode():
+    """With ``max_prefill_tokens_per_tick=8``, a 32-token prompt becomes a
+    4-tick resumable prefill job — and an already-running request keeps
+    decoding exactly one token per tick throughout (the lane-0 latency the
+    budget exists to protect), with bitwise parity for both."""
+    scfg = ServeConfig(max_seq_len=64, batch_size=2, kv_block_size=8,
+                       kv_num_blocks=12, prefill_chunk=8, paged_attn="gather",
+                       max_prefill_tokens_per_tick=8, audit_interval=1)
+    e, sp = _engine(scfg)
+    sched = PriorityScheduler(e, clock=TickClock(0.0))
+    rng = np.random.default_rng(21)
+    short = rng.integers(1, 64, 4).astype(np.int32)
+    giant = rng.integers(1, 64, 32).astype(np.int32)
+    a = Request(rid=0, prompt=short, max_new=8)
+    b = Request(rid=1, prompt=giant, max_new=4)
+    finished: list = []
+    sched.submit(a)
+    sched.tick(finished)                 # 4-token prompt fits the budget
+    assert len(a.generated) == 2         # prefill token + one decode
+    sched.submit(b)
+    for expect_a in (3, 4, 5, 6):        # the giant spans ticks 2..5
+        sched.tick(finished)
+        assert len(a.generated) == expect_a      # decode NEVER stalled
+        if expect_a < 6:
+            assert list(sched._prefilling) == [1]    # job parked on slot 1
+    assert not sched._prefilling         # 32 = 4 ticks x 8-token budget
+    assert len(b.generated) == 2         # went live on tick 5 + one decode
+    while not sched.idle:
+        sched.tick(finished)
+    done = {r.rid: r for r in finished}
+    assert done[0].status is RequestStatus.OK
+    assert done[1].status is RequestStatus.OK
+    assert sched.stats["preemptions"] == 0
+    ref = Engine(CFG, sp, ServeConfig(max_seq_len=64, batch_size=1,
+                                      prefill_chunk=8))
+    for r in (a, b):
+        ref.reset()
+        want = ref.generate(np.asarray(r.prompt)[None, :], r.max_new)[0]
+        np.testing.assert_array_equal(np.asarray(r.generated),
+                                      np.asarray(want))
+    assert e.pool.free_count == e.pool.num_blocks
+    assert e.pool.live_refs == 0
+
+
+# ---------------------------------------------------------------------------
 # AsyncFrontend: streaming, drain, serve loop (wait_for-guarded)
 # ---------------------------------------------------------------------------
 

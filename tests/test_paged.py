@@ -337,6 +337,78 @@ def test_shared_prefix_admission_skips_prefill_compute():
 
 
 # ---------------------------------------------------------------------------
+# Warm-list edge cases under faults (ISSUE-7 satellite; auditor-verified)
+# ---------------------------------------------------------------------------
+
+def test_warm_revival_after_partial_lru_reclaim_stays_consistent():
+    """Reclaim-under-pressure cannibalizes only the OLDEST warm blocks;
+    the surviving prefix chain must still revive, and the pool must pass
+    a full invariant audit at every step of the churn."""
+    from repro.serve import audit
+    pool = paging.BlockPool(4, 2)
+    toks = np.arange(8, dtype=np.int32)
+    hashes = paging.block_hashes(toks, 2)
+    b0, b1, b2 = pool.alloc(3)
+    for b, h in zip((b0, b1, b2), hashes):
+        pool.register(b, h)
+    audit.audit_pool(pool, [[b0, b1, b2]])
+    # free NEWEST-first so the LRU (oldest-freed) victims are the chain
+    # TAIL — a partial reclaim must leave the chain HEAD matchable
+    pool.free(b2), pool.free(b1), pool.free(b0)
+    audit.audit_pool(pool, [])
+    got = pool.alloc(2)                     # 1 free block + reclaims b2
+    assert pool.stats["warm_reclaims"] == 1
+    assert b2 in got and b0 not in got and b1 not in got
+    audit.audit_pool(pool, [got])
+    hits = pool.take_prefix(hashes)         # revival across the reclaim
+    assert hits == [b0, b1]                 # surviving prefix, chain intact
+    assert pool.stats["warm_hit_blocks"] == 2
+    audit.audit_pool(pool, [got, hits])
+    for b in got + hits:
+        pool.free(b)
+    audit.audit_pool(pool, [])
+    assert pool.free_count == pool.num_blocks
+
+
+def test_alloc_fault_during_cow_divergence_keeps_pool_consistent():
+    """An injected allocator failure at the exact COW-divergence alloc
+    (re-computing the final token of an exact-block-multiple shared
+    prompt) must roll the admission back with refcounts and the hash
+    registry consistent — proven by the auditor running EVERY tick —
+    then succeed on the retry with bitwise token parity."""
+    from repro.serve import audit
+    from repro.serve.frontend import PriorityScheduler
+    scfg = ServeConfig(max_seq_len=32, batch_size=2, kv_block_size=8,
+                       kv_num_blocks=8, paged_attn="gather",
+                       fault_plan="alloc@2", audit_interval=1)
+    e, sp = _engine(scfg)
+    rng = np.random.default_rng(23)
+    prompt = rng.integers(1, 64, 16).astype(np.int32)   # 2 full blocks
+    sched = PriorityScheduler(e)
+    # same prompt twice: rid 1's admission take_prefix-hits rid 0's
+    # resident blocks (ref 2) and must COW the last one — alloc call #1
+    # is rid 0's admission, call #2 is exactly that COW copy
+    for rid in (0, 1):
+        sched.submit(Request(rid=rid, prompt=prompt.copy(), max_new=8))
+    done = {r.rid: r for r in sched.run()}
+    assert len(done) == 2
+    assert e.pool.stats["faults_injected"] == 1
+    assert sched.fault_plan.fired["alloc"] == 1
+    assert e.pool.stats["cow_copies"] >= 1              # the retry did COW
+    assert e.pool.stats["hit_tokens"] >= 16             # ... after a re-hit
+    for rid in (0, 1):                      # same prompt -> same greedy toks
+        assert not done[rid].error and len(done[rid].generated) == 8
+    assert done[0].generated == done[1].generated
+    ref = Engine(CFG, sp, ServeConfig(max_seq_len=32, batch_size=1))
+    want = ref.generate(prompt[None, :], 8)[0]
+    np.testing.assert_array_equal(np.asarray(done[0].generated),
+                                  np.asarray(want))
+    assert e.pool.free_count == e.pool.num_blocks       # nothing leaked
+    assert e.pool.live_refs == 0
+    audit.audit_scheduler(sched)
+
+
+# ---------------------------------------------------------------------------
 # Paged parity beyond the serve config: ring buffers, MLA, hybrid SSM
 # ---------------------------------------------------------------------------
 
