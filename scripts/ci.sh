@@ -50,6 +50,12 @@ fi
 # ${arr[@]+...} guard: expanding an empty array trips `set -u` on bash < 4.4
 python -m pytest -x -q ${MARKER[@]+"${MARKER[@]}"}
 
+# Static invariant gate (both tiers): tile/VMEM budgets over the whole
+# config zoo, host/device boundary hygiene, quantized dtype flow, env-doc
+# drift.  Fails on any finding not justified in reprolint_baseline.json.
+echo "== reprolint: python -m repro.analysis --fail-on-findings =="
+python -m repro.analysis --fail-on-findings
+
 # Rerun the serve-plane suites with the invariant auditor on EVERY tick:
 # a green pass here proves the allocator/table/position books stay
 # consistent at each step of every covered scenario, not just at the

@@ -1,0 +1,144 @@
+"""reprolint — static invariant checker for the RSR serve stack.
+
+The paper's win rests on contracts the runtime only checks after the fact,
+if ever: packed code words must stay exact integer streams end-to-end (one
+silent float cast destroys the ~1.6 bits/weight base-3 encoding), Pallas
+tile choices must fit VMEM and TPU lane/sublane alignment for every config
+in the zoo, and scheduler state (block tables, refcounts, the position
+mirror) must stay host-side ``np``/int — the PR-7 auditor catches the last
+family only per tick, at runtime, after the corruption happened.  This
+package proves those contracts over the whole tree **before any TPU
+compile**:
+
+    python -m repro.analysis                  # report all findings
+    python -m repro.analysis --fail-on-findings   # CI gate (exit 1 on new)
+    repro-lint --checks tiles,envdocs         # console entry point
+
+Checkers and finding codes
+--------------------------
+``tiles`` (:mod:`repro.analysis.tiles`) — evaluates ``AUTOTUNE_TABLE`` /
+``TUNED_TILES`` (kernels/dispatch.py), ``PAGED_ATTN_TILES`` /
+``TUNED_ATTN_TILES`` (kernels/paged_attention.py) and the
+autotune_cache.json overlay against every config in ``repro.configs``
+under the per-hardware VMEM model in ``roofline/hw.py``:
+
+* **RL101** vmem-overflow — a kernel launch's working set (double-buffered
+  operand tiles + scratch + resident intermediates) exceeds
+  ``hw.VMEM_KERNEL_BUDGET``.
+* **RL102** tile-misaligned — a post-clamp tile violates TPU tiling (last
+  dim % ``hw.VMEM_LANE``, penultimate % sublane for the dtype, packed-word
+  divisibility) for some zoo shape.
+* **RL103** shape-uncovered — a row-count / chunk size the serve engine
+  can produce has no covering regime entry in the static tables.
+* **RL104** invalid-overlay-entry — an autotune_cache.json entry fails
+  validation (``dispatch.validate_autotune_payload``; the loader raises
+  ``AutotuneCacheError`` at runtime, the linter reports it statically).
+
+``boundaries`` (:mod:`repro.analysis.boundaries`) — AST pass over the
+host/device split:
+
+* **RL201** traced-into-host-state — a ``serve/`` assignment stores a
+  ``jnp``/traced value into declared host state (BlockPool internals, the
+  host block tables, the scheduler position mirror) without a
+  ``jax.device_get``/``np.asarray``/``int`` materialization boundary.
+* **RL202** jnp-math-on-host-state — ``jnp`` compute (not a mere
+  host→device conversion) applied directly to declared host state: a
+  silent device round-trip on the scheduler tick path.
+* **RL203** host-op-in-traced-fn — ``np.`` calls, prints, file/env/clock
+  access, ``jax.device_get`` or ``.block_until_ready()`` inside a jitted
+  function, a Pallas kernel body, or anything statically reachable from
+  the declared trace roots (``contracts.TRACE_ROOTS``) in ``kernels/`` and
+  ``models/``.
+
+``dtypeflow`` (:mod:`repro.analysis.dtypeflow`) — taint pass over the
+packed-code path (``core/preprocess.pack_code_words`` →
+``kernels/dispatch`` → ``rsr_onehot``):
+
+* **RL301** code-word-float-cast — a value carrying code words (taint
+  seeded from the ``codes``/``packed``/``words`` lexicon, dict keys, and
+  the pack/unpack helpers; comparisons break taint, so one-hot builds are
+  clean) is cast or coerced to a float dtype.
+* **RL302** scale-dtype-drift — a dequant ``scale``/``gamma`` value is
+  cast to a non-f32 float (absmean γ must stay exact f32 into the kernel
+  epilogue).
+
+``envdocs`` (:mod:`repro.analysis.envdocs`) — the ``REPRO_*`` registry:
+
+* **RL401** env-read-undocumented — an env var read anywhere in ``src/``
+  (including reads through module-level name constants) missing from the
+  ``serve/__init__.py`` env table.
+* **RL402** env-doc-stale — a table row documenting a variable nothing
+  reads.
+
+Suppression baseline
+--------------------
+``reprolint_baseline.json`` at the repo root is the committed list of
+*accepted* findings — each entry is ``{"key", "justification"}`` where
+``key`` is the finding's stable fingerprint (``CODE:path:symbol``, no line
+numbers, printed with every finding) and ``justification`` is a mandatory
+one-liner saying why the finding is intentional.  ``--write-baseline``
+regenerates the file from the current findings (justifications for
+already-known keys are preserved).  The CI gate fails on any finding not
+in the baseline AND warns on stale baseline entries, so the file can only
+shrink or be consciously grown.
+
+Extending with a new checker
+----------------------------
+1. Add ``repro/analysis/<name>.py`` exposing
+   ``check(root: str) -> list[Finding]`` (use :class:`findings.Finding`;
+   pick an unused RLxxx range and keep ``symbol`` stable across line
+   moves — it is the baseline fingerprint).
+2. Register it in ``CHECKERS`` below and document its codes in this
+   docstring.
+3. Add a seeded-violation fixture to ``tests/test_analysis.py`` proving
+   the checker fires, and a clean-tree assertion proving it stays quiet.
+Shared contract declarations (host-state attribute names, trace roots,
+the code-word lexicon, the canonical serve geometry the tile checker
+probes) live in :mod:`repro.analysis.contracts`.
+"""
+from __future__ import annotations
+
+from repro.analysis.findings import Finding, load_baseline, split_findings
+
+__all__ = ["Finding", "CHECKERS", "run_checks", "load_baseline",
+           "split_findings"]
+
+
+def _check_tiles(root: str):
+    from repro.analysis.tiles import check
+    return check(root)
+
+
+def _check_boundaries(root: str):
+    from repro.analysis.boundaries import check
+    return check(root)
+
+
+def _check_dtypeflow(root: str):
+    from repro.analysis.dtypeflow import check
+    return check(root)
+
+
+def _check_envdocs(root: str):
+    from repro.analysis.envdocs import check
+    return check(root)
+
+
+#: name -> callable(root) -> list[Finding]; ordered as reported.
+CHECKERS = {
+    "tiles": _check_tiles,
+    "boundaries": _check_boundaries,
+    "dtypeflow": _check_dtypeflow,
+    "envdocs": _check_envdocs,
+}
+
+
+def run_checks(root: str, names=None) -> list:
+    """Run the named checkers (default: all) over the tree at ``root``."""
+    out = []
+    for name in (names or CHECKERS):
+        if name not in CHECKERS:
+            raise KeyError(f"unknown checker {name!r}; have "
+                           f"{sorted(CHECKERS)}")
+        out.extend(CHECKERS[name](root))
+    return out

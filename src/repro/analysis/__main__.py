@@ -1,0 +1,66 @@
+"""``python -m repro.analysis`` / ``repro-lint`` — the reprolint CLI.
+
+Exit status: 0 unless ``--fail-on-findings`` is given and at least one
+finding is NOT in the suppression baseline.  See the package docstring
+for the finding codes and the baseline format.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from repro.analysis import CHECKERS, run_checks
+from repro.analysis.findings import (default_baseline_path, format_report,
+                                     load_baseline, save_baseline,
+                                     split_findings)
+
+
+def _repo_root() -> str:
+    """Default tree to lint: the repo containing this package (src/../..)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="static invariant checker for the RSR serve stack")
+    ap.add_argument("--root", default=_repo_root(),
+                    help="tree to lint (default: this checkout)")
+    ap.add_argument("--baseline", default=None,
+                    help="suppression baseline path (default: "
+                         "$REPRO_ANALYSIS_BASELINE or "
+                         "<root>/reprolint_baseline.json)")
+    ap.add_argument("--checks", default=None, metavar="A,B",
+                    help=f"comma-separated subset of {sorted(CHECKERS)}")
+    ap.add_argument("--fail-on-findings", action="store_true",
+                    help="exit 1 if any non-baselined finding fires")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline from current findings "
+                         "(existing justifications kept; new entries get a "
+                         "TODO marker the loader rejects)")
+    args = ap.parse_args(argv)
+
+    root = os.path.abspath(args.root)
+    names = [n.strip() for n in args.checks.split(",")] if args.checks else None
+    baseline_path = args.baseline or default_baseline_path(root)
+
+    findings = run_checks(root, names)
+
+    if args.write_baseline:
+        previous = (load_baseline(baseline_path)
+                    if os.path.exists(baseline_path) else {})
+        save_baseline(baseline_path, findings, previous)
+        print(f"reprolint: wrote {len(findings)} suppression(s) to "
+              f"{baseline_path}")
+        return 0
+
+    baseline = load_baseline(baseline_path)
+    new, suppressed, stale = split_findings(findings, baseline)
+    print(format_report(new, suppressed, stale))
+    return 1 if (args.fail_on_findings and new) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,272 @@
+"""RL2xx — host/device boundary checker (pure AST, nothing imported).
+
+Two directions:
+
+* serve plane (``contracts.SERVE_DIRS``): host scheduler/allocator state
+  (``contracts.HOST_STATE_ATTRS``) must stay plain Python/NumPy.  RL201
+  fires when a traced (``jnp.``) value is stored into host state without
+  crossing the boundary through a wrapper (``jax.device_get`` /
+  ``np.asarray`` / ``int`` / ...); RL202 fires when a ``jnp`` compute op
+  (anything outside ``contracts.JNP_CONVERTERS``) consumes host state
+  directly — each device round-trip there is a hidden sync in the
+  scheduler hot path.
+
+* traced plane (``contracts.TRACED_DIRS``): functions reachable from a
+  trace root (``@jax.jit``, a Pallas kernel body, or a declared
+  ``contracts.TRACE_ROOTS`` entry) must not perform host work.  RL203
+  fires on ``np.`` calls, ``os.environ`` reads, ``open``/``print`` —
+  side effects that run once at trace time and are silently frozen into
+  the compiled artifact.
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+from repro.analysis import contracts
+from repro.analysis.findings import Finding
+
+__all__ = ["check", "check_serve_source", "check_traced_tree"]
+
+
+def _py_files(root: str, rel_dirs) -> list[str]:
+    out = []
+    for rel in rel_dirs:
+        base = os.path.join(root, rel)
+        for dirpath, _, names in os.walk(base):
+            for n in sorted(names):
+                if n.endswith(".py"):
+                    out.append(os.path.join(dirpath, n))
+    return sorted(out)
+
+
+def _rel(root: str, path: str) -> str:
+    return os.path.relpath(path, root).replace(os.sep, "/")
+
+
+# ---------------------------------------------------------------------------
+# serve plane: RL201 / RL202
+# ---------------------------------------------------------------------------
+
+def _call_name(node: ast.Call) -> str:
+    f = node.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return ""
+
+
+def _is_jnp_call(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and isinstance(node.func.value, ast.Name)
+            and node.func.value.id == "jnp")
+
+
+def _host_attr(node: ast.AST) -> str | None:
+    """Name of the host-state attribute this expression roots in, if any
+    (``self._tables``, ``self._tables[slot]``, ``pool._free`` ...)."""
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    if (isinstance(node, ast.Attribute)
+            and node.attr in contracts.HOST_STATE_ATTRS):
+        return node.attr
+    return None
+
+
+def _unshielded_jnp(expr: ast.AST) -> ast.Call | None:
+    """First ``jnp.`` call in ``expr`` not nested under a boundary wrapper."""
+
+    def visit(node, shielded):
+        if isinstance(node, ast.Call):
+            if _is_jnp_call(node) and not shielded:
+                return node
+            child_shield = (shielded
+                            or _call_name(node) in contracts.BOUNDARY_WRAPPERS)
+            for c in ast.iter_child_nodes(node):
+                hit = visit(c, child_shield)
+                if hit is not None:
+                    return hit
+            return None
+        for c in ast.iter_child_nodes(node):
+            hit = visit(c, shielded)
+            if hit is not None:
+                return hit
+        return None
+
+    return visit(expr, False)
+
+
+def check_serve_source(rel_path: str, source: str) -> list[Finding]:
+    findings = []
+    tree = ast.parse(source)
+    for node in ast.walk(tree):
+        # RL201: traced value assigned into host state
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            value = node.value
+            if value is None:
+                continue
+            attrs = [a for a in (_host_attr(t) for t in targets) if a]
+            if attrs:
+                hit = _unshielded_jnp(value)
+                if hit is not None:
+                    findings.append(Finding(
+                        "RL201", rel_path, attrs[0],
+                        f"traced value (jnp.{hit.func.attr}) stored into "
+                        f"host state .{attrs[0]} — host scheduler state "
+                        f"must stay NumPy/Python (wrap with jax.device_get "
+                        f"/ np.asarray to cross the boundary)",
+                        line=node.lineno))
+        # RL202: jnp compute op consuming host state
+        if (_is_jnp_call(node)
+                and node.func.attr not in contracts.JNP_CONVERTERS):
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                for sub in ast.walk(arg):
+                    a = _host_attr(sub)
+                    if a:
+                        findings.append(Finding(
+                            "RL202", rel_path, f"{a}:jnp.{node.func.attr}",
+                            f"jnp.{node.func.attr} applied to host state "
+                            f".{a} — implicit host->device transfer in the "
+                            f"scheduler path; compute on host (np) or "
+                            f"convert explicitly first",
+                            line=node.lineno))
+                        break
+                else:
+                    continue
+                break
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# traced plane: RL203
+# ---------------------------------------------------------------------------
+
+def _is_jit_decorated(fn: ast.FunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        names = {n.attr if isinstance(n, ast.Attribute) else getattr(n, "id", "")
+                 for n in ast.walk(dec) if isinstance(n, (ast.Attribute, ast.Name))}
+        if "jit" in names:
+            return True
+    return False
+
+
+def _pallas_bodies(tree: ast.Module) -> set[str]:
+    """Function names handed to ``pl.pallas_call`` — directly or through a
+    ``functools.partial(fn, ...)`` bound to a local name first."""
+    partial_alias: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Assign) and isinstance(node.value, ast.Call)
+                and _call_name(node.value) == "partial" and node.value.args
+                and isinstance(node.value.args[0], ast.Name)):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    partial_alias[t.id] = node.value.args[0].id
+    bodies: set[str] = set()
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call) and _call_name(node) == "pallas_call"
+                and node.args and isinstance(node.args[0], ast.Name)):
+            name = node.args[0].id
+            bodies.add(partial_alias.get(name, name))
+    return bodies
+
+
+def _called_names(fn: ast.FunctionDef) -> set[str]:
+    out = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            n = _call_name(node)
+            if n:
+                out.add(n)
+    return out
+
+
+def _host_ops_in(fn: ast.FunctionDef, rel_path: str, via: str
+                 ) -> list[Finding]:
+    findings = []
+    for node in ast.walk(fn):
+        what = None
+        if isinstance(node, ast.Call):
+            f = node.func
+            if (isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name)
+                    and f.value.id == "np"):
+                what = f"np.{f.attr} call"
+            elif isinstance(f, ast.Name) and f.id in ("open", "print", "input"):
+                what = f"{f.id}() call"
+            elif isinstance(f, ast.Attribute) and f.attr in (
+                    "device_get", "block_until_ready"):
+                what = f"{f.attr} sync"
+            elif (isinstance(f, ast.Attribute)
+                  and isinstance(f.value, ast.Name) and f.value.id == "time"
+                  and f.attr in ("time", "perf_counter", "monotonic")):
+                what = f"time.{f.attr} read"
+        elif (isinstance(node, ast.Attribute) and node.attr == "environ"
+              and isinstance(node.value, ast.Name) and node.value.id == "os"):
+            what = "os.environ read"
+        elif isinstance(node, ast.Call) and _call_name(node) == "getenv":
+            what = "os.getenv read"
+        if what:
+            findings.append(Finding(
+                "RL203", rel_path, f"{fn.name}:{what.split()[0]}",
+                f"{what} inside traced function {fn.name} (reached via "
+                f"{via}) — runs once at trace time and is frozen into the "
+                f"compiled artifact",
+                line=node.lineno))
+    return findings
+
+
+def check_traced_tree(files: dict[str, str]) -> list[Finding]:
+    """RL203 over {rel_path: source}: seed trace roots, BFS the intra-set
+    call graph by simple name, flag host ops in every reachable function."""
+    fns: dict[str, list[tuple[str, ast.FunctionDef]]] = {}
+    seeds: dict[str, str] = {}           # fn name -> why it is a root
+    calls: dict[str, set[str]] = {}
+    for rel_path, source in files.items():
+        tree = ast.parse(source)
+        pallas = _pallas_bodies(tree)
+        declared = contracts.TRACE_ROOTS.get(rel_path, frozenset())
+        for node in ast.walk(tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            fns.setdefault(node.name, []).append((rel_path, node))
+            calls[node.name] = calls.get(node.name, set()) | _called_names(node)
+            if node.name in pallas:
+                seeds.setdefault(node.name, "pallas_call body")
+            elif _is_jit_decorated(node):
+                seeds.setdefault(node.name, "@jit")
+            elif node.name in declared:
+                seeds.setdefault(node.name, "declared trace root")
+    # deterministic breadth-first closure (stable shortest "via" chains)
+    via: dict[str, str] = dict(sorted(seeds.items()))
+    frontier = sorted(seeds)
+    while frontier:
+        name = frontier.pop(0)
+        for callee in sorted(calls.get(name, ())):
+            if callee in fns and callee not in via:
+                via[callee] = f"{via[name]} -> {name}"
+                frontier.append(callee)
+    findings = []
+    seen = set()
+    for name, why in sorted(via.items()):
+        for rel_path, fn in fns[name]:
+            for f in _host_ops_in(fn, rel_path, why):
+                if f.key not in seen:
+                    seen.add(f.key)
+                    findings.append(f)
+    return findings
+
+
+def check(root: str) -> list[Finding]:
+    findings = []
+    for path in _py_files(root, contracts.SERVE_DIRS):
+        with open(path) as f:
+            findings.extend(check_serve_source(_rel(root, path), f.read()))
+    traced = {}
+    for path in _py_files(root, contracts.TRACED_DIRS):
+        with open(path) as f:
+            traced[_rel(root, path)] = f.read()
+    findings.extend(check_traced_tree(traced))
+    return findings

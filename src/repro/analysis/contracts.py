@@ -1,0 +1,104 @@
+"""Declared contracts the reprolint checkers enforce.
+
+This is the one place the analysis encodes repo knowledge that is not
+recoverable from the AST alone: which attributes are host-side scheduler
+state, which functions are trace roots, which identifiers carry packed
+code words, and the canonical serve geometry the tile checker probes the
+config zoo under.  Growing the serve plane?  Extend these sets — the
+checkers themselves never need to change.
+"""
+from __future__ import annotations
+
+# --- host/device boundary (repro.serve) ------------------------------------
+
+#: Attribute names that are host-side scheduler/allocator state by contract:
+#: plain Python/NumPy, never traced.  BlockPool internals (paging.py), the
+#: Engine's host block-table mirror, and the scheduler position mirror.
+HOST_STATE_ATTRS = frozenset({
+    # BlockPool (serve/paging.py)
+    "_free", "_ref", "_hash_to_bid", "_bid_to_hash", "_warm",
+    # Engine host block tables (serve/engine.py)
+    "_tables",
+    # scheduler position mirror (serve/engine.py / serve/frontend.py)
+    "_pos",
+})
+
+#: Call names that legitimately carry a value across the host/device
+#: boundary: a jnp value wrapped in one of these is materialized to host
+#: (or a host value is explicitly converted for device use).
+BOUNDARY_WRAPPERS = frozenset({
+    "device_get",          # jax.device_get
+    "asarray", "array",    # np.asarray / np.array (host side)
+    "int", "float", "list", "tuple",
+})
+
+#: jnp functions that merely CONSTRUCT/convert (host -> device) rather than
+#: compute; these may take host-state values as input.
+JNP_CONVERTERS = frozenset({
+    "asarray", "array", "int32", "int64", "uint32", "float32", "zeros",
+    "ones", "full", "arange", "dtype",
+})
+
+#: file (repo-relative) -> function names traced by jit at their call sites
+#: (the Engine jits lambdas over these; the AST cannot see that).  Pallas
+#: kernel bodies and @jax.jit functions are detected automatically.
+TRACE_ROOTS = {
+    "src/repro/models/transformer.py": frozenset({
+        "forward", "loss_fn", "prefill_step", "decode_step",
+        "slot_cache", "update_slot_cache", "adopt_pools", "copy_pool_block",
+    }),
+}
+
+#: directories (repo-relative) scanned per checker direction
+SERVE_DIRS = ("src/repro/serve",)
+TRACED_DIRS = ("src/repro/kernels", "src/repro/models")
+
+# --- quantized dtype path (repro.core.preprocess -> kernels) ----------------
+
+#: identifiers whose values carry packed/unpacked code words; taint seeds.
+CODE_WORD_NAMES = frozenset({
+    "codes", "packed", "words", "neg_codes", "code_words",
+    "codes_ref", "neg_ref",
+})
+
+#: functions whose return value carries code words.
+CODE_WORD_PRODUCERS = frozenset({
+    "pack_code_words", "unpack_code_words", "_unpack_words",
+    "binary_row_codes", "ternary_row_codes",
+})
+
+#: identifiers carrying the absmean dequant scale (must stay f32).
+SCALE_NAMES = frozenset({"scale", "gamma", "scale_ref"})
+
+#: files on the packed-code path the dtype-flow checker scans.
+DTYPE_FLOW_DIRS = ("src/repro/core", "src/repro/kernels",
+                   "src/repro/models")
+
+# --- env registry -----------------------------------------------------------
+
+#: the documented env table lives in this module's docstring.
+ENV_TABLE_FILE = "src/repro/serve/__init__.py"
+ENV_PREFIX = "REPRO_"
+ENV_SCAN_DIRS = ("src",)
+
+# --- tile / VMEM probing geometry -------------------------------------------
+
+#: canonical serve geometry the tile checker evaluates the zoo under —
+#: mirrors the benchmark/test serve settings (benchmarks/run.py): paged KV
+#: with 16-token blocks, batch 8, 32-token prefill chunks.
+ANALYSIS_BATCH = 8
+ANALYSIS_PREFILL_CHUNK = 32
+ANALYSIS_KV_BLOCK = 16
+ANALYSIS_MAX_SEQ = 4096
+
+#: flattened batch-row counts a serve engine can put through a quantized
+#: linear: single-row decode, full-batch decode, and the chunked-prefill
+#: row block.
+def probe_rows() -> tuple[int, ...]:
+    return (1, ANALYSIS_BATCH, ANALYSIS_BATCH * ANALYSIS_PREFILL_CHUNK)
+
+
+#: query-chunk sizes the paged-attention kernel can see: decode (C == 1)
+#: and the prefill chunk.
+def probe_chunks() -> tuple[int, ...]:
+    return (1, ANALYSIS_PREFILL_CHUNK)

@@ -1,0 +1,209 @@
+"""RL3xx — quantized dtype-flow checker (pure AST, nothing imported).
+
+Follows the packed-code path (``core.preprocess.pack_code_words`` ->
+``kernels.dispatch`` -> ``kernels.rsr_onehot``) with a per-function taint
+pass: values rooted in a code-word identifier (``contracts
+.CODE_WORD_NAMES``), a producer call (``contracts.CODE_WORD_PRODUCERS``),
+or a ``p["codes"]``-style access carry integer code words and must never
+be cast or promoted to floating point — a float round-trip silently
+corrupts packed base-3 words above 2**24 and doubles the stream's
+bandwidth (RL301).  Comparisons launder taint: the kernels' one-hot
+construction ``(codes == iota).astype(f32)`` casts the *boolean*, which
+is the supported pattern.  Dequant scales (``contracts.SCALE_NAMES``)
+must stay float32 — a half-precision scale quantizes the per-block
+absmean and shows up as model-quality drift, not a crash (RL302).
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+from repro.analysis import contracts
+from repro.analysis.findings import Finding
+
+__all__ = ["check", "check_source"]
+
+_FLOAT_DTYPES = frozenset({
+    "float", "float16", "float32", "float64", "bfloat16", "half", "single",
+    "double",
+})
+_NARROW_FLOATS = frozenset({"float16", "bfloat16", "half"})
+
+
+def _dtype_token(node: ast.AST) -> str | None:
+    """The dtype an AST expression names, if recognizable."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):   # jnp.float32, np.float16, ...
+        return node.attr
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    if isinstance(node, ast.Call):        # jnp.dtype("float32")
+        for a in node.args:
+            t = _dtype_token(a)
+            if t:
+                return t
+    return None
+
+
+def _call_name(node: ast.Call) -> str:
+    f = node.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return ""
+
+
+class _Taint:
+    """Is this expression rooted in code words / a scale value?"""
+
+    def __init__(self, code_vars: set[str], scale_vars: set[str]):
+        self.code_vars = code_vars
+        self.scale_vars = scale_vars
+
+    def _rooted(self, node: ast.AST, names, producers) -> bool:
+        if isinstance(node, ast.Compare):
+            return False           # comparisons produce booleans: taint ends
+        if isinstance(node, ast.Name):
+            return node.id in names
+        if isinstance(node, ast.Attribute):
+            return node.attr in names or self._rooted(node.value, names,
+                                                      producers)
+        if isinstance(node, ast.Subscript):
+            if (isinstance(node.slice, ast.Constant)
+                    and node.slice.value in names):
+                return True        # p["codes"]
+            return self._rooted(node.value, names, producers)
+        if isinstance(node, ast.Call):
+            n = _call_name(node)
+            if n in producers:
+                return True
+            if n in ("astype", "reshape", "ravel", "transpose", "pad",
+                     "concatenate", "where", "squeeze"):
+                # shape ops / casts forward the taint of their operand
+                inner = (node.func.value
+                         if isinstance(node.func, ast.Attribute)
+                         else (node.args[0] if node.args else None))
+                return inner is not None and self._rooted(inner, names,
+                                                          producers)
+            return False
+        if isinstance(node, (ast.BinOp,)):
+            return (self._rooted(node.left, names, producers)
+                    or self._rooted(node.right, names, producers))
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self._rooted(e, names, producers) for e in node.elts)
+        return False
+
+    def code(self, node: ast.AST) -> bool:
+        return self._rooted(node, self.code_vars,
+                            contracts.CODE_WORD_PRODUCERS)
+
+    def scale(self, node: ast.AST) -> bool:
+        return self._rooted(node, self.scale_vars, frozenset())
+
+
+def _scopes(tree: ast.Module):
+    fns = [n for n in ast.walk(tree)
+           if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    yield "<module>", tree.body
+    for fn in fns:
+        yield fn.name, fn.body
+
+
+def _scope_walk(body):
+    """Walk a scope's statements without descending into nested function
+    scopes (those are visited as their own ``_scopes`` entries)."""
+    stack = list(body)
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _collect_vars(body) -> tuple[set[str], set[str]]:
+    """Names in this scope carrying code words / scales (declared seeds +
+    anything assigned from a tainted expression, to fixpoint)."""
+    code = set(contracts.CODE_WORD_NAMES)
+    scale = set(contracts.SCALE_NAMES)
+    for _ in range(3):              # tiny fixpoint: chains are short
+        t = _Taint(code, scale)
+        grew = False
+        for node in _scope_walk(body):
+            if isinstance(node, ast.Assign) and node.value is not None:
+                names = {tgt.id for tgt in node.targets
+                         if isinstance(tgt, ast.Name)}
+                if names and t.code(node.value) and not names <= code:
+                    code |= names
+                    grew = True
+                if names and t.scale(node.value) and not names <= scale:
+                    scale |= names
+                    grew = True
+        if not grew:
+            break
+    return code, scale
+
+
+def check_source(rel_path: str, source: str) -> list[Finding]:
+    findings = []
+    tree = ast.parse(source)
+    for scope_name, body in _scopes(tree):
+        code_vars, scale_vars = _collect_vars(body)
+        taint = _Taint(code_vars, scale_vars)
+        for node in _scope_walk(body):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _call_name(node)
+            # receiver.astype(dtype) / jnp.asarray(x, dtype) /
+            # jnp.float32(x)
+            dtype = None
+            operand = None
+            if name == "astype" and isinstance(node.func, ast.Attribute):
+                operand = node.func.value
+                dtype = _dtype_token(node.args[0]) if node.args else None
+            elif name in ("asarray", "array", "full_like", "zeros_like"):
+                operand = node.args[0] if node.args else None
+                for i, a in enumerate(node.args[1:], 1):
+                    dtype = dtype or _dtype_token(a)
+                for kw in node.keywords:
+                    if kw.arg == "dtype":
+                        dtype = _dtype_token(kw.value)
+            elif name in _FLOAT_DTYPES and node.args:
+                operand, dtype = node.args[0], name
+            if operand is None or dtype is None:
+                continue
+            if dtype in _FLOAT_DTYPES and taint.code(operand):
+                findings.append(Finding(
+                    "RL301", rel_path, f"{scope_name}:{dtype}",
+                    f"packed/unpacked code words cast to {dtype} in "
+                    f"{scope_name} — code words are exact integers; a "
+                    f"float round-trip corrupts packed words above "
+                    f"2**24 and doubles stream bandwidth",
+                    line=node.lineno))
+            elif dtype in _NARROW_FLOATS and taint.scale(operand):
+                findings.append(Finding(
+                    "RL302", rel_path, f"{scope_name}:{dtype}",
+                    f"dequant scale narrowed to {dtype} in "
+                    f"{scope_name} — scales are float32 by contract; "
+                    f"half-precision absmean scales show up as silent "
+                    f"model-quality drift",
+                    line=node.lineno))
+    return findings
+
+
+def check(root: str) -> list[Finding]:
+    findings = []
+    for rel in contracts.DTYPE_FLOW_DIRS:
+        base = os.path.join(root, rel)
+        for dirpath, _, names in os.walk(base):
+            for n in sorted(names):
+                if not n.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, n)
+                rel_path = os.path.relpath(path, root).replace(os.sep, "/")
+                with open(path) as f:
+                    findings.extend(check_source(rel_path, f.read()))
+    return findings

@@ -1,0 +1,114 @@
+"""RL4xx — env-var documentation drift checker (pure AST + docstring).
+
+The operator env table lives in the ``repro.serve`` module docstring
+(``contracts.ENV_TABLE_FILE``).  Every ``REPRO_*`` variable the code
+actually reads (``os.environ.get`` / ``os.getenv`` / ``os.environ[...]``
+anywhere under ``contracts.ENV_SCAN_DIRS``, including reads routed
+through a module-level name constant like ``_ENV_VAR =
+"REPRO_RSR_BACKEND"``) must appear in that table (RL401), and every
+table row must correspond to a real read (RL402) — the table is the
+serve plane's operator contract, and both directions of drift ship
+wrong runbooks.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+
+from repro.analysis import contracts
+from repro.analysis.findings import Finding
+
+__all__ = ["check", "documented_vars", "env_reads"]
+
+_DOC_ROW = re.compile(r"``(%s\w+)``" % re.escape(contracts.ENV_PREFIX))
+
+
+def documented_vars(source: str) -> set[str]:
+    """REPRO_* names in the module docstring's env table."""
+    doc = ast.get_docstring(ast.parse(source)) or ""
+    return set(_DOC_ROW.findall(doc))
+
+
+def _str_constants(tree: ast.Module) -> dict[str, str]:
+    """module-level NAME = "literal" bindings (``_ENV_VAR`` indirection)."""
+    out = {}
+    for node in tree.body:
+        if (isinstance(node, ast.Assign)
+                and isinstance(node.value, ast.Constant)
+                and isinstance(node.value.value, str)):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out[t.id] = node.value.value
+    return out
+
+
+def _env_key(node: ast.AST, consts: dict[str, str]) -> str | None:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    if isinstance(node, ast.Name):
+        return consts.get(node.id)
+    return None
+
+
+def env_reads(source: str) -> dict[str, int]:
+    """{REPRO_* var -> first line read} in one file."""
+    tree = ast.parse(source)
+    consts = _str_constants(tree)
+    reads: dict[str, int] = {}
+
+    def record(key_node, lineno):
+        key = _env_key(key_node, consts)
+        if key and key.startswith(contracts.ENV_PREFIX):
+            reads.setdefault(key, lineno)
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            f = node.func
+            # os.environ.get(K) / os.getenv(K)
+            if (isinstance(f, ast.Attribute) and f.attr in ("get", "getenv")
+                    and node.args):
+                base = f.value
+                is_env = (isinstance(base, ast.Attribute)
+                          and base.attr == "environ")
+                is_os = isinstance(base, ast.Name) and base.id == "os"
+                if is_env or (f.attr == "getenv" and is_os):
+                    record(node.args[0], node.lineno)
+        elif isinstance(node, ast.Subscript):
+            # os.environ[K]
+            v = node.value
+            if isinstance(v, ast.Attribute) and v.attr == "environ":
+                record(node.slice, node.lineno)
+    return reads
+
+
+def check(root: str) -> list[Finding]:
+    table_path = os.path.join(root, contracts.ENV_TABLE_FILE)
+    with open(table_path) as f:
+        documented = documented_vars(f.read())
+    read_at: dict[str, tuple[str, int]] = {}
+    for rel in contracts.ENV_SCAN_DIRS:
+        base = os.path.join(root, rel)
+        for dirpath, _, names in os.walk(base):
+            for n in sorted(names):
+                if not n.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, n)
+                rel_path = os.path.relpath(path, root).replace(os.sep, "/")
+                with open(path) as f:
+                    for var, line in env_reads(f.read()).items():
+                        read_at.setdefault(var, (rel_path, line))
+    findings = []
+    for var in sorted(set(read_at) - documented):
+        rel_path, line = read_at[var]
+        findings.append(Finding(
+            "RL401", rel_path, var,
+            f"{var} is read here but missing from the operator env table "
+            f"in {contracts.ENV_TABLE_FILE}",
+            line=line))
+    for var in sorted(documented - set(read_at)):
+        findings.append(Finding(
+            "RL402", contracts.ENV_TABLE_FILE, var,
+            f"{var} is documented in the operator env table but nothing "
+            f"under {'/'.join(contracts.ENV_SCAN_DIRS)} reads it"))
+    return findings

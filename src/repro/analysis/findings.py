@@ -1,0 +1,113 @@
+"""Finding / baseline machinery shared by every reprolint checker.
+
+A finding's ``key`` (``CODE:path:symbol``) deliberately excludes line
+numbers so a suppression survives unrelated edits; ``symbol`` is whatever
+stable anchor the checker owns (function name, config name, env var, ...).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Iterable, Optional
+
+__all__ = ["Finding", "load_baseline", "save_baseline", "split_findings",
+           "format_report", "BASELINE_ENV", "default_baseline_path"]
+
+BASELINE_ENV = "REPRO_ANALYSIS_BASELINE"
+BASELINE_SCHEMA = "reprolint_baseline_v1"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    code: str          # "RL101"
+    path: str          # repo-relative file ("" for tree-level findings)
+    symbol: str        # stable anchor within path (baseline fingerprint)
+    message: str
+    line: int = 0      # 1-based; 0 when not tied to a line
+
+    @property
+    def key(self) -> str:
+        return f"{self.code}:{self.path}:{self.symbol}"
+
+    def render(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else (self.path or "-")
+        return f"{self.code} {loc} [{self.symbol}] {self.message}"
+
+
+def default_baseline_path(root: str) -> str:
+    """$REPRO_ANALYSIS_BASELINE > <root>/reprolint_baseline.json."""
+    return (os.environ.get(BASELINE_ENV, "").strip()
+            or os.path.join(root, "reprolint_baseline.json"))
+
+
+def load_baseline(path: str) -> dict[str, str]:
+    """{finding key -> justification}; missing file is an empty baseline."""
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        payload = json.load(f)
+    if payload.get("schema") != BASELINE_SCHEMA:
+        raise ValueError(f"{path}: expected schema {BASELINE_SCHEMA!r}, "
+                         f"got {payload.get('schema')!r}")
+    out: dict[str, str] = {}
+    for e in payload.get("suppressions", []):
+        key, just = e.get("key"), e.get("justification", "").strip()
+        if not key or not just or just.lower().startswith("todo"):
+            raise ValueError(
+                f"{path}: every suppression needs a 'key' and a non-empty, "
+                f"non-TODO 'justification' (offending entry: {e!r})")
+        out[key] = just
+    return out
+
+
+def save_baseline(path: str, findings: Iterable[Finding],
+                  previous: Optional[dict[str, str]] = None) -> str:
+    """Write the baseline for ``findings``; justifications already present
+    in ``previous`` are preserved, new keys get a fill-me-in marker the
+    loader rejects until a human writes the reason."""
+    previous = previous or {}
+    entries = []
+    seen = set()
+    for f in sorted(findings, key=lambda f: f.key):
+        if f.key in seen:
+            continue
+        seen.add(f.key)
+        entries.append({
+            "key": f.key,
+            "justification": previous.get(f.key, "TODO: justify"),
+            "message": f.message,
+        })
+    with open(path, "w") as fp:
+        json.dump({"schema": BASELINE_SCHEMA, "suppressions": entries},
+                  fp, indent=1, sort_keys=True)
+        fp.write("\n")
+    return path
+
+
+def split_findings(findings: Iterable[Finding], baseline: dict[str, str]
+                   ) -> tuple[list[Finding], list[Finding], list[str]]:
+    """(new, suppressed, stale-baseline-keys)."""
+    findings = list(findings)
+    keys = {f.key for f in findings}
+    new = [f for f in findings if f.key not in baseline]
+    suppressed = [f for f in findings if f.key in baseline]
+    stale = sorted(k for k in baseline if k not in keys)
+    return new, suppressed, stale
+
+
+def format_report(new, suppressed, stale) -> str:
+    lines = []
+    if new:
+        lines.append(f"reprolint: {len(new)} finding(s)")
+        for f in sorted(new, key=lambda f: (f.code, f.path, f.line)):
+            lines.append("  " + f.render())
+    else:
+        lines.append("reprolint: no new findings")
+    if suppressed:
+        lines.append(f"  ({len(suppressed)} baselined finding(s) "
+                     f"suppressed)")
+    for k in stale:
+        lines.append(f"  warning: stale baseline entry (no longer fires): "
+                     f"{k}")
+    return "\n".join(lines)

@@ -1,0 +1,318 @@
+"""RL1xx — tile / VMEM / regime-coverage checker.
+
+Evaluates the RSR tile tables (``kernels.dispatch.AUTOTUNE_TABLE`` +
+``TUNED_TILES``) and the paged-attention query-tile tables
+(``kernels.paged_attention.PAGED_ATTN_TILES`` + ``TUNED_ATTN_TILES``),
+with the ``autotune_cache.json`` overlay, against every config in the
+zoo (``repro.config.list_archs``): every quantized serve linear's
+``(nb, n)`` shape is extracted from the ABSTRACT serve tree
+(``jax.eval_shape`` over init + serve conversion — zero allocation, the
+exact shapes the engine runs), and every paged-attention geometry from
+the config's cache layout.  Each probed (shape × batch-row regime) must
+have a covering regime entry whose post-clamp tiles respect TPU tiling
+quanta and whose kernel-launch working set fits the per-kernel VMEM
+budget (``roofline.hw``).  The VMEM model mirrors the actual kernel
+layouts in ``kernels/rsr_onehot.py`` and ``kernels/paged_attention.py``:
+double-buffered operand/output block tiles + VMEM scratch + the largest
+resident intermediate.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+
+from repro.analysis import contracts
+from repro.analysis.findings import Finding
+from repro.roofline import hw
+
+__all__ = ["check", "rsr_workset_bytes", "gqa_workset_bytes",
+           "mla_workset_bytes", "check_rsr_shape", "check_attn_geometry"]
+
+_F32 = 4
+
+
+def _round_up(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+def _bucket(v: int) -> int:
+    return 1 << max(0, int(v - 1).bit_length())
+
+
+# ---------------------------------------------------------------------------
+# VMEM working-set models (mirror the kernel layouts)
+# ---------------------------------------------------------------------------
+
+def rsr_workset_bytes(tiles: tuple[int, int, int], k: int,
+                      code_itemsize: int = 1) -> int:
+    """rsr_onehot_matmul launch working set for (tile_b, tile_blk, tile_n):
+    2x-buffered in/out block tiles + the (TBLK, TB, P) accumulator scratch
+    + the per-iteration (TN, P) one-hot/iota intermediates."""
+    tb, tblk, tn = tiles
+    p = 3 ** k
+    per = 4 // code_itemsize
+    ins = (tb * tn * _F32                  # x tile (f32 by dispatch)
+           + 2 * tblk * (tn // per) * 4    # packed codes + neg words (u32)
+           + p * k * _F32                  # pattern
+           + _F32                          # scale
+           + tblk * k * _F32)              # bias tile
+    out = tb * tblk * k * _F32
+    scratch = tblk * tb * p * _F32
+    inter = 2 * tn * p * _F32              # iota + one one-hot tile
+    return 2 * (ins + out) + scratch + inter
+
+
+def gqa_workset_bytes(tile_c: int, heads: int, kv_heads: int, head_dim: int,
+                      block_size: int, cache_itemsize: int) -> int:
+    """paged_gqa_attend launch working set for one grid step."""
+    groups = max(1, heads // max(1, kv_heads))
+    ins = (tile_c * heads * head_dim * cache_itemsize        # q tile
+           + 2 * kv_heads * block_size * head_dim * cache_itemsize  # k, v
+           + tile_c * 4)                                     # positions
+    out = tile_c * heads * head_dim * _F32
+    scratch = kv_heads * tile_c * groups * (2 + head_dim) * _F32  # m, l, acc
+    return 2 * (ins + out) + scratch
+
+
+def mla_workset_bytes(tile_c: int, heads: int, rank: int, rope_dim: int,
+                      block_size: int, cache_itemsize: int) -> int:
+    """paged_mla_attend launch working set for one grid step."""
+    ins = (tile_c * heads * rank * cache_itemsize            # q_lat
+           + tile_c * heads * rope_dim * cache_itemsize      # q_pe
+           + block_size * (rank + rope_dim) * cache_itemsize  # c, pe pools
+           + tile_c * 4)                                     # positions
+    out = tile_c * heads * rank * _F32
+    scratch = tile_c * heads * (2 + rank) * _F32             # m, l, acc
+    return 2 * (ins + out) + scratch
+
+
+# ---------------------------------------------------------------------------
+# Table resolution (mirrors dispatch.select_tiles / select_attn_tiles,
+# but over injectable tables so the overlay file can be checked offline)
+# ---------------------------------------------------------------------------
+
+def _rsr_regime(b: int, table) -> str | None:
+    for name, max_b, *_ in table:
+        if max_b is None or b <= max_b:
+            return name
+    return None
+
+
+def _rsr_tiles(b: int, nb: int, n: int, table, tuned):
+    regime = _rsr_regime(b, table)
+    if regime is None:
+        return None, None
+    tuned_t = tuned.get((regime, _bucket(nb), _bucket(n)))
+    if tuned_t is not None:
+        tile_b, tile_blk, tile_n = tuned_t
+    else:
+        for _, max_b, tile_b, tile_blk, tile_n in table:
+            if max_b is None or b <= max_b:
+                break
+    tile_b = min(tile_b, _round_up(b, 8))
+    tile_blk = min(tile_blk, _round_up(nb, 8))
+    tile_n = min(tile_n, _round_up(n, 128))
+    return regime, (tile_b, tile_blk, tile_n)
+
+
+def _attn_regime(c: int, table) -> str | None:
+    for name, max_c, *_ in table:
+        if max_c is None or c <= max_c:
+            return name
+    return None
+
+
+def _attn_tile(c: int, table, tuned):
+    regime = _attn_regime(c, table)
+    if regime is None:
+        return None, None
+    tuned_t = tuned.get((regime, _bucket(c)))
+    if tuned_t is not None:
+        tile_c = tuned_t
+    else:
+        for _, max_c, tile_c in table:
+            if max_c is None or c <= max_c:
+                break
+    return regime, max(1, min(tile_c, c))
+
+
+# ---------------------------------------------------------------------------
+# Per-shape checks
+# ---------------------------------------------------------------------------
+
+def check_rsr_shape(cfg_name: str, nb: int, n: int, k: int, *, table, tuned,
+                    rows=None, budget: int = hw.VMEM_KERNEL_BUDGET
+                    ) -> list[Finding]:
+    """All RL1xx findings for one quantized-linear code shape (nb, n)."""
+    findings = []
+    path = "src/repro/kernels/dispatch.py"
+    per = 4  # uint8 codes at the serve default k<=5 pack 4 per u32 word
+    for b in (rows if rows is not None else contracts.probe_rows()):
+        regime, tiles = _rsr_tiles(b, nb, n, table, tuned)
+        if regime is None:
+            findings.append(Finding(
+                "RL103", path, f"{cfg_name}:rsr:b={b}",
+                f"no AUTOTUNE_TABLE regime covers {b} batch rows "
+                f"(linear nb={nb} n={n})"))
+            continue
+        tb, tblk, tn = tiles
+        sub = hw.vmem_sublane(_F32)
+        bad = []
+        if tn % hw.VMEM_LANE:
+            bad.append(f"tile_n={tn} % lane {hw.VMEM_LANE}")
+        if tn % per:
+            bad.append(f"tile_n={tn} % packed-words {per}")
+        if tb % sub:
+            bad.append(f"tile_b={tb} % sublane {sub}")
+        if tblk % sub:
+            bad.append(f"tile_blk={tblk} % sublane {sub}")
+        if bad:
+            findings.append(Finding(
+                "RL102", path, f"{cfg_name}:rsr:{regime}:{tb}x{tblk}x{tn}",
+                f"misaligned tiles for linear nb={nb} n={n} at b={b}: "
+                + "; ".join(bad)))
+        ws = rsr_workset_bytes((tb, tblk, tn), k)
+        if ws > budget:
+            findings.append(Finding(
+                "RL101", path, f"{cfg_name}:rsr:{regime}:{tb}x{tblk}x{tn}",
+                f"working set {ws / 2**20:.1f} MiB > budget "
+                f"{budget / 2**20:.1f} MiB for linear nb={nb} n={n} at "
+                f"b={b}"))
+    return findings
+
+
+def check_attn_geometry(cfg, *, table, tuned, chunks=None,
+                        block_size: int = contracts.ANALYSIS_KV_BLOCK,
+                        budget: int = hw.VMEM_KERNEL_BUDGET
+                        ) -> list[Finding]:
+    """All RL1xx findings for one config's paged-attention geometry."""
+    findings = []
+    path = "src/repro/kernels/paged_attention.py"
+    try:
+        import jax.numpy as jnp
+        itemsize = jnp.dtype(cfg.dtype).itemsize
+    except TypeError:
+        itemsize = 2
+    mla = cfg.attention == "mla"
+    # lane alignment of the pool trailing dims is a property of the config
+    # geometry itself, independent of the query tile
+    lanes = ([("kv_lora_rank", cfg.kv_lora_rank),
+              ("qk_rope_head_dim", cfg.qk_rope_head_dim)] if mla
+             else [("head_dim", cfg.resolved_head_dim)])
+    for dim_name, dim in lanes:
+        if dim % hw.VMEM_LANE:
+            findings.append(Finding(
+                "RL102", path, f"{cfg.name}:paged_attn:{dim_name}={dim}",
+                f"pool trailing dim {dim_name}={dim} is not a multiple of "
+                f"the {hw.VMEM_LANE}-lane tile (Mosaic pads each block's "
+                f"last dim; VMEM and DMA are charged for "
+                f"{_round_up(dim, hw.VMEM_LANE)})"))
+    sub = hw.vmem_sublane(itemsize)
+    if block_size % sub:
+        findings.append(Finding(
+            "RL102", path, f"{cfg.name}:paged_attn:block_size={block_size}",
+            f"kv_block_size={block_size} is not a multiple of the "
+            f"{sub}-row sublane tile for {cfg.dtype}"))
+    for c in (chunks if chunks is not None else contracts.probe_chunks()):
+        regime, tc = _attn_tile(c, table, tuned)
+        if regime is None:
+            findings.append(Finding(
+                "RL103", path, f"{cfg.name}:paged_attn:c={c}",
+                f"no PAGED_ATTN_TILES regime covers a {c}-token query "
+                f"chunk"))
+            continue
+        if mla:
+            ws = mla_workset_bytes(tc, cfg.num_heads, cfg.kv_lora_rank,
+                                   cfg.qk_rope_head_dim, block_size,
+                                   itemsize)
+        else:
+            ws = gqa_workset_bytes(tc, cfg.num_heads, cfg.num_kv_heads,
+                                   cfg.resolved_head_dim, block_size,
+                                   itemsize)
+        if ws > budget:
+            findings.append(Finding(
+                "RL101", path, f"{cfg.name}:paged_attn:{regime}:tc={tc}",
+                f"working set {ws / 2**20:.1f} MiB > budget "
+                f"{budget / 2**20:.1f} MiB at C={c} (tile_c={tc})"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Zoo shape extraction
+# ---------------------------------------------------------------------------
+
+def _walk_codes(tree, out):
+    if isinstance(tree, dict):
+        if "codes" in tree and "n_out" in tree:
+            out.add(tuple(tree["codes"].shape[-2:]))
+        else:
+            for v in tree.values():
+                _walk_codes(v, out)
+    elif isinstance(tree, (list, tuple)):
+        for v in tree:
+            _walk_codes(v, out)
+
+
+@functools.lru_cache(maxsize=None)
+def _serve_shapes(arch: str) -> frozenset:
+    """Distinct (nb, n) code shapes of every quantized serve linear of an
+    arch, from the abstract (eval_shape) serve tree — no allocation."""
+    import jax
+    from repro.config import get_config
+    from repro.models import transformer as tfm
+    cfg = get_config(arch)
+    params = jax.eval_shape(functools.partial(tfm.init_params, cfg),
+                            jax.random.PRNGKey(0))
+    tree = jax.eval_shape(functools.partial(tfm.serve_params, cfg=cfg),
+                          params)
+    shapes: set = set()
+    _walk_codes(tree, shapes)
+    return frozenset(shapes)
+
+
+def _paged_attention_applies(cfg) -> bool:
+    from repro.models.transformer import layer_kinds
+    return (not cfg.is_encoder and cfg.attention != "none"
+            and any(k == "attn" for k in layer_kinds(cfg)))
+
+
+def _load_overlay(root: str) -> tuple[dict, dict, list[Finding]]:
+    """The autotune_cache.json overlay at ``root`` (validated offline; a
+    malformed file is an RL104 finding, not a crash)."""
+    from repro.kernels.dispatch import (AutotuneCacheError,
+                                        validate_autotune_payload)
+    path = os.path.join(root, "autotune_cache.json")
+    if not os.path.exists(path):
+        return {}, {}, []
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+        tuned, attn_tuned = validate_autotune_payload(payload)
+    except (json.JSONDecodeError, AutotuneCacheError) as e:
+        return {}, {}, [Finding("RL104", "autotune_cache.json",
+                                "payload", str(e))]
+    return tuned, attn_tuned, []
+
+
+def check(root: str, archs=None) -> list[Finding]:
+    from repro.config import get_config, list_archs
+    from repro.kernels.dispatch import AUTOTUNE_TABLE
+    from repro.kernels.paged_attention import PAGED_ATTN_TILES
+    tuned, attn_tuned, findings = _load_overlay(root)
+    seen: set[str] = set()
+    for arch in (archs if archs is not None else list_archs()):
+        cfg = get_config(arch)
+        for nb, n in sorted(_serve_shapes(arch)):
+            for f in check_rsr_shape(cfg.name, nb, n, cfg.rsr_k,
+                                     table=AUTOTUNE_TABLE, tuned=tuned):
+                if f.key not in seen:
+                    seen.add(f.key)
+                    findings.append(f)
+        if _paged_attention_applies(cfg):
+            for f in check_attn_geometry(cfg, table=PAGED_ATTN_TILES,
+                                         tuned=attn_tuned):
+                if f.key not in seen:
+                    seen.add(f.key)
+                    findings.append(f)
+    return findings

@@ -69,7 +69,8 @@ from repro.kernels.rsr_onehot import default_interpret, rsr_onehot_matmul
 
 __all__ = ["BACKENDS", "select_backend", "select_tiles", "rsr_serve_linear",
            "rsr_serve_matmul", "autotune", "AUTOTUNE_TABLE", "TUNED_TILES",
-           "save_autotune_cache", "load_autotune_cache"]
+           "save_autotune_cache", "load_autotune_cache",
+           "AutotuneCacheError", "validate_autotune_payload"]
 
 BACKENDS = ("pallas", "pallas_interpret", "scatter")
 
@@ -195,6 +196,65 @@ def save_autotune_cache(path: Optional[str] = None) -> str:
     return path
 
 
+class AutotuneCacheError(ValueError):
+    """A malformed autotune_cache.json.  Raised by
+    :func:`validate_autotune_payload` / :func:`load_autotune_cache` BEFORE
+    any table mutation, so a bad file can never clear or half-populate
+    ``TUNED_TILES`` / ``TUNED_ATTN_TILES``."""
+
+
+def validate_autotune_payload(payload) -> tuple[dict, dict]:
+    """Validate a cache payload; returns ``(tuned, attn_tuned)`` dicts in
+    the in-memory table formats.  Checks every entry (known regime names,
+    positive integer buckets, tile arity 3 of positive ints, positive
+    tile_c) and raises :class:`AutotuneCacheError` naming the first bad
+    entry — the whole file is rejected, nothing is applied piecemeal."""
+    from repro.kernels.paged_attention import PAGED_ATTN_TILES
+    if not isinstance(payload, dict):
+        raise AutotuneCacheError(
+            f"cache payload must be a JSON object, got "
+            f"{type(payload).__name__}")
+    regimes = {row[0] for row in AUTOTUNE_TABLE}
+    attn_regimes = {row[0] for row in PAGED_ATTN_TILES}
+
+    def _pos_int(v, what, e):
+        if isinstance(v, bool) or not isinstance(v, int) or v <= 0:
+            raise AutotuneCacheError(
+                f"entry {e!r}: {what} must be a positive int, got {v!r}")
+        return v
+
+    tuned: dict[tuple[str, int, int], tuple[int, int, int]] = {}
+    for e in payload.get("entries", ()):
+        if not isinstance(e, dict):
+            raise AutotuneCacheError(f"entry {e!r}: expected an object")
+        regime = e.get("regime")
+        if regime not in regimes:
+            raise AutotuneCacheError(
+                f"entry {e!r}: unknown regime {regime!r} "
+                f"(known: {sorted(regimes)})")
+        tiles = e.get("tiles")
+        if not isinstance(tiles, (list, tuple)) or len(tiles) != 3:
+            raise AutotuneCacheError(
+                f"entry {e!r}: tiles must be [tile_b, tile_blk, tile_n], "
+                f"got {tiles!r}")
+        tiles = tuple(_pos_int(t, "tile", e) for t in tiles)
+        key = (str(regime), _pos_int(e.get("nb_bucket"), "nb_bucket", e),
+               _pos_int(e.get("n_bucket"), "n_bucket", e))
+        tuned[key] = tiles
+    attn_tuned: dict[tuple[str, int], int] = {}
+    for e in payload.get("attn_entries", ()):
+        if not isinstance(e, dict):
+            raise AutotuneCacheError(f"attn entry {e!r}: expected an object")
+        regime = e.get("regime")
+        if regime not in attn_regimes:
+            raise AutotuneCacheError(
+                f"attn entry {e!r}: unknown regime {regime!r} "
+                f"(known: {sorted(attn_regimes)})")
+        key = (str(regime), _pos_int(e.get("c_bucket"), "c_bucket", e))
+        attn_tuned[key] = _pos_int(e.get("tile_c"), "tile_c", e)
+    return tuned, attn_tuned
+
+
 def load_autotune_cache(path: Optional[str] = None, *, clear: bool = False,
                         force: bool = False) -> int:
     """Load measured tiles over the static table; returns the entry count.
@@ -202,34 +262,45 @@ def load_autotune_cache(path: Optional[str] = None, *, clear: bool = False,
     measured on a different host backend are skipped unless ``force``.
     The default path is $REPRO_AUTOTUNE_CACHE, else the repo-anchored
     DEFAULT_AUTOTUNE_CACHE — never the CWD.  Every applied overlay is
-    logged so an operator can tell which file steered the tiles."""
+    logged so an operator can tell which file steered the tiles.
+
+    The whole file is validated (:func:`validate_autotune_payload`) before
+    the tables are touched: a malformed file raises
+    :class:`AutotuneCacheError` and leaves ``TUNED_TILES`` /
+    ``TUNED_ATTN_TILES`` exactly as they were (no clear, no partial
+    population)."""
     from repro.kernels.paged_attention import TUNED_ATTN_TILES
     path = path or os.environ.get(AUTOTUNE_CACHE_ENV, DEFAULT_AUTOTUNE_CACHE)
+    if not os.path.exists(path):
+        if clear:
+            TUNED_TILES.clear()
+            TUNED_ATTN_TILES.clear()
+        return 0
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except json.JSONDecodeError as e:
+        raise AutotuneCacheError(f"{path}: not valid JSON ({e})") from e
+    try:
+        tuned, attn_tuned = validate_autotune_payload(payload)
+    except AutotuneCacheError as e:
+        raise AutotuneCacheError(f"{path}: {e}") from None
+    # validation passed — mutations are safe from here on
     if clear:
         TUNED_TILES.clear()
         TUNED_ATTN_TILES.clear()
-    if not os.path.exists(path):
-        return 0
-    with open(path) as f:
-        payload = json.load(f)
     host = payload.get("host_backend")
     if not force and host is not None and host != jax.default_backend():
         _log.info("ignoring autotune cache %s: measured on host backend "
                   "%r, running on %r", path, host, jax.default_backend())
         return 0
-    entries = payload.get("entries", [])
-    for e in entries:
-        TUNED_TILES[(str(e["regime"]), int(e["nb_bucket"]),
-                     int(e["n_bucket"]))] = tuple(int(v) for v in e["tiles"])
-    attn_entries = payload.get("attn_entries", [])
-    for e in attn_entries:
-        TUNED_ATTN_TILES[(str(e["regime"]),
-                          int(e["c_bucket"]))] = int(e["tile_c"])
-    if entries or attn_entries:
+    TUNED_TILES.update(tuned)
+    TUNED_ATTN_TILES.update(attn_tuned)
+    if tuned or attn_tuned:
         _log.info("loaded %d tuned tile entries (+%d paged-attn) over the "
-                  "static tables from %s", len(entries), len(attn_entries),
+                  "static tables from %s", len(tuned), len(attn_tuned),
                   path)
-    return len(entries) + len(attn_entries)
+    return len(tuned) + len(attn_tuned)
 
 
 # ---------------------------------------------------------------------------
@@ -394,7 +465,14 @@ def autotune(b: int, n: int, n_out: int, *, k: int = 5,
 # session's autotune results must survive the session).  The default path
 # is repo-anchored, so importing from an arbitrary CWD cannot pick up a
 # stray cache file (the load itself is a no-op when the file is absent).
-load_autotune_cache()
+# A malformed file must not make the package unimportable: log it loudly
+# and run on the static tables alone (explicit load_autotune_cache()
+# calls still raise AutotuneCacheError).
+try:
+    load_autotune_cache()
+except AutotuneCacheError as _e:
+    _log.error("autotune cache rejected, using static tile tables only: "
+               "%s", _e)
 
 
 def _main():

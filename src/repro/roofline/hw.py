@@ -6,3 +6,22 @@ HBM_BW = 819e9                  # B/s
 ICI_BW_PER_LINK = 50e9          # B/s per link (~)
 HBM_BYTES = 16 * 2 ** 30        # 16 GiB
 VMEM_BYTES = 128 * 2 ** 20      # ~128 MiB (v5e ~ 128MB VMEM/core)
+
+# --- static VMEM / tiling model (repro.analysis.tiles rides this) ----------
+#
+# The compiler owns the full VMEM_BYTES, but a portable Pallas kernel must
+# leave room for double-buffered pipelining, spills, and co-resident
+# kernels: the static checker budgets a single launch's working set at
+# VMEM_KERNEL_BUDGET (the ~16 MB/core figure the Pallas guide plans
+# around).  Register tiling quanta: the last block dim is laid out across
+# VMEM_LANE lanes and the penultimate dim across 32 / itemsize sublanes
+# (8 for f32, 16 for bf16, 32 for int8) — tiles off these quanta pad
+# silently at best and fail Mosaic lowering at worst.
+
+VMEM_KERNEL_BUDGET = 16 * 2 ** 20   # per-kernel-launch working-set budget
+VMEM_LANE = 128                     # last-dim tile quantum (all dtypes)
+
+
+def vmem_sublane(itemsize: int) -> int:
+    """Penultimate-dim tile quantum for an ``itemsize``-byte dtype."""
+    return max(8, 32 // int(itemsize))

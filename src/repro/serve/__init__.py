@@ -93,8 +93,13 @@ Under pressure the plane walks this ladder, gentlest first:
                        ``gather``); outranks ``ServeConfig.paged_attn``
                        (see below).
 ``REPRO_AUTOTUNE_CACHE``  Path of the kernel autotune cache file
-                       (default ``~/.cache/repro/autotune.json``);
-                       ``off`` disables persistence.
+                       (default: ``autotune_cache.json`` at the repo
+                       root in a src-layout checkout, else
+                       ``~/.cache/repro-rsr/autotune_cache.json``).  A
+                       malformed file raises ``kernels.dispatch
+                       .AutotuneCacheError`` before any table mutation
+                       (at import time it is logged and the static
+                       tables stand).
 ``REPRO_FAULT_ALLOC``  Deterministic allocator fault injection:
                        comma-separated 1-based ordinals of ``BlockPool
                        .alloc`` calls that raise ``BlockPoolExhausted``
@@ -122,6 +127,11 @@ Under pressure the plane walks this ladder, gentlest first:
                        0 disables).  CI reruns the serve suites at
                        interval 1, so every green path also proves the
                        auditor quiet.
+``REPRO_ANALYSIS_BASELINE``  Path of the reprolint suppression
+                       baseline consulted by ``python -m repro
+                       .analysis`` (default
+                       ``reprolint_baseline.json`` at the linted
+                       root); see :mod:`repro.analysis`.
 =====================  ==================================================
 
 ``AuditError`` failure-mode runbook

@@ -1,0 +1,338 @@
+"""reprolint: every checker must FIRE on a seeded violation and stay
+QUIET (modulo the committed baseline) on the real tree — a static gate
+that cannot catch its target class of bug is worse than none."""
+import json
+import os
+import textwrap
+
+import pytest
+
+from repro.analysis import boundaries, dtypeflow, envdocs, run_checks, tiles
+from repro.analysis.findings import (Finding, load_baseline, save_baseline,
+                                     split_findings)
+from repro.config import ModelConfig
+from repro.kernels.paged_attention import PAGED_ATTN_TILES
+from repro.roofline import hw
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _codes(findings):
+    return {f.code for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# tiles (RL1xx) — seeded violations via injected tables
+# ---------------------------------------------------------------------------
+
+def test_tiles_flags_misaligned_tile():
+    """A 300-wide output tile violates both the 128-lane quantum and the
+    4-codes-per-word divisibility."""
+    bad = (("decode", None, 8, 8, 300),)
+    fs = tiles.check_rsr_shape("t", nb=64, n=2048, k=5, table=bad, tuned={})
+    assert _codes(fs) == {"RL102"}
+    assert "lane" in fs[0].message
+
+
+def test_tiles_flags_vmem_overflow():
+    """(256, 256, 4096) tiles put the 3^5-wide scratch alone far past the
+    per-launch budget."""
+    huge = (("prefill", None, 256, 256, 4096),)
+    fs = tiles.check_rsr_shape("t", nb=512, n=8192, k=5, table=huge,
+                               tuned={}, rows=(256,))
+    assert "RL101" in _codes(fs)
+
+
+def test_tiles_flags_uncovered_regime():
+    decode_only = (("decode", 8, 8, 8, 512),)
+    fs = tiles.check_rsr_shape("t", nb=64, n=2048, k=5, table=decode_only,
+                               tuned={}, rows=(256,))
+    assert _codes(fs) == {"RL103"}
+
+
+def test_tiles_tuned_overlay_outranks_static_row():
+    """A bad TUNED entry must be caught even when the static row is fine."""
+    good = (("decode", None, 8, 8, 512),)
+    tuned = {("decode", 64, 2048): (8, 8, 300)}
+    fs = tiles.check_rsr_shape("t", nb=64, n=2048, k=5, table=good,
+                               tuned=tuned, rows=(8,))
+    assert _codes(fs) == {"RL102"}
+
+
+def test_tiles_clamped_tiles_stay_quiet():
+    """The real static table + clamping is clean for an awkward shape."""
+    from repro.kernels.dispatch import AUTOTUNE_TABLE
+    fs = tiles.check_rsr_shape("t", nb=57, n=130, k=5,
+                               table=AUTOTUNE_TABLE, tuned={})
+    assert fs == []
+
+
+def test_tiles_flags_sublane_head_dim():
+    """hd = 512/8 = 64 < the 128-lane quantum: the paged pools pad 2x."""
+    cfg = ModelConfig(name="t", family="dense", d_model=512, num_heads=8)
+    fs = tiles.check_attn_geometry(cfg, table=PAGED_ATTN_TILES, tuned={})
+    assert _codes(fs) == {"RL102"}
+    assert "head_dim=64" in fs[0].symbol
+
+
+def test_tiles_attn_vmem_overflow_fires():
+    cfg = ModelConfig(name="t", family="dense", d_model=16384,
+                      num_heads=128, head_dim=128)
+    fs = tiles.check_attn_geometry(cfg, table=PAGED_ATTN_TILES, tuned={},
+                                   budget=2 ** 20)
+    assert "RL101" in _codes(fs)
+
+
+def test_tiles_reports_malformed_overlay(tmp_path):
+    (tmp_path / "autotune_cache.json").write_text(json.dumps({
+        "schema": "autotune_cache_v1", "host_backend": None,
+        "entries": [{"regime": "decode", "nb_bucket": 64, "n_bucket": 2048,
+                     "tiles": [8, -8, 512]}], "attn_entries": []}))
+    fs = tiles.check(str(tmp_path), archs=[])
+    assert _codes(fs) == {"RL104"}
+
+
+# ---------------------------------------------------------------------------
+# boundaries (RL2xx) — seeded violations via synthetic sources
+# ---------------------------------------------------------------------------
+
+def test_boundary_flags_traced_value_into_host_state():
+    src = textwrap.dedent("""
+        class Pool:
+            def tick(self, x):
+                self._free = jnp.cumsum(x)
+    """)
+    fs = boundaries.check_serve_source("src/repro/serve/x.py", src)
+    assert _codes(fs) == {"RL201"}
+    assert fs[0].symbol == "_free"
+
+
+def test_boundary_wrappers_shield_assignment():
+    src = textwrap.dedent("""
+        class Pool:
+            def tick(self, x, y):
+                self._pos = int(jnp.argmax(x))
+                self._tables = np.asarray(jax.device_get(y))
+    """)
+    assert boundaries.check_serve_source("src/repro/serve/x.py", src) == []
+
+
+def test_boundary_flags_jnp_math_on_host_state():
+    src = textwrap.dedent("""
+        class Pool:
+            def tick(self):
+                return jnp.sum(self._pos)
+    """)
+    fs = boundaries.check_serve_source("src/repro/serve/x.py", src)
+    assert _codes(fs) == {"RL202"}
+
+
+def test_boundary_jnp_conversion_of_host_state_is_fine():
+    src = textwrap.dedent("""
+        class Eng:
+            def step(self, slot):
+                return jnp.asarray(self._tables[slot])
+    """)
+    assert boundaries.check_serve_source("src/repro/serve/x.py", src) == []
+
+
+def test_boundary_flags_host_op_in_jitted_fn():
+    files = {"src/repro/kernels/k.py": textwrap.dedent("""
+        @jax.jit
+        def f(x):
+            np.save("/tmp/x", x)
+            return x
+    """)}
+    fs = boundaries.check_traced_tree(files)
+    assert _codes(fs) == {"RL203"}
+
+
+def test_boundary_flags_env_read_reached_through_call_graph():
+    """jit root -> helper -> os.environ: the read is flagged on the helper."""
+    files = {"src/repro/kernels/k.py": textwrap.dedent("""
+        def helper(x):
+            return os.environ.get("REPRO_X", x)
+
+        @jax.jit
+        def f(x):
+            return helper(x)
+    """)}
+    fs = boundaries.check_traced_tree(files)
+    assert _codes(fs) == {"RL203"}
+    assert fs[0].symbol.startswith("helper:")
+
+
+def test_boundary_flags_pallas_body_via_partial():
+    files = {"src/repro/kernels/k.py": textwrap.dedent("""
+        def _body(x_ref, o_ref, *, n):
+            print(x_ref)
+            o_ref[...] = x_ref[...]
+
+        def launch(x, n):
+            kernel = functools.partial(_body, n=n)
+            return pl.pallas_call(kernel, out_shape=x)(x)
+    """)}
+    fs = boundaries.check_traced_tree(files)
+    assert _codes(fs) == {"RL203"}
+    assert fs[0].symbol.startswith("_body:")
+
+
+def test_boundary_untraced_helper_stays_quiet():
+    files = {"src/repro/kernels/k.py": textwrap.dedent("""
+        def save_cache(path, payload):
+            with open(path, "w") as f:
+                f.write(payload)
+    """)}
+    assert boundaries.check_traced_tree(files) == []
+
+
+# ---------------------------------------------------------------------------
+# dtypeflow (RL3xx)
+# ---------------------------------------------------------------------------
+
+def test_dtypeflow_flags_code_word_float_cast():
+    src = textwrap.dedent("""
+        def f(p):
+            codes = p["codes"]
+            return codes.astype(jnp.float32)
+    """)
+    fs = dtypeflow.check_source("src/repro/core/x.py", src)
+    assert _codes(fs) == {"RL301"}
+
+
+def test_dtypeflow_taint_through_producer_and_assignment():
+    src = textwrap.dedent("""
+        def f(stream):
+            w = unpack_code_words(stream)
+            v = w
+            return jnp.asarray(v, dtype=jnp.float16)
+    """)
+    fs = dtypeflow.check_source("src/repro/core/x.py", src)
+    assert _codes(fs) == {"RL301"}
+
+
+def test_dtypeflow_comparison_launders_taint():
+    """The kernels' one-hot build casts the BOOLEAN of codes == iota."""
+    src = textwrap.dedent("""
+        def f(codes, iota):
+            oh = (codes[:, None] == iota).astype(jnp.float32)
+            return oh
+    """)
+    assert dtypeflow.check_source("src/repro/kernels/x.py", src) == []
+
+
+def test_dtypeflow_int_casts_are_fine():
+    src = textwrap.dedent("""
+        def f(codes_ref):
+            return codes_ref[...].astype(jnp.int32)
+    """)
+    assert dtypeflow.check_source("src/repro/kernels/x.py", src) == []
+
+
+def test_dtypeflow_flags_narrowed_scale():
+    src = textwrap.dedent("""
+        def f(scale):
+            return scale.astype(jnp.bfloat16)
+    """)
+    fs = dtypeflow.check_source("src/repro/models/x.py", src)
+    assert _codes(fs) == {"RL302"}
+
+
+def test_dtypeflow_f32_scale_is_fine():
+    src = textwrap.dedent("""
+        def f(scale):
+            return scale.astype(jnp.float32)
+    """)
+    assert dtypeflow.check_source("src/repro/models/x.py", src) == []
+
+
+# ---------------------------------------------------------------------------
+# envdocs (RL4xx) — seeded drift in a temp tree
+# ---------------------------------------------------------------------------
+
+def _env_tree(tmp_path, doc_vars, reader_src):
+    serve = tmp_path / "src" / "repro" / "serve"
+    serve.mkdir(parents=True)
+    rows = "\n".join(f"``{v}``  doc row" for v in doc_vars)
+    (serve / "__init__.py").write_text(f'"""env table\n\n{rows}\n"""\n')
+    (tmp_path / "src" / "m.py").write_text(reader_src)
+    return str(tmp_path)
+
+
+def test_envdocs_flags_undocumented_read(tmp_path):
+    root = _env_tree(tmp_path, [], textwrap.dedent("""
+        import os
+        _ENV_VAR = "REPRO_INDIRECT"
+        A = os.environ.get("REPRO_DIRECT")
+        B = os.getenv(_ENV_VAR)
+        C = os.environ["REPRO_SUBSCRIPT"]
+    """))
+    fs = envdocs.check(root)
+    assert _codes(fs) == {"RL401"}
+    assert {f.symbol for f in fs} == {"REPRO_DIRECT", "REPRO_INDIRECT",
+                                      "REPRO_SUBSCRIPT"}
+
+
+def test_envdocs_flags_stale_doc_row(tmp_path):
+    root = _env_tree(tmp_path, ["REPRO_GONE"], "import os\n")
+    fs = envdocs.check(root)
+    assert _codes(fs) == {"RL402"}
+    assert fs[0].symbol == "REPRO_GONE"
+
+
+def test_envdocs_documented_read_is_quiet(tmp_path):
+    root = _env_tree(tmp_path, ["REPRO_OK"],
+                     'import os\nA = os.environ.get("REPRO_OK")\n')
+    assert envdocs.check(root) == []
+
+
+# ---------------------------------------------------------------------------
+# baseline machinery
+# ---------------------------------------------------------------------------
+
+def test_baseline_roundtrip_and_todo_rejection(tmp_path):
+    path = str(tmp_path / "baseline.json")
+    f = Finding("RL999", "a.py", "sym", "msg")
+    save_baseline(path, [f])
+    with pytest.raises(ValueError, match="TODO"):
+        load_baseline(path)       # fresh entries need a human justification
+    save_baseline(path, [f], previous={f.key: "known and accepted"})
+    baseline = load_baseline(path)
+    assert baseline == {f.key: "known and accepted"}
+    new, suppressed, stale = split_findings([f], baseline)
+    assert (new, suppressed) == ([], [f])
+    _, _, stale = split_findings([], baseline)
+    assert stale == [f.key]
+
+
+def test_baseline_bad_schema_rejected(tmp_path):
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps({"schema": "nope", "suppressions": []}))
+    with pytest.raises(ValueError, match="schema"):
+        load_baseline(str(p))
+
+
+# ---------------------------------------------------------------------------
+# the committed tree is clean (modulo the committed baseline)
+# ---------------------------------------------------------------------------
+
+def test_fast_checkers_clean_on_real_tree():
+    """AST checkers over the real tree: everything not in the committed
+    baseline must be quiet."""
+    findings = run_checks(ROOT, ["boundaries", "dtypeflow", "envdocs"])
+    baseline = load_baseline(os.path.join(ROOT, "reprolint_baseline.json"))
+    new, _, _ = split_findings(findings, baseline)
+    assert new == [], "\n".join(f.render() for f in new)
+
+
+@pytest.mark.slow
+def test_full_lint_clean_on_real_tree():
+    """The full gate (incl. the eval_shape sweep over the config zoo)
+    reports nothing outside the committed baseline, and the baseline
+    carries no stale entries."""
+    findings = run_checks(ROOT)
+    baseline = load_baseline(os.path.join(ROOT, "reprolint_baseline.json"))
+    new, suppressed, stale = split_findings(findings, baseline)
+    assert new == [], "\n".join(f.render() for f in new)
+    assert stale == []
+    assert len(suppressed) == len(baseline)

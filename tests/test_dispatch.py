@@ -249,3 +249,83 @@ def test_backends_agree_under_jit_and_vmap():
                           xs)
     np.testing.assert_allclose(outs["pallas_interpret"], outs["scatter"],
                                rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Autotune cache validation (satellite: a bad file must fail loudly and
+# must never clear or half-populate the tuned tables)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("payload", [
+    ["not", "a", "dict"],
+    {"schema": "autotune_cache_v1",
+     "entries": [{"regime": "warp9", "nb_bucket": 8, "n_bucket": 128,
+                  "tiles": [8, 8, 128]}]},                 # unknown regime
+    {"schema": "autotune_cache_v1",
+     "entries": [{"regime": "decode", "nb_bucket": 8, "n_bucket": 128,
+                  "tiles": [8, 8]}]},                      # wrong tile arity
+    {"schema": "autotune_cache_v1",
+     "entries": [{"regime": "decode", "nb_bucket": 8, "n_bucket": 128,
+                  "tiles": [8, -8, 128]}]},                # non-positive tile
+    {"schema": "autotune_cache_v1",
+     "entries": [{"regime": "decode", "nb_bucket": 0, "n_bucket": 128,
+                  "tiles": [8, 8, 128]}]},                 # bad bucket
+    {"schema": "autotune_cache_v1", "entries": [],
+     "attn_entries": [{"regime": "prefill", "c_bucket": 32,
+                       "tile_c": True}]},                  # bool is not int
+])
+def test_autotune_cache_rejects_malformed(tmp_path, payload):
+    import json as _json
+    from repro.kernels import dispatch
+    path = tmp_path / "autotune_cache.json"
+    path.write_text(_json.dumps(payload))
+    with pytest.raises(dispatch.AutotuneCacheError):
+        dispatch.load_autotune_cache(str(path))
+
+
+def test_autotune_cache_bad_file_never_mutates_tables(tmp_path):
+    """Validation runs BEFORE any table mutation: a file that is half
+    valid must not clear the tables or apply its valid prefix."""
+    import json as _json
+    from repro.kernels import dispatch
+    from repro.kernels.paged_attention import TUNED_ATTN_TILES
+    good_then_bad = {
+        "schema": "autotune_cache_v1", "host_backend": None,
+        "entries": [
+            {"regime": "decode", "nb_bucket": 8, "n_bucket": 128,
+             "tiles": [8, 8, 128]},                        # valid
+            {"regime": "decode", "nb_bucket": 8, "n_bucket": 256,
+             "tiles": [8, 8, "wide"]},                     # invalid
+        ]}
+    path = tmp_path / "autotune_cache.json"
+    path.write_text(_json.dumps(good_then_bad))
+    snapshot = dict(dispatch.TUNED_TILES)
+    sentinel = ("prefill", 9999, 9999)
+    dispatch.TUNED_TILES[sentinel] = (128, 8, 256)
+    attn_snapshot = dict(TUNED_ATTN_TILES)
+    try:
+        with pytest.raises(dispatch.AutotuneCacheError):
+            dispatch.load_autotune_cache(str(path), clear=True)
+        # the valid first entry was NOT applied, clear= did NOT run
+        assert ("decode", 8, 128) not in dispatch.TUNED_TILES
+        assert dispatch.TUNED_TILES[sentinel] == (128, 8, 256)
+        assert TUNED_ATTN_TILES == attn_snapshot
+        # corrupt JSON maps to the same named error
+        path.write_text("{not json")
+        with pytest.raises(dispatch.AutotuneCacheError):
+            dispatch.load_autotune_cache(str(path))
+    finally:
+        dispatch.TUNED_TILES.clear()
+        dispatch.TUNED_TILES.update(snapshot)
+
+
+def test_validate_autotune_payload_returns_typed_entries():
+    from repro.kernels import dispatch
+    tuned, attn = dispatch.validate_autotune_payload({
+        "schema": "autotune_cache_v1",
+        "entries": [{"regime": "small", "nb_bucket": 16, "n_bucket": 512,
+                     "tiles": [32, 8, 256]}],
+        "attn_entries": [{"regime": "prefill", "c_bucket": 32,
+                          "tile_c": 16}]})
+    assert tuned == {("small", 16, 512): (32, 8, 256)}
+    assert attn == {("prefill", 32): 16}
