@@ -44,6 +44,13 @@ column carries the headline quantity of that figure (speedup, ratio, k*).
                 an equal-KV-memory mixed-traffic run the dense
                 layout must reject at submit() — written to the
                 ``paged`` section of BENCH_prefill.json
+  durability    the durable serve plane: seeded kill-at-a-
+                random-tick soak with torn/flip/fsync disk
+                faults live, recovery latency / journal-replay
+                length / checkpoint size per seed, a corrupted-
+                newest-checkpoint fallback leg, hard asserts on
+                zero leaks + bitwise greedy continuity — written
+                to the ``durability`` section of BENCH_serve.json
   paged_attn_bench  the in-place paged-attention trajectory:
                 per-decode-step KV bytes moved (kernel vs the
                 gather path's materialize-then-score) at true
@@ -712,6 +719,205 @@ def chaos_bench(json_path: str = "BENCH_serve.json", smoke: bool = False):
     return section
 
 
+def durability_bench(json_path: str = "BENCH_serve.json",
+                     smoke: bool = False):
+    """Durable-serve soak -> the ``durability`` section of BENCH_serve.json
+    (``--only durability``).
+
+    Per seed: mixed traffic on the constrained paged geometry with
+    on-disk checkpoints every 2 ticks and write-ahead journaling, disk
+    faults live (seeded torn/flip/fsync ordinals), KILLED at a seeded
+    random tick — the process state is abandoned, only the directory
+    survives.  Recovery boots a FRESH engine from disk
+    (``durability.recover_scheduler``: newest valid checkpoint +
+    journal-tail replay, I1-I8 audited) and drains.  Hard asserts:
+
+    * every request reaches a terminal state, OK everywhere;
+    * pre-kill completions are reported verbatim off the journal (same
+      exact tokens), survivors' greedy streams are bitwise-equal to a
+      fault-free solo run — crash + disk faults changed nothing;
+    * zero block leaks on the recovered engine, auditor quiet.
+
+    Reported per seed: recovery latency, journal-replay length,
+    checkpoint size, checkpoints skipped.  A final leg truncates the
+    newest checkpoint mid-file and asserts recovery degrades to the
+    previous one (fallback ladder) instead of raising, still bitwise.
+    """
+    import dataclasses
+    import shutil
+    import tempfile
+    import jax
+    from repro.config import ServeConfig, get_config
+    from repro.models import transformer as tfm
+    from repro.serve import audit, durability, faults
+    from repro.serve.engine import Engine, Request, RequestStatus
+    from repro.serve.frontend import PriorityScheduler
+
+    cfg = dataclasses.replace(
+        get_config("falcon3-3b-1.58bit").reduced(), vocab_size=256,
+        num_layers=2)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    tree = tfm.serve_params(params, cfg)
+    n_req = 3 if smoke else 6
+    max_new = 12
+    seeds = (0,) if smoke else (0, 1)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, 9).astype(np.int32)
+               for _ in range(n_req)]
+    ref = Engine(cfg, tree, ServeConfig(max_seq_len=32, batch_size=1,
+                                        prefill_chunk=8))
+    want = {}
+    for i, p in enumerate(prompts):                    # the fault-free runs
+        ref.reset()
+        want[i] = np.asarray(ref.generate(p[None, :], max_new)[0])
+
+    section = {
+        "meta": {"schema": "bench_durability_v1", "smoke": smoke,
+                 "requests": n_req, "max_new": max_new,
+                 "checkpoint_interval": 2, "audit_interval": 1,
+                 "note": ("kill-at-random-tick soak with torn/flip/fsync "
+                          "disk faults live; recovery = fresh engine + "
+                          "newest valid checkpoint + journal-tail replay, "
+                          "asserted bitwise against fault-free solo runs")},
+        "seeds": {},
+    }
+    root = tempfile.mkdtemp(prefix="repro-durability-")
+    try:
+        for seed in seeds:
+            srng = np.random.default_rng(seed)
+            # ordinals scaled to the write volume (n_req submit appends +
+            # a checkpoint temp every 2 ticks) so every seam can land
+            # before the kill
+            spec = (f"torn@{srng.integers(2, n_req + 1)},"
+                    f"flip@{srng.integers(n_req + 1, n_req + 3)},"
+                    f"fsync@{srng.integers(2, 6)}")
+            kill_tick = int(srng.integers(4, 10))
+            cdir = os.path.join(root, f"seed{seed}")
+            scfg = ServeConfig(max_seq_len=32, batch_size=3,
+                               kv_block_size=8, kv_num_blocks=12,
+                               prefill_chunk=8, paged_attn="gather",
+                               audit_interval=1, checkpoint_dir=cdir,
+                               checkpoint_interval=2)
+            plan = faults.FaultPlan.parse(spec)
+            eng = Engine(cfg, tree, scfg)
+            sched = PriorityScheduler(eng, fault_plan=plan)
+            for i, p in enumerate(prompts):
+                sched.submit(Request(rid=i, prompt=p.copy(),
+                                     max_new=max_new, priority=i % 3))
+            finished: list = []
+            for _ in range(kill_tick):                 # ... then SIGKILL:
+                sched.tick(finished)                   # nothing cleans up
+            pre_kill = {r.rid: list(r.generated) for r in finished}
+            fired = dict(plan.fired)
+            assert sum(fired.values()) >= 1, \
+                f"vacuous disk-fault plan {spec!r}: nothing fired"
+
+            eng2 = Engine(cfg, tree, scfg)
+            t0 = time.perf_counter()
+            sched2, report = durability.recover_scheduler(eng2)
+            rec_dt = time.perf_counter() - t0
+            got = {}
+            for r in report["completed"]:              # journaled verbatim
+                assert r.status is RequestStatus.OK
+                assert list(r.generated) == pre_kill[r.rid], \
+                    "recovery recomputed a journaled terminal"
+                got[r.rid] = list(r.generated)
+            t0 = time.perf_counter()
+            done = sched2.run()
+            dt = time.perf_counter() - t0
+            toks = 0
+            for r in done:
+                assert r.status is RequestStatus.OK, (r.rid, r.status)
+                toks += len(r.generated)
+                got[r.rid] = list(r.generated)
+            # a request is lost ONLY when the faults destroyed its every
+            # durable record (torn submit append + no covering checkpoint)
+            # — durability cannot resurrect data that never hit disk.
+            # Every SURVIVOR must be bitwise-identical to the fault-free
+            # solo run (the ISSUE's continuity bar).
+            lost = sorted(set(range(n_req)) - set(got))
+            assert got, "recovery lost every request"
+            if lost:
+                assert (fired["torn"] + fired["flip"]
+                        + fired["fsync"]) >= 1, \
+                    f"requests {lost} lost without any disk fault"
+            for i in sorted(got):                      # bitwise continuity
+                np.testing.assert_array_equal(np.asarray(got[i]), want[i])
+            assert eng2.pool.free_count == eng2.pool.num_blocks, "leaked"
+            assert eng2.pool.live_refs == 0
+            audit.audit_scheduler(sched2)
+            st = sched2._ckpt_store
+            ckpt_bytes = os.path.getsize(
+                st._ckpt_path(st.list_checkpoints()[-1]))
+            section["seeds"][str(seed)] = {
+                "spec": spec, "kill_tick": kill_tick, "fired": fired,
+                "completed_pre_kill": len(pre_kill),
+                "checkpoint_seq": report["checkpoint_seq"],
+                "checkpoints_skipped": report["checkpoints_skipped"],
+                "journal_replay_events": report["journal_events"],
+                "journal_truncated": report["journal_truncated"],
+                "requeued": report["requeued"],
+                "resumed_inflight": report["resumed_inflight"],
+                "lost_to_faulted_writes": lost,
+                "recovery_latency_ms": round(rec_dt * 1e3, 2),
+                "checkpoint_bytes": ckpt_bytes,
+                "drain_tokens_per_s": round(toks / dt, 2),
+                "token_parity": True, "zero_leaks": True,
+            }
+            emit(f"durability_seed{seed}", rec_dt * 1e6,
+                 f"replayed={report['journal_events']};"
+                 f"skipped={report['checkpoints_skipped']};"
+                 f"ckpt_bytes={ckpt_bytes};"
+                 f"fired={sum(fired.values())}")
+
+        # -- corrupted-newest-checkpoint fallback leg -----------------------
+        cdir = os.path.join(root, "fallback")
+        scfg = ServeConfig(max_seq_len=32, batch_size=3, kv_block_size=8,
+                           kv_num_blocks=12, prefill_chunk=8,
+                           paged_attn="gather", audit_interval=1,
+                           checkpoint_dir=cdir, checkpoint_interval=2)
+        eng = Engine(cfg, tree, scfg)
+        sched = PriorityScheduler(eng)
+        for i in range(3):
+            sched.submit(Request(rid=i, prompt=prompts[i].copy(),
+                                 max_new=max_new))
+        finished = []
+        for _ in range(6):
+            sched.tick(finished)
+        st = sched._ckpt_store
+        seqs = st.list_checkpoints()
+        assert len(seqs) >= 2, "fallback leg needs two checkpoints"
+        path = st._ckpt_path(seqs[-1])
+        with open(path, "rb") as f:
+            data = f.read()
+        with open(path, "wb") as f:                    # torn newest
+            f.write(data[:len(data) // 2])
+        eng2 = Engine(cfg, tree, scfg)
+        t0 = time.perf_counter()
+        sched2, report = durability.recover_scheduler(eng2)
+        rec_dt = time.perf_counter() - t0
+        assert report["checkpoints_skipped"] == 1, "fallback did not engage"
+        assert report["checkpoint_seq"] == seqs[-2]
+        got = {r.rid: list(r.generated) for r in report["completed"]}
+        for r in sched2.run():
+            got[r.rid] = list(r.generated)
+        for i in range(3):
+            np.testing.assert_array_equal(np.asarray(got[i]), want[i])
+        assert eng2.pool.free_count == eng2.pool.num_blocks
+        section["fallback"] = {
+            "corrupted_seq": seqs[-1], "restored_seq": seqs[-2],
+            "checkpoints_skipped": 1,
+            "recovery_latency_ms": round(rec_dt * 1e3, 2),
+            "token_parity": True,
+        }
+        emit("durability_fallback", rec_dt * 1e6,
+             f"skipped=1;restored_seq={seqs[-2]};token_parity=True")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    _merge_json(json_path, {"durability": section})
+    return section
+
+
 def prefill_bench(json_path: str = "BENCH_prefill.json", smoke: bool = False):
     """Prefill-path trajectory benchmark -> BENCH_prefill.json.
 
@@ -1280,6 +1486,8 @@ def main() -> None:
         "request_plane": lambda: request_plane_bench(args.json,
                                                      smoke=args.smoke),
         "chaos": lambda: chaos_bench(args.json, smoke=args.smoke),
+        "durability": lambda: durability_bench(args.json,
+                                               smoke=args.smoke),
         "prefill": lambda: prefill_bench(args.prefill_json,
                                          smoke=args.smoke),
         "paged": lambda: paged_bench(args.prefill_json, smoke=args.smoke),

@@ -25,7 +25,11 @@
 # poisoning, clock jumps) over mixed traffic with the invariant auditor
 # at interval 1 and asserts zero leaks, terminal states everywhere,
 # bitwise parity for unfaulted requests, and a bitwise-continuous
-# snapshot/restore resume.
+# snapshot/restore resume.  durability kills the plane at a seeded
+# random tick with torn/flip/fsync disk faults live and asserts
+# recovery from disk (newest valid checkpoint + journal replay) is
+# leak-free and bitwise-continuous, plus a corrupted-newest-checkpoint
+# fallback leg.
 # Timing-sensitive perf comparisons (chunked > scan, paged >= dense,
 # 1.5x >= 1.0x) are recorded-and-warned on a loaded machine;
 # BENCH_STRICT=1 restores the hard asserts.  The asyncio frontend tests
@@ -33,7 +37,8 @@
 # guard, so a dead serve loop fails fast instead of hanging this script.
 # The committed BENCH_serve.json / BENCH_prefill.json are produced by the
 # full runs (`python benchmarks/run.py --only
-# serve|request_plane|prefill|paged|paged_attn|chaos`, merge-preserving
+# serve|request_plane|prefill|paged|paged_attn|chaos|durability`,
+# merge-preserving
 # writes into both JSONs) and tracked per PR.
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -64,7 +69,7 @@ python -m repro.analysis --fail-on-findings
 echo "== serve-plane suites under REPRO_AUDIT_INTERVAL=1 =="
 REPRO_AUDIT_INTERVAL=1 python -m pytest -x -q ${MARKER[@]+"${MARKER[@]}"} \
     tests/test_serve.py tests/test_paged.py tests/test_frontend.py \
-    tests/test_chaos.py
+    tests/test_chaos.py tests/test_durability.py
 
 if [[ "${1:-}" != "--fast" ]]; then
     echo "== serve smoke benchmark =="
@@ -84,6 +89,9 @@ if [[ "${1:-}" != "--fast" ]]; then
         --json /tmp/BENCH_serve_smoke.json
     echo "== chaos smoke soak =="
     PYTHONPATH="src:." python benchmarks/run.py --only chaos --smoke \
+        --json /tmp/BENCH_serve_smoke.json
+    echo "== durability smoke soak =="
+    PYTHONPATH="src:." python benchmarks/run.py --only durability --smoke \
         --json /tmp/BENCH_serve_smoke.json
 fi
 

@@ -211,6 +211,23 @@ class ServeConfig:
                                       # raises AuditError on corruption);
                                       # $REPRO_AUDIT_INTERVAL outranks;
                                       # 0 disables
+    # --- durability (repro.serve.durability; priority scheduler only) ---
+    checkpoint_dir: str = ""          # directory for on-disk checkpoints +
+                                      # the write-ahead request journal;
+                                      # $REPRO_CHECKPOINT_DIR outranks;
+                                      # "" disables durability entirely
+    checkpoint_interval: int = 0      # write a checkpoint every K scheduler
+                                      # ticks ($REPRO_CHECKPOINT_INTERVAL
+                                      # outranks; 0 = no tick-driven
+                                      # checkpoints — the journal still
+                                      # captures every request event)
+    checkpoint_interval_s: float = 0.0
+                                      # ... and/or every S seconds of the
+                                      # scheduler's (injectable) clock;
+                                      # 0 disables the wall-clock trigger
+    checkpoint_keep: int = 3          # keep-last-K checkpoint retention
+                                      # (older ones + their journal epochs
+                                      # are pruned after each publish)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -20,7 +20,15 @@ KV cache, and the async request plane.
 * ``audit``    — ``audit_scheduler`` / ``audit_pool``: tick-time
   re-derivation of every host-side invariant (refcounts, hash registry,
   warm list, table rows, position mirror, overcommit budget), raising a
-  diagnosable ``AuditError`` at the first inconsistent tick.
+  diagnosable ``AuditError`` at the first inconsistent tick;
+  ``audit_snapshot`` is the disk-side sibling (structural vetting of a
+  decoded checkpoint before ``restore()`` trusts it).
+* ``durability`` — the disk half of crash safety: ``CheckpointStore``
+  (versioned, CRC-checksummed checkpoints published atomically via
+  temp-file + fsync + rename, monotonic sequence numbers, keep-last-K
+  retention) plus a write-ahead request journal between checkpoints,
+  and ``recover_scheduler`` (newest VALID checkpoint + journal-tail
+  replay, corruption falls back instead of raising).
 
 Request-plane guide
 -------------------
@@ -113,12 +121,15 @@ Under pressure the plane walks this ladder, gentlest first:
 ``REPRO_FAULTS``       Generalized multi-seam fault plan (outranks
                        ``ServeConfig.fault_plan``).  Comma-separated
                        spec, grammar ``alloc@N | prefill@N |
-                       poison@T[:S] | clock+SEC@T | slow+SEC@T``:
+                       poison@T[:S] | clock+SEC@T | slow+SEC@T |
+                       torn@N | flip@N | fsync@N``:
                        fail the Nth allocator call / Nth admission
                        prefill, NaN-poison one active slot's decode
                        logits at tick T, jump the scheduler clock
-                       forward at the start of tick T, or inflate tick
-                       T's measured duration.  ``faults.FaultPlan
+                       forward at the start of tick T, inflate tick
+                       T's measured duration, tear (half-truncate) or
+                       bit-flip the Nth durable disk write, or fail
+                       the Nth fsync.  ``faults.FaultPlan
                        .random(seed)`` prints a replayable spec — a
                        failing chaos soak reproduces with
                        ``REPRO_FAULTS=<printed spec>``.
@@ -127,6 +138,20 @@ Under pressure the plane walks this ladder, gentlest first:
                        0 disables).  CI reruns the serve suites at
                        interval 1, so every green path also proves the
                        auditor quiet.
+``REPRO_CHECKPOINT_DIR``  Directory for the durable serve plane's
+                       on-disk checkpoints + write-ahead request
+                       journal (outranks ``ServeConfig
+                       .checkpoint_dir``; empty disables durability).
+                       Setting it turns on write-ahead journaling of
+                       every submit / terminal transition / preemption
+                       on the ``PriorityScheduler``.
+``REPRO_CHECKPOINT_INTERVAL``  Write a checkpoint every K scheduler
+                       ticks (outranks ``ServeConfig
+                       .checkpoint_interval``; 0 = no tick-driven
+                       checkpoints — the journal still captures every
+                       request event, and ``ServeConfig
+                       .checkpoint_interval_s`` can drive wall-clock
+                       checkpoints independently).
 ``REPRO_ANALYSIS_BASELINE``  Path of the reprolint suppression
                        baseline consulted by ``python -m repro
                        .analysis`` (default
@@ -178,6 +203,56 @@ chaos`` is the canned version: a randomized-but-deterministic fault plan
 over mixed traffic with the auditor at interval 1, asserting zero leaks,
 no wedges, terminal states for every request, and bitwise token parity
 for every request the chaos did not deliberately fail.
+
+Recovery after a crash
+----------------------
+With a checkpoint directory configured (``ServeConfig.checkpoint_dir``
+or ``$REPRO_CHECKPOINT_DIR``), the plane leaves a durable trail:
+
+* ``<dir>/ckpt-<seq:08d>`` — atomic, CRC-checksummed checkpoints of the
+  full ``snapshot()`` dict (last ``checkpoint_keep``, newest = highest
+  sequence number), written every ``checkpoint_interval`` ticks and/or
+  ``checkpoint_interval_s`` seconds;
+* ``<dir>/wal-<seq:08d>`` — the write-ahead journal epoch holding every
+  submit / terminal / preemption event since checkpoint ``seq``
+  published (``wal-0``: since boot).
+
+To force-restore after a kill, construct a FRESH engine with the same
+model/serve config and boot from disk::
+
+    fe = AsyncFrontend.recover(engine, dirpath=...)   # or rely on
+    # $REPRO_CHECKPOINT_DIR; fe.recovery_report says what happened
+
+or, sync-side, ``durability.recover_scheduler(engine, dirpath=...)``.
+The fallback ladder, gentlest first:
+
+1. **Newest valid checkpoint** — restored (``audit_snapshot`` vets the
+   decoded dict first), then the journal tail (epochs >= its seq)
+   replays: post-checkpoint submits re-enter the queue, terminal events
+   settle verbatim with their exact journaled tokens (never recomputed),
+   preemption counts are re-applied.
+2. **Corrupt newest → older** — a checkpoint failing CRC / structure
+   checks is skipped (counted in ``recovery_report
+   ["checkpoints_skipped"]``) and the next-older one loads.  Torn
+   writes, bit flips, and record-boundary truncation all land here —
+   recovery degrades, it does not raise.
+3. **No valid checkpoint** — empty plane + full journal replay from
+   ``wal-0``.
+4. **Refusal** — a VALID checkpoint whose engine fingerprint (model
+   name, seq len, batch, block geometry) does not match raises
+   ``ValueError``: restoring another engine's KV would be silent
+   corruption, so wrong-engine states refuse where corrupt ones fall
+   back.
+
+Every recovery runs the I1-I8 ``audit_scheduler`` pass before the plane
+is handed back, then writes a fresh checkpoint — rotating onto a clean
+journal epoch so a torn pre-crash tail cannot precede post-recovery
+events.  Inflight requests resume via the PREEMPTED re-admission path:
+their prompt blocks warm-hit from the checkpoint's exported KV, only the
+generated tail re-prefills, and greedy tokens continue bitwise where the
+crash cut them.  ``benchmarks/run.py --only durability`` is the canned
+proof: a seeded kill-at-random-tick soak under torn/flip/fsync disk
+faults asserting zero block leaks and bitwise continuity.
 
 The ``REPRO_PAGED_ATTN`` switch
 -------------------------------

@@ -35,6 +35,11 @@ I8  **Overcommit budget** (priority plane) — the sum of running
     requests' worst-case block demands stays within
     ``overcommit * num_blocks``.
 
+:func:`audit_snapshot` is the disk-side sibling (S1-S4): structural
+vetting of a decoded checkpoint snapshot before ``restore()`` trusts it
+— recovery (``durability.recover_scheduler``) runs it on every loaded
+checkpoint, then ``audit_scheduler`` on the rebuilt plane.
+
 Enable via ``ServeConfig.audit_interval=K`` (audit every K ticks;
 0 disables) or the ``$REPRO_AUDIT_INTERVAL`` override — CI runs the
 whole serve test suite at interval 1 so every green path also proves the
@@ -49,7 +54,7 @@ from typing import Optional
 import jax
 import numpy as np
 
-__all__ = ["AuditError", "audit_pool", "audit_scheduler"]
+__all__ = ["AuditError", "audit_pool", "audit_scheduler", "audit_snapshot"]
 
 
 class AuditError(RuntimeError):
@@ -137,6 +142,91 @@ def audit_pool(pool, slot_blocks: Optional[list] = None) -> None:
         raise AuditError("I2", f"slots reference free/warm blocks "
                          f"{sorted(bad)} — alloc could hand them out "
                          f"(use-after-free)", state)
+
+
+def audit_snapshot(snap: dict) -> None:
+    """Structural audit of a DECODED snapshot dict (S1-S4) before it is
+    restored onto an engine — the gate between "the checkpoint's CRCs
+    were fine" and "the scheduler will trust this state".  A snapshot
+    failing here is treated by recovery like corruption would be one
+    layer down: surfaced loudly, never silently restored.
+
+    S1  required keys + basic types (``fingerprint``/``tick_no``/
+        ``stats``/``key``/``queue``/``inflight``);
+    S2  every request dict carries a usable identity (int ``rid``,
+        list ``prompt``, positive ``max_new``, list ``generated`` not
+        exceeding ``max_new``);
+    S3  rid uniqueness across queue + inflight;
+    S4  ``registered`` entries are ``[hash_hex, bid]`` with unique bids
+        and unique hashes, and registered blocks come WITH their ``kv``
+        payloads (encoded-array dicts) — a warm list without KV would
+        hash-hit garbage.
+    """
+    state = {"snap_keys": sorted(snap) if isinstance(snap, dict) else None}
+    if not isinstance(snap, dict):
+        raise AuditError("S1", f"snapshot is {type(snap).__name__}, not a "
+                         f"dict", state)
+    for k, ty in (("fingerprint", (list, tuple)), ("tick_no", int),
+                  ("stats", dict), ("key", list), ("queue", list),
+                  ("inflight", list)):
+        if not isinstance(snap.get(k), ty):
+            raise AuditError(
+                "S1", f"snapshot[{k!r}] missing or not "
+                f"{getattr(ty, '__name__', ty)} "
+                f"(got {type(snap.get(k)).__name__})", state)
+    rids = []
+    for where, reqs in (("queue", snap["queue"]),
+                        ("inflight", snap["inflight"])):
+        for d in reqs:
+            state["bad_request"] = d if isinstance(d, dict) else repr(d)
+            if not isinstance(d, dict) or not isinstance(d.get("rid"), int):
+                raise AuditError("S2", f"{where} entry without an int rid",
+                                 state)
+            if not isinstance(d.get("prompt"), list) or not d["prompt"]:
+                raise AuditError("S2", f"{where} request {d['rid']}: prompt "
+                                 f"missing or empty", state)
+            gen = d.get("generated", [])
+            if not isinstance(gen, list) \
+                    or not isinstance(d.get("max_new"), int) \
+                    or d["max_new"] <= 0 or len(gen) > d["max_new"]:
+                raise AuditError(
+                    "S2", f"{where} request {d['rid']}: generated/max_new "
+                    f"inconsistent ({len(gen) if isinstance(gen, list) else gen!r} "
+                    f"vs {d.get('max_new')!r})", state)
+            rids.append(d["rid"])
+    state.pop("bad_request", None)
+    if len(set(rids)) != len(rids):
+        dup = sorted({r for r in rids if rids.count(r) > 1})
+        state["rids"] = rids
+        raise AuditError("S3", f"duplicate rids across snapshot queue + "
+                         f"inflight: {dup}", state)
+    reg = snap.get("registered") or []
+    kv = snap.get("kv") or {}
+    state["registered"] = len(reg)
+    state["kv_entries"] = len(kv)
+    bids, hashes = [], []
+    for entry in reg:
+        if (not isinstance(entry, (list, tuple)) or len(entry) != 2
+                or not isinstance(entry[0], str)
+                or not isinstance(entry[1], int)):
+            state["bad_entry"] = repr(entry)
+            raise AuditError("S4", "registered entry is not [hash_hex, bid]",
+                             state)
+        hashes.append(entry[0])
+        bids.append(entry[1])
+    if len(set(bids)) != len(bids) or len(set(hashes)) != len(hashes):
+        raise AuditError("S4", f"registered bids/hashes not unique "
+                         f"({len(bids)} entries)", state)
+    if reg and not kv:
+        raise AuditError("S4", f"{len(reg)} registered blocks but no kv "
+                         f"payloads — restoring would warm-hit garbage",
+                         state)
+    for k, v in kv.items():
+        if not (isinstance(v, dict) and v.get("__nd__")
+                and "dtype" in v and "shape" in v and "data" in v):
+            state["bad_kv_key"] = k
+            raise AuditError("S4", f"kv[{k!r}] is not an encoded array",
+                             state)
 
 
 def audit_scheduler(sched) -> None:

@@ -1,0 +1,533 @@
+"""Durable serve plane: atomic on-disk checkpoints + write-ahead journal.
+
+PR 7 made the plane crash-*safe* — ``PriorityScheduler.snapshot()`` is a
+complete, fingerprinted host-state export and ``restore()`` resumes it
+bitwise-continuously on a fresh engine — but nothing ever touched disk,
+so a process crash still lost everything.  This module is the disk half:
+the snapshot dict (now fully JSON-serializable) rides a versioned,
+checksummed on-disk format with a write-ahead request journal between
+checkpoints, so recovery after a kill is
+
+    load newest VALID checkpoint  +  replay the journal tail
+
+with bounded work loss (at most the events after the last good record).
+
+On-disk format
+--------------
+Everything is built from one **record** frame::
+
+    <u32 payload_len> <u32 crc32(payload)> <payload bytes>
+
+Payloads are canonical JSON (``sort_keys=True``) — never pickle, so a
+corrupted record is rejected by the CRC before any decode runs.  A
+reader iterates records and STOPS at the first bad one (short header,
+length past EOF, CRC mismatch, undecodable JSON): torn writes truncate,
+they never crash.
+
+* **Checkpoint** ``ckpt-<seq:08d>`` — file magic ``RPCK`` + ``<u32
+  version>``, then exactly three records: a header (``kind/seq/
+  version``), the snapshot state, and an end marker carrying the record
+  count.  A checkpoint missing any of the three (truncated at a record
+  boundary) is invalid as a whole — recovery falls back to the previous
+  sequence number.  Written atomically: temp file in the same directory
+  → write → fsync → rename → directory fsync.  A failed fsync ABORTS the
+  publish (the temp file is deleted, the previous checkpoint stays
+  newest); a torn/corrupted write that fsyncs fine publishes a bad file,
+  which is exactly what the fallback ladder is for.
+* **Journal** ``wal-<seq:08d>`` — file magic ``RPWL`` + version, then
+  one record per event, appended as they happen.  Epoch ``seq`` holds
+  the events since checkpoint ``seq`` published (``wal-0``: since
+  boot).  Events: ``submit`` (full request), ``terminal`` (final status
+  + exact generated tokens — a post-checkpoint completion is reported
+  verbatim on recovery, never recomputed), ``preempt`` (preemption
+  count).  Replay walks epochs ``loaded_seq, loaded_seq+1, ...`` in
+  order and truncates at the first bad record anywhere.
+
+Sequence numbers are monotonic (``max existing + 1``); retention keeps
+the last K checkpoints plus every journal epoch needed to replay from
+the oldest retained one.
+
+Recovery ladder (:func:`recover_scheduler`)
+-------------------------------------------
+1. newest checkpoint, CRC/structure-valid → ``restore()`` + replay its
+   journal tail;
+2. corrupt → next-older checkpoint (each skip is counted in the
+   report);
+3. none valid → empty plane + full journal replay from ``wal-0``.
+
+A checkpoint that is VALID but fingerprint-mismatched is a refusal
+(``ValueError`` from ``restore()``), not a fallback: silently restoring
+another engine's state would resume wrong KV.  After state is rebuilt,
+``audit.audit_snapshot`` has already vetted the decoded dict and
+``audit.audit_scheduler`` (I1-I8) runs before the scheduler is handed
+back — a recovered plane never admits traffic on inconsistent books.
+Recovery finishes by writing a fresh checkpoint (rotating onto a clean
+journal epoch), so a torn pre-crash journal tail can never swallow
+post-recovery events.
+
+Fault seams
+-----------
+The store consumes the :class:`~repro.serve.faults.FaultPlan` disk
+seams: every durable write (one checkpoint temp file, or one journal
+append) advances the ``torn@N``/``flip@N`` write ordinal, every fsync
+advances the ``fsync@N`` ordinal.  ``torn`` halves the buffer, ``flip``
+XORs one bit in the middle, ``fsync`` simulates an fsync failure — the
+chaos soak (``benchmarks/run.py --only durability``) kills the plane at
+a random tick under all three and asserts recovery still lands zero
+leaks and bitwise-continuous greedy tokens.
+
+Operator knobs: ``ServeConfig.checkpoint_dir`` / ``checkpoint_interval``
+/ ``checkpoint_interval_s`` / ``checkpoint_keep``, overridden by
+``$REPRO_CHECKPOINT_DIR`` / ``$REPRO_CHECKPOINT_INTERVAL`` (see the env
+table in ``repro/serve/__init__.py``).
+"""
+from __future__ import annotations
+
+import base64
+import json
+import os
+import struct
+import zlib
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["CheckpointStore", "pack_record", "iter_records",
+           "encode_array", "decode_array", "recover_scheduler",
+           "CKPT_MAGIC", "WAL_MAGIC", "FORMAT_VERSION"]
+
+CKPT_MAGIC = b"RPCK"
+WAL_MAGIC = b"RPWL"
+FORMAT_VERSION = 1
+
+_REC = struct.Struct("<II")            # payload_len, crc32
+_VER = struct.Struct("<I")
+
+
+# -- record framing ---------------------------------------------------------
+
+def pack_record(payload: bytes) -> bytes:
+    """Frame one payload: ``<u32 len><u32 crc32><payload>``."""
+    return _REC.pack(len(payload), zlib.crc32(payload)) + payload
+
+
+def iter_records(data: bytes, offset: int = 0) -> Tuple[List[bytes], bool]:
+    """Parse records from ``data[offset:]``; returns ``(payloads, clean)``.
+
+    Stops at the first bad record — short header, declared length past
+    EOF (torn tail or garbage length), or CRC mismatch (bit flip) —
+    with ``clean=False``.  Never raises on corrupt input.
+    """
+    out: List[bytes] = []
+    n = len(data)
+    while offset < n:
+        if offset + _REC.size > n:
+            return out, False           # torn mid-header
+        ln, crc = _REC.unpack_from(data, offset)
+        if ln > n - offset - _REC.size:
+            return out, False           # torn mid-payload / garbage length
+        payload = data[offset + _REC.size:offset + _REC.size + ln]
+        if zlib.crc32(payload) != crc:
+            return out, False           # flipped bits
+        out.append(payload)
+        offset += _REC.size + ln
+    return out, True
+
+
+def _dumps(obj) -> bytes:
+    return json.dumps(obj, sort_keys=True).encode("utf-8")
+
+
+def _loads(payload: bytes):
+    """JSON-decode one record payload; None on any decode failure (a
+    CRC-valid record with undecodable JSON only happens via version
+    drift — treated exactly like corruption: stop, fall back)."""
+    try:
+        return json.loads(payload.decode("utf-8"))
+    except (ValueError, UnicodeDecodeError):
+        return None
+
+
+# -- array codec (snapshot KV leaves) ---------------------------------------
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes              # jax dependency: bfloat16 et al.
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def encode_array(a: np.ndarray) -> dict:
+    """Lossless JSON encoding of a numpy array (dtype name + shape +
+    base64 of the raw bytes) — exact for every dtype incl. bfloat16,
+    unlike ``tolist()`` float round-trips."""
+    a = np.ascontiguousarray(a)
+    return {"__nd__": True, "dtype": a.dtype.name, "shape": list(a.shape),
+            "data": base64.b64encode(a.tobytes()).decode("ascii")}
+
+
+def decode_array(d: dict) -> np.ndarray:
+    dt = _np_dtype(d["dtype"])
+    buf = base64.b64decode(d["data"])
+    return np.frombuffer(buf, dt).reshape(d["shape"]).copy()
+
+
+# -- the store --------------------------------------------------------------
+
+class CheckpointStore:
+    """Atomic checkpoints + write-ahead journal in one directory.
+
+    ``faults`` is anything exposing the FaultPlan disk hooks
+    (``take_disk_write() -> None|'torn'|'flip'`` and ``take_fsync() ->
+    bool``); None disables injection.  The store is crash-tolerant by
+    construction: a checkpoint is only visible after its temp file
+    fsynced and renamed, and journal corruption truncates replay rather
+    than failing it.
+    """
+
+    def __init__(self, dirpath: str, *, keep: int = 3, faults=None):
+        self.dir = str(dirpath)
+        self.keep = max(1, int(keep))
+        self.faults = faults
+        os.makedirs(self.dir, exist_ok=True)
+        seqs = self.list_checkpoints()
+        self.seq = seqs[-1] if seqs else 0   # newest published checkpoint
+        self._wal_f = None                   # lazily-opened current epoch
+        self.stats = {"checkpoints_written": 0, "checkpoint_failures": 0,
+                      "checkpoint_bytes": 0, "journal_records": 0,
+                      "fsync_failures": 0, "torn_writes": 0, "bit_flips": 0,
+                      "pruned_checkpoints": 0}
+
+    # -- paths / listing ----------------------------------------------------
+
+    def _ckpt_path(self, seq: int) -> str:
+        return os.path.join(self.dir, f"ckpt-{seq:08d}")
+
+    def _wal_path(self, seq: int) -> str:
+        return os.path.join(self.dir, f"wal-{seq:08d}")
+
+    def _scan(self, prefix: str) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith(prefix):
+                try:
+                    out.append(int(name[len(prefix):]))
+                except ValueError:
+                    continue
+        return sorted(out)
+
+    def list_checkpoints(self) -> List[int]:
+        """Published checkpoint sequence numbers, oldest first."""
+        return self._scan("ckpt-")
+
+    def list_journals(self) -> List[int]:
+        return self._scan("wal-")
+
+    # -- faulty-disk write primitives ---------------------------------------
+
+    def _write(self, f, data: bytes) -> None:
+        """One durable write op; the FaultPlan disk-write seam may tear
+        it (truncate to half) or flip one bit mid-buffer."""
+        mode = self.faults.take_disk_write() if self.faults is not None \
+            else None
+        if mode == "torn":
+            data = data[:max(1, len(data) // 2)]
+            self.stats["torn_writes"] += 1
+        elif mode == "flip":
+            b = bytearray(data)
+            b[len(b) // 2] ^= 0x01
+            data = bytes(b)
+            self.stats["bit_flips"] += 1
+        f.write(data)
+
+    def _fsync(self, f) -> bool:
+        """fsync through the fault seam; False = the sync failed (the
+        data may not be on disk — the caller decides what that aborts)."""
+        f.flush()
+        if self.faults is not None and self.faults.take_fsync():
+            self.stats["fsync_failures"] += 1
+            return False
+        try:
+            os.fsync(f.fileno())
+        except OSError:
+            self.stats["fsync_failures"] += 1
+            return False
+        return True
+
+    def _fsync_dir(self) -> None:
+        try:
+            fd = os.open(self.dir, os.O_RDONLY)
+            try:
+                os.fsync(fd)
+            finally:
+                os.close(fd)
+        except OSError:                 # platform without dir fsync: best
+            pass                        # effort — rename is still atomic
+
+    # -- checkpoints --------------------------------------------------------
+
+    def write_checkpoint(self, snap: dict) -> bool:
+        """Atomically publish ``snap`` as checkpoint ``self.seq + 1``.
+
+        Returns True on publish (sequence advanced, journal rotated onto
+        the new epoch, retention pruned).  A failed fsync returns False
+        and leaves the previous checkpoint newest — an un-synced rename
+        could surface a checkpoint that evaporates on power loss, so the
+        publish is abandoned instead.
+        """
+        seq = self.seq + 1
+        records = [
+            _dumps({"kind": "header", "seq": seq,
+                    "version": FORMAT_VERSION}),
+            _dumps({"kind": "state", "snapshot": snap}),
+        ]
+        records.append(_dumps({"kind": "end", "records": len(records) + 1}))
+        blob = CKPT_MAGIC + _VER.pack(FORMAT_VERSION) + b"".join(
+            pack_record(p) for p in records)
+        tmp = os.path.join(self.dir, f".tmp-ckpt-{seq:08d}")
+        try:
+            with open(tmp, "wb") as f:
+                self._write(f, blob)
+                ok = self._fsync(f)
+            if not ok:
+                os.unlink(tmp)
+                self.stats["checkpoint_failures"] += 1
+                return False
+            os.replace(tmp, self._ckpt_path(seq))
+        except OSError:
+            self.stats["checkpoint_failures"] += 1
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            return False
+        self._fsync_dir()
+        self.seq = seq
+        self.stats["checkpoints_written"] += 1
+        self.stats["checkpoint_bytes"] = len(blob)
+        self._rotate_journal()
+        self._retire()
+        return True
+
+    def read_checkpoint(self, seq: int) -> Optional[dict]:
+        """Decode checkpoint ``seq``; None on ANY corruption (missing
+        file, bad magic/version, torn/flipped records, missing header/
+        state/end structure) — never raises on bad bytes."""
+        try:
+            with open(self._ckpt_path(seq), "rb") as f:
+                data = f.read()
+        except OSError:
+            return None
+        if len(data) < len(CKPT_MAGIC) + _VER.size \
+                or data[:len(CKPT_MAGIC)] != CKPT_MAGIC:
+            return None
+        (ver,) = _VER.unpack_from(data, len(CKPT_MAGIC))
+        if ver != FORMAT_VERSION:
+            return None
+        payloads, clean = iter_records(data, len(CKPT_MAGIC) + _VER.size)
+        if not clean or len(payloads) < 3:
+            return None
+        recs = [_loads(p) for p in payloads]
+        if any(r is None or not isinstance(r, dict) for r in recs):
+            return None
+        head, foot = recs[0], recs[-1]
+        if head.get("kind") != "header" or head.get("seq") != seq \
+                or head.get("version") != FORMAT_VERSION:
+            return None
+        if foot.get("kind") != "end" or foot.get("records") != len(recs):
+            return None
+        state = next((r for r in recs[1:-1] if r.get("kind") == "state"), None)
+        if state is None or "snapshot" not in state:
+            return None
+        return state["snapshot"]
+
+    def load_best(self) -> Tuple[Optional[int], Optional[dict], int]:
+        """Newest valid checkpoint: ``(seq, snapshot, skipped)`` where
+        ``skipped`` counts corrupt newer checkpoints that were passed
+        over; ``(None, None, skipped)`` when no checkpoint decodes."""
+        skipped = 0
+        for seq in reversed(self.list_checkpoints()):
+            snap = self.read_checkpoint(seq)
+            if snap is not None:
+                return seq, snap, skipped
+            skipped += 1
+        return None, None, skipped
+
+    # -- journal ------------------------------------------------------------
+
+    def _rotate_journal(self) -> None:
+        if self._wal_f is not None:
+            self._wal_f.close()
+            self._wal_f = None
+
+    def append(self, event: dict) -> None:
+        """Append one event record to the current journal epoch (opened
+        lazily; a brand-new epoch file gets its magic+version header in
+        the same durable write as the first record).  An fsync failure
+        here is tolerated and counted — the event may be lost on a
+        crash, which recovery treats as any other truncated tail."""
+        blob = pack_record(_dumps(event))
+        if self._wal_f is None:
+            path = self._wal_path(self.seq)
+            fresh = not os.path.exists(path)
+            self._wal_f = open(path, "ab")
+            if fresh:
+                blob = WAL_MAGIC + _VER.pack(FORMAT_VERSION) + blob
+        self._write(self._wal_f, blob)
+        self._fsync(self._wal_f)
+        self.stats["journal_records"] += 1
+
+    def read_journal(self, from_seq: int) -> Tuple[List[dict], bool]:
+        """Replay events from journal epochs ``>= from_seq`` in order;
+        ``(events, truncated)``.  Truncates at the first bad record or
+        bad epoch file and IGNORES every later epoch (events after a
+        hole cannot be ordered against the lost ones)."""
+        events: List[dict] = []
+        if self._wal_f is not None:     # same-process read: land buffers
+            self._wal_f.flush()
+        for seq in self.list_journals():
+            if seq < from_seq:
+                continue
+            try:
+                with open(self._wal_path(seq), "rb") as f:
+                    data = f.read()
+            except OSError:
+                return events, True
+            hdr = len(WAL_MAGIC) + _VER.size
+            if len(data) < hdr or data[:len(WAL_MAGIC)] != WAL_MAGIC:
+                return events, True
+            (ver,) = _VER.unpack_from(data, len(WAL_MAGIC))
+            if ver != FORMAT_VERSION:
+                return events, True
+            payloads, clean = iter_records(data, hdr)
+            for p in payloads:
+                ev = _loads(p)
+                if ev is None or not isinstance(ev, dict):
+                    return events, True
+                events.append(ev)
+            if not clean:
+                return events, True
+        return events, False
+
+    # -- retention ----------------------------------------------------------
+
+    def _retire(self) -> None:
+        """Keep the last K checkpoints and every journal epoch >= the
+        oldest retained VALID checkpoint's.  Validity (not mere
+        existence) is the pruning bar: a published checkpoint that a
+        disk fault corrupted would otherwise license deleting the only
+        surviving copy of its requests — the journal epochs its content
+        was supposed to absorb.  No valid base -> no journal pruning
+        (recovery may need the full wal-0 replay)."""
+        seqs = self.list_checkpoints()
+        for seq in seqs[:-self.keep]:
+            try:
+                os.unlink(self._ckpt_path(seq))
+                self.stats["pruned_checkpoints"] += 1
+            except OSError:
+                pass
+        base = next((seq for seq in self.list_checkpoints()
+                     if self.read_checkpoint(seq) is not None), None)
+        if base is None:
+            return
+        for seq in self.list_journals():
+            if seq < base:
+                try:
+                    os.unlink(self._wal_path(seq))
+                except OSError:
+                    pass
+
+    def close(self) -> None:
+        self._rotate_journal()
+
+
+# -- recovery ---------------------------------------------------------------
+
+def recover_scheduler(engine, *, clock=None, dirpath: Optional[str] = None,
+                      fault_plan=None):
+    """Boot a :class:`~repro.serve.frontend.PriorityScheduler` from disk:
+    newest valid checkpoint + journal-tail replay, audited before it is
+    handed back.  Returns ``(scheduler, report)``.
+
+    The checkpoint directory resolves like the scheduler's own policy
+    (``$REPRO_CHECKPOINT_DIR`` > ``ServeConfig.checkpoint_dir``) unless
+    ``dirpath`` overrides it; the recovered scheduler keeps journaling
+    and checkpointing to the same directory.  Raises ``ValueError`` when
+    no directory is configured or when the newest VALID checkpoint's
+    fingerprint does not match ``engine`` (restoring another engine's KV
+    would be silent corruption — corrupt checkpoints fall back, wrong-
+    engine ones refuse).
+
+    ``report`` keys: ``checkpoint_seq`` (None = from-scratch),
+    ``checkpoints_skipped`` (corrupt newer ones passed over),
+    ``journal_events`` / ``journal_truncated``, ``requeued`` (requests
+    back in the queue), ``completed`` (Request objects whose terminal
+    journal events post-date the checkpoint — their exact tokens, never
+    recomputed), ``resumed_inflight`` (requeued with partial output).
+    """
+    from repro.serve import audit                    # lazy: no import cycle
+    from repro.serve.engine import Request, RequestStatus
+    from repro.serve.frontend import PriorityScheduler
+
+    sched = PriorityScheduler(engine, clock=clock, fault_plan=fault_plan)
+    if dirpath is not None and sched._ckpt_store is None:
+        sched._ckpt_store = CheckpointStore(
+            dirpath, keep=int(getattr(engine.scfg, "checkpoint_keep", 3)),
+            faults=sched.fault_plan)
+    store = sched._ckpt_store
+    if store is None:
+        raise ValueError(
+            "recover_scheduler: no checkpoint directory configured — set "
+            "ServeConfig.checkpoint_dir, $REPRO_CHECKPOINT_DIR, or pass "
+            "dirpath=")
+    seq, snap, skipped = store.load_best()
+    if snap is not None:
+        audit.audit_snapshot(snap)
+        sched.restore(snap)             # ValueError on fingerprint mismatch
+    by_rid = {r.rid: r for r in sched.queue}
+    events, truncated = store.read_journal(seq if seq is not None else 0)
+    completed: dict = {}
+    for ev in events:
+        kind = ev.get("ev")
+        if kind == "submit":
+            d = ev.get("req") or {}
+            rid = d.get("rid")
+            if rid is None or rid in by_rid or rid in completed:
+                continue
+            req = Request.from_json(d)
+            req.done = False
+            req.status = (RequestStatus.PREEMPTED if req.generated
+                          else RequestStatus.QUEUED)
+            by_rid[rid] = req
+            sched.queue.append(req)
+        elif kind == "preempt":
+            req = by_rid.get(ev.get("rid"))
+            if req is not None:
+                req.preemptions = max(req.preemptions,
+                                      int(ev.get("n", 0)))
+        elif kind == "terminal":
+            d = ev.get("req") or {}
+            rid = d.get("rid")
+            if rid is None:
+                continue
+            req = by_rid.pop(rid, None)
+            if req is not None:
+                sched.queue.remove(req)
+            completed[rid] = Request.from_json(d)
+    audit.audit_scheduler(sched)        # I1-I8 before any traffic
+    report = {
+        "checkpoint_seq": seq,
+        "checkpoints_skipped": skipped,
+        "journal_events": len(events),
+        "journal_truncated": truncated,
+        "requeued": len(sched.queue),
+        "resumed_inflight": sum(1 for r in sched.queue if r.generated),
+        "completed": list(completed.values()),
+    }
+    # draw a clean recovery line: a fresh checkpoint of the rebuilt state
+    # rotates onto a new journal epoch, so a torn pre-crash tail cannot
+    # sit in front of post-recovery events (fsync-fault here is tolerated
+    # — the plane serves on, the next periodic checkpoint retries)
+    sched.checkpoint()
+    return sched, report

@@ -719,6 +719,45 @@ class Request:
             return None
         return self.arrival + self.deadline_s
 
+    def to_json(self) -> dict:
+        """Deep, JSON-serializable copy of the request's durable fields
+        (the snapshot/journal wire form).  Live wiring is stripped, not
+        carried: ``on_token`` callbacks (and the frontend's futures,
+        which never live on the Request) cannot survive a process death
+        — ``streaming`` flags that the original had a callback so a
+        recovered client knows the stream is gone."""
+        return {"rid": int(self.rid),
+                "prompt": np.asarray(self.prompt, np.int32).tolist(),
+                "max_new": int(self.max_new),
+                "priority": int(self.priority),
+                "deadline_s": self.deadline_s,
+                "arrival": self.arrival,
+                "generated": [int(t) for t in self.generated],
+                "preemptions": int(self.preemptions),
+                "status": self.status.value,
+                "error": self.error,
+                "completed_at": self.completed_at,
+                "streaming": self.on_token is not None}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Request":
+        """Inverse of :meth:`to_json` (``streaming`` is informational —
+        no callback is reattached).  ``done`` derives from the status'
+        terminality, so replayed terminal events round-trip exact."""
+        req = cls(rid=int(d["rid"]),
+                  prompt=np.asarray(d["prompt"], np.int32),
+                  max_new=int(d["max_new"]),
+                  priority=int(d.get("priority", 0)),
+                  deadline_s=d.get("deadline_s"),
+                  arrival=d.get("arrival"))
+        req.generated = [int(t) for t in d.get("generated", [])]
+        req.preemptions = int(d.get("preemptions", 0))
+        req.status = RequestStatus(d.get("status", "QUEUED"))
+        req.error = d.get("error")
+        req.completed_at = d.get("completed_at")
+        req.done = req.status.terminal
+        return req
+
 
 class BatchScheduler:
     """Continuous batching over the engine's fixed slots.

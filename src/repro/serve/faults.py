@@ -37,6 +37,21 @@ Seams (spec grammar, comma-separated events):
     S seconds are added INSIDE tick T (at its end, before the duration
     is measured), inflating the tick-time EMA that drives
     deadline-hopeless shedding — a host-contention stand-in.
+``torn@N``
+    The Nth durable DISK write (1-based: one checkpoint temp-file write
+    or one journal append, counted across both —
+    ``repro.serve.durability``) is torn: only the first half of the
+    buffer lands, a power-cut stand-in.  Recovery must truncate at the
+    damage, never crash on it.
+``flip@N``
+    The Nth durable disk write lands with ONE bit flipped mid-buffer —
+    silent media corruption the per-record CRC32 must catch, making the
+    checkpoint fall back / the journal truncate.
+``fsync@N``
+    The Nth ``fsync`` the durability layer issues fails.  A checkpoint
+    publish is ABORTED (the previous checkpoint stays newest, the plane
+    keeps serving); a journal append is tolerated-and-counted (the
+    event may be lost, like any torn tail).
 
 ``FaultPlan.random(seed)`` draws a randomized-but-deterministic plan
 (same seed → same spec, printable via ``plan.spec`` and replayable via
@@ -88,8 +103,8 @@ class FaultClock:
 def _bad(spec: str, tok: str, why: str) -> ValueError:
     return ValueError(
         f"fault plan {spec!r}: bad event {tok!r} ({why}); grammar is "
-        f"alloc@N | prefill@N | poison@T[:S] | clock+SEC@T | slow+SEC@T, "
-        f"comma-separated")
+        f"alloc@N | prefill@N | poison@T[:S] | clock+SEC@T | slow+SEC@T | "
+        f"torn@N | flip@N | fsync@N, comma-separated")
 
 
 class FaultPlan:
@@ -103,16 +118,25 @@ class FaultPlan:
 
     def __init__(self, spec: str, *, alloc: FrozenSet[int],
                  prefill: FrozenSet[int], poison: Dict[int, int],
-                 clock: Dict[int, float], slow: Dict[int, float]):
+                 clock: Dict[int, float], slow: Dict[int, float],
+                 torn: FrozenSet[int] = frozenset(),
+                 flip: FrozenSet[int] = frozenset(),
+                 fsync: FrozenSet[int] = frozenset()):
         self.spec = spec
         self.alloc = alloc
         self.prefill = prefill
         self.poison = poison
         self.clock = clock
         self.slow = slow
+        self.torn = torn
+        self.flip = flip
+        self.fsync = fsync
         self._prefill_calls = 0
+        self._disk_writes = 0
+        self._fsync_calls = 0
         self.fired = {"alloc": 0, "prefill": 0, "poison": 0,
-                      "clock": 0, "slow": 0}
+                      "clock": 0, "slow": 0, "torn": 0, "flip": 0,
+                      "fsync": 0}
 
     # -- construction ------------------------------------------------------
 
@@ -124,6 +148,9 @@ class FaultPlan:
         poison: Dict[int, int] = {}
         clock: Dict[int, float] = {}
         slow: Dict[int, float] = {}
+        torn: set[int] = set()
+        flip: set[int] = set()
+        fsync: set[int] = set()
         for tok in (t.strip() for t in spec.split(",")):
             if not tok:
                 continue
@@ -132,6 +159,12 @@ class FaultPlan:
                     alloc.add(int(tok[len("alloc@"):]))
                 elif tok.startswith("prefill@"):
                     prefill.add(int(tok[len("prefill@"):]))
+                elif tok.startswith("torn@"):
+                    torn.add(int(tok[len("torn@"):]))
+                elif tok.startswith("flip@"):
+                    flip.add(int(tok[len("flip@"):]))
+                elif tok.startswith("fsync@"):
+                    fsync.add(int(tok[len("fsync@"):]))
                 elif tok.startswith("poison@"):
                     body = tok[len("poison@"):]
                     t, _, sel = body.partition(":")
@@ -153,12 +186,15 @@ class FaultPlan:
                 raise _bad(spec, f"...+{sec}@{t}",
                            "negative skew would break clock monotonicity")
         return cls(spec, alloc=frozenset(alloc), prefill=frozenset(prefill),
-                   poison=poison, clock=clock, slow=slow)
+                   poison=poison, clock=clock, slow=slow,
+                   torn=frozenset(torn), flip=frozenset(flip),
+                   fsync=frozenset(fsync))
 
     @classmethod
     def random(cls, seed: int, *, ticks: int = 64, n_alloc: int = 2,
                n_prefill: int = 1, n_poison: int = 1, n_clock: int = 1,
-               n_slow: int = 2, skew_s: tuple = (0.5, 3.0)) -> "FaultPlan":
+               n_slow: int = 2, n_torn: int = 1, n_flip: int = 1,
+               n_fsync: int = 1, skew_s: tuple = (0.5, 3.0)) -> "FaultPlan":
         """Randomized-but-deterministic plan: same seed → same spec.
 
         Event ticks land in [2, ticks] (tick 1 is left clean so the run
@@ -183,6 +219,14 @@ class FaultPlan:
         for _ in range(n_slow):
             sec = float(rng.uniform(*skew_s))
             parts.append(f"slow+{sec:.3f}@{int(rng.integers(lo, ticks + 1))}")
+        # disk seams: small ordinals a journaling run reaches quickly —
+        # submits and periodic checkpoints each consume a write ordinal
+        for _ in range(n_torn):
+            parts.append(f"torn@{int(rng.integers(2, 16))}")
+        for _ in range(n_flip):
+            parts.append(f"flip@{int(rng.integers(2, 16))}")
+        for _ in range(n_fsync):
+            parts.append(f"fsync@{int(rng.integers(1, 8))}")
         return cls.parse(",".join(parts))
 
     # -- seam hooks (consumed by pool / engine / scheduler) ----------------
@@ -239,6 +283,31 @@ class FaultPlan:
         if sec:
             self.fired["slow"] += 1
         return sec
+
+    def take_disk_write(self) -> Optional[str]:
+        """Advance the durable disk-write counter (checkpoint temp-file
+        writes and journal appends share one ordinal space — consumed by
+        ``durability.CheckpointStore``); returns ``"torn"`` / ``"flip"``
+        when this write is scheduled to corrupt, else None.  ``torn``
+        outranks ``flip`` on a shared ordinal."""
+        self._disk_writes += 1
+        if self._disk_writes in self.torn:
+            self.fired["torn"] += 1
+            return "torn"
+        if self._disk_writes in self.flip:
+            self.fired["flip"] += 1
+            return "flip"
+        return None
+
+    def take_fsync(self) -> bool:
+        """Advance the fsync counter; True when this fsync is scheduled
+        to fail (the store then aborts a checkpoint publish / tolerates
+        a journal append)."""
+        self._fsync_calls += 1
+        if self._fsync_calls in self.fsync:
+            self.fired["fsync"] += 1
+            return True
+        return False
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"FaultPlan({self.spec!r}, fired={self.fired})"

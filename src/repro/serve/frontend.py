@@ -73,13 +73,14 @@ from __future__ import annotations
 
 import asyncio
 import itertools
+import os
 from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve import faults, paging
+from repro.serve import durability, faults, paging
 from repro.serve.engine import (BatchScheduler, Engine, Request,
                                 RequestStatus)
 
@@ -122,7 +123,8 @@ class PriorityScheduler(BatchScheduler):
         self.stats = {"ticks": 0, "preemptions": 0, "shed": 0,
                       "timeouts": 0, "readmissions": 0,
                       "readmission_hit_tokens": 0, "admissions": 0,
-                      "prefill_faults": 0, "quarantined": 0, "restored": 0}
+                      "prefill_faults": 0, "quarantined": 0, "restored": 0,
+                      "checkpoints": 0, "journal_events": 0}
         # fault-injection plan: explicit arg > $REPRO_FAULTS >
         # scfg.fault_plan.  Wired once here: alloc ordinals compose onto
         # the pool's existing injector ($REPRO_FAULT_ALLOC stays live as
@@ -140,6 +142,68 @@ class PriorityScheduler(BatchScheduler):
             if self.fault_plan.needs_clock:
                 self._fault_clock = faults.FaultClock(self.clock)
                 self.clock = self._fault_clock
+        # durability policy: $REPRO_CHECKPOINT_DIR / _INTERVAL outrank the
+        # scfg fields (same precedence rule as every other REPRO_* knob).
+        # A configured directory turns on the write-ahead journal on every
+        # submit/terminal/preemption; checkpoints additionally fire every
+        # `checkpoint_interval` ticks and/or `checkpoint_interval_s`
+        # seconds of the (injectable, possibly fault-skewed) clock.
+        self._ckpt_store: Optional[durability.CheckpointStore] = None
+        self._last_ckpt_t: Optional[float] = None
+        cdir = (os.environ.get("REPRO_CHECKPOINT_DIR", "").strip()
+                or getattr(scfg, "checkpoint_dir", ""))
+        env_iv = os.environ.get("REPRO_CHECKPOINT_INTERVAL", "").strip()
+        self._ckpt_interval = (int(env_iv) if env_iv else
+                               int(getattr(scfg, "checkpoint_interval", 0)))
+        self._ckpt_interval_s = float(
+            getattr(scfg, "checkpoint_interval_s", 0.0))
+        if cdir:
+            self._ckpt_store = durability.CheckpointStore(
+                cdir, keep=int(getattr(scfg, "checkpoint_keep", 3)),
+                faults=self.fault_plan)
+
+    # -- durability: write-ahead journal + periodic checkpoints ------------
+
+    def _journal(self, event: dict) -> None:
+        if self._ckpt_store is not None:
+            self._ckpt_store.append(event)
+            self.stats["journal_events"] += 1
+
+    def submit(self, req: Request):
+        """Validate/enqueue (base behavior), then write-ahead journal the
+        accepted request.  Submit-time rejects never enter the queue and
+        settle synchronously with the caller, so they are not journaled;
+        an accepted request that crashes before the next checkpoint is
+        rebuilt from this event on recovery."""
+        super().submit(req)
+        if not req.done:
+            self._journal({"ev": "submit", "req": req.to_json()})
+
+    def checkpoint(self) -> bool:
+        """Write one durable checkpoint of the current snapshot now
+        (the periodic policy calls this; operators can force one).
+        False = the publish was aborted (injected/real fsync failure) —
+        the previous checkpoint stays newest and serving continues."""
+        if self._ckpt_store is None:
+            raise RuntimeError(
+                "checkpoint(): no checkpoint directory configured (set "
+                "ServeConfig.checkpoint_dir or $REPRO_CHECKPOINT_DIR)")
+        ok = self._ckpt_store.write_checkpoint(self.snapshot())
+        if ok:
+            self.stats["checkpoints"] += 1
+        self._last_ckpt_t = self.clock()   # failures also wait a period:
+        return ok                          # no hot-loop retry storms
+
+    def _maybe_checkpoint(self) -> None:
+        due = (self._ckpt_interval > 0
+               and self._tick_no % self._ckpt_interval == 0)
+        if not due and self._ckpt_interval_s > 0:
+            now = self.clock()
+            if self._last_ckpt_t is None:
+                self._last_ckpt_t = now
+            due = now - self._last_ckpt_t >= self._ckpt_interval_s
+        if due:
+            self.checkpoint()
 
     # -- policy helpers ----------------------------------------------------
 
@@ -366,6 +430,8 @@ class PriorityScheduler(BatchScheduler):
         self._pos[slot] = 0
         self.queue.append(req)
         self.stats["preemptions"] += 1
+        self._journal({"ev": "preempt", "rid": req.rid,
+                       "n": req.preemptions})
         return req
 
     def _pick_victim(self, now: float, exclude: int) -> Optional[int]:
@@ -451,7 +517,21 @@ class PriorityScheduler(BatchScheduler):
         (running cut-offs, queue shedding), in-flight prefill jobs, then
         policy-ordered admissions — both within the tick's prefill token
         budget — lazy reservation extension with preemption, one batched
-        decode step, and the end-of-tick invariant audit."""
+        decode step, and the end-of-tick invariant audit.  With a
+        checkpoint store configured, every terminal transition this tick
+        produced is write-ahead journaled (exact final tokens — recovery
+        reports them verbatim, never recomputes) and the periodic
+        checkpoint policy runs after the audit, so only audited-
+        consistent states reach disk."""
+        n_done = len(finished)
+        events = self._tick_inner(finished)
+        if self._ckpt_store is not None:
+            for req in finished[n_done:]:
+                self._journal({"ev": "terminal", "req": req.to_json()})
+            self._maybe_checkpoint()
+        return events
+
+    def _tick_inner(self, finished: list) -> list:
         events: list = []
         self._tick_no += 1
         if self.fault_plan is not None and self._fault_clock is not None:
@@ -499,19 +579,23 @@ class PriorityScheduler(BatchScheduler):
                                           lay.mb_full, lay.mb_ring))
 
     @staticmethod
-    def _ser_request(r: Request) -> dict:
-        return {"rid": r.rid,
-                "prompt": np.asarray(r.prompt, np.int32).tolist(),
-                "max_new": r.max_new, "priority": r.priority,
-                "deadline_s": r.deadline_s, "arrival": r.arrival,
-                "generated": list(r.generated),
-                "preemptions": r.preemptions, "status": r.status.value}
+    def _norm_fp(fp) -> tuple:
+        """Fingerprint comparison form: a JSON round-trip turns tuples
+        into lists, so both sides normalize to nested tuples."""
+        return tuple(tuple(x) if isinstance(x, (list, tuple)) else x
+                     for x in fp)
 
     def snapshot(self) -> dict:
         """Serialize the plane's complete host-side state — queued and
         inflight requests (mid-prefill-job ones included), scheduler
         counters, PRNG key, and the allocator's hash-registered blocks
-        WITH their device KV contents — into a picklable dict.
+        WITH their device KV contents — into a deep, JSON-serializable
+        dict: every leaf is a plain int/float/str/list/dict (KV arrays
+        ride ``durability.encode_array``; ``on_token`` callbacks and the
+        frontend's futures are stripped, flagged per-request as
+        ``streaming``).  Deep means mutation-isolated too: continued
+        ticking after ``snapshot()`` returns cannot change the dict, so
+        a checkpoint writer can serialize it at leisure.
 
         The design insight that keeps this small: per-slot device state
         does not need serializing.  An inflight request is resumed by the
@@ -530,9 +614,9 @@ class PriorityScheduler(BatchScheduler):
             "tick_no": self._tick_no,
             "tick_ema": self._tick_ema,
             "stats": dict(self.stats),
-            "key": np.asarray(jax.device_get(self._key)),
-            "queue": [self._ser_request(r) for r in self.queue],
-            "inflight": [self._ser_request(r) for r in self.slots
+            "key": np.asarray(jax.device_get(self._key)).tolist(),
+            "queue": [r.to_json() for r in self.queue],
+            "inflight": [r.to_json() for r in self.slots
                          if r is not None],
         }
         if eng.paged:
@@ -543,7 +627,8 @@ class PriorityScheduler(BatchScheduler):
                 bid for bid in pool._bid_to_hash if bid not in pool._warm]
             snap["registered"] = [[pool._bid_to_hash[bid].hex(), int(bid)]
                                   for bid in bids]
-            snap["kv"] = eng.export_blocks(bids)
+            snap["kv"] = {k: durability.encode_array(v)
+                          for k, v in eng.export_blocks(bids).items()}
         return snap
 
     def restore(self, snap: dict) -> None:
@@ -555,7 +640,8 @@ class PriorityScheduler(BatchScheduler):
         tail re-prefills and the greedy stream continues bitwise where
         the crash cut it.  Raises on a fingerprint mismatch or a
         non-fresh engine."""
-        if tuple(snap["fingerprint"]) != self._fingerprint():
+        if self._norm_fp(snap["fingerprint"]) != self._norm_fp(
+                self._fingerprint()):
             raise ValueError(
                 f"snapshot fingerprint {snap['fingerprint']} does not "
                 f"match this engine {self._fingerprint()}")
@@ -569,14 +655,11 @@ class PriorityScheduler(BatchScheduler):
             bids = [bid for _h, bid in snap["registered"]]
             for h_hex, bid in snap["registered"]:
                 eng.pool.seed_warm(bid, bytes.fromhex(h_hex))
-            eng.import_blocks(bids, snap["kv"])
+            eng.import_blocks(bids, {k: durability.decode_array(v)
+                                     for k, v in snap["kv"].items()})
         for d in snap["inflight"] + snap["queue"]:
-            req = Request(rid=d["rid"],
-                          prompt=np.asarray(d["prompt"], np.int32),
-                          max_new=d["max_new"], priority=d["priority"],
-                          deadline_s=d["deadline_s"], arrival=d["arrival"])
-            req.generated = list(d["generated"])
-            req.preemptions = d["preemptions"]
+            req = Request.from_json(d)
+            req.done = False
             # the re-admission path keys off generated, not off the label;
             # PREEMPTED vs QUEUED here is observability
             req.status = (RequestStatus.PREEMPTED if req.generated
@@ -584,7 +667,7 @@ class PriorityScheduler(BatchScheduler):
             self.queue.append(req)
         self._tick_no = int(snap["tick_no"])
         self._tick_ema = snap["tick_ema"]
-        self.stats = dict(snap["stats"])
+        self.stats = {**self.stats, **snap["stats"]}
         self.stats["restored"] = (self.stats.get("restored", 0)
                                   + len(snap["inflight"]))
         self._key = jnp.asarray(np.asarray(snap["key"], np.uint32))
@@ -607,13 +690,37 @@ class AsyncFrontend:
     the event loop yields *between* ticks, not inside one.
     """
 
-    def __init__(self, engine: Engine, *, clock=None):
-        self.scheduler = PriorityScheduler(engine, clock=clock)
+    def __init__(self, engine: Engine, *, clock=None,
+                 scheduler: Optional[PriorityScheduler] = None):
+        self.scheduler = (scheduler if scheduler is not None
+                          else PriorityScheduler(engine, clock=clock))
         self._next_rid = itertools.count()
         self._futures: dict[int, asyncio.Future] = {}
         self._finished: list[Request] = []
         self._wake: Optional[asyncio.Event] = None
         self._stopping = False
+        self.recovery_report: Optional[dict] = None
+
+    @classmethod
+    def recover(cls, engine: Engine, *, clock=None,
+                dirpath: Optional[str] = None) -> "AsyncFrontend":
+        """Boot a frontend from the on-disk checkpoint/journal state
+        (``durability.recover_scheduler``: newest valid checkpoint +
+        journal-tail replay, I1-I8 audited).  ``recovery_report`` holds
+        the ladder's outcome; requests whose terminal transition was
+        journaled after the checkpoint arrive there already settled
+        (``report["completed"]``) and in ``_finished``.  Fresh rids
+        continue past every recovered one, so recovered and new traffic
+        never collide."""
+        sched, report = durability.recover_scheduler(
+            engine, clock=clock, dirpath=dirpath)
+        fe = cls(engine, clock=clock, scheduler=sched)
+        fe.recovery_report = report
+        fe._finished.extend(report["completed"])
+        seen = [r.rid for r in sched.queue] + \
+            [r.rid for r in report["completed"]]
+        fe._next_rid = itertools.count(max(seen, default=-1) + 1)
+        return fe
 
     def submit(self, prompt, max_new: int, *, priority: int = 0,
                deadline_s: Optional[float] = None,

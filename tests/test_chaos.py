@@ -63,15 +63,20 @@ def _solo_want(sp, prompts, max_new, *, prefill_chunk=32, max_seq_len=32):
 def test_fault_plan_parse_all_seams():
     plan = faults.FaultPlan.parse(
         "alloc@3, alloc@7, prefill@1, poison@5:2, poison@9, "
-        "clock+1.5@4, slow+0.25@6")
+        "clock+1.5@4, slow+0.25@6, torn@2, flip@4, fsync@1, fsync@3")
     assert plan.alloc == frozenset({3, 7})
     assert plan.prefill == frozenset({1})
     assert plan.poison == {5: 2, 9: 0}
     assert plan.clock == {4: 1.5}
     assert plan.slow == {6: 0.25}
+    assert plan.torn == frozenset({2})
+    assert plan.flip == frozenset({4})
+    assert plan.fsync == frozenset({1, 3})
     assert plan.needs_clock
     assert not faults.FaultPlan.parse("alloc@1").needs_clock
-    for bad in ("gremlin@3", "alloc@x", "poison@", "clock+-2@3", "clock+1"):
+    assert not faults.FaultPlan.parse("torn@1,flip@2,fsync@3").needs_clock
+    for bad in ("gremlin@3", "alloc@x", "poison@", "clock+-2@3", "clock+1",
+                "torn@x", "flip@", "fsync@1.5"):
         with pytest.raises(ValueError, match="fault plan"):
             faults.FaultPlan.parse(bad)
 
@@ -86,7 +91,8 @@ def test_fault_plan_seam_hooks_fire_once_and_tally():
     assert plan.tick_start_skew(4) == 2.0 and plan.tick_start_skew(5) == 0.0
     assert plan.tick_end_skew(6) == 1.0
     assert plan.fired == {"alloc": 0, "prefill": 1, "poison": 1,
-                          "clock": 1, "slow": 1}
+                          "clock": 1, "slow": 1, "torn": 0, "flip": 0,
+                          "fsync": 0}
     # alloc ordinals compose onto an existing injector: both keep firing
     inj = plan2_inj = faults.FaultPlan.parse("alloc@4").chain_alloc(
         lambda call, n: call == 2)
@@ -101,8 +107,11 @@ def test_fault_plan_random_is_deterministic_and_replayable():
     assert a.spec != faults.FaultPlan.random(8).spec
     replay = faults.FaultPlan.parse(a.spec)       # printable spec round-trips
     assert (replay.alloc, replay.prefill, replay.poison, replay.clock,
-            replay.slow) == (a.alloc, a.prefill, a.poison, a.clock, a.slow)
+            replay.slow, replay.torn, replay.flip, replay.fsync) == \
+        (a.alloc, a.prefill, a.poison, a.clock, a.slow, a.torn, a.flip,
+         a.fsync)
     assert a.alloc and a.prefill and a.poison and a.clock and a.slow
+    assert a.torn and a.flip and a.fsync          # disk seams covered too
     assert all(2 <= t <= 64 for t in
                list(a.poison) + list(a.clock) + list(a.slow))
 

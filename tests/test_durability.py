@@ -1,0 +1,587 @@
+"""Durable serve plane: checkpoint codec, write-ahead journal, recovery.
+
+Three layers under test, bottom up:
+
+* the record/array codecs and :class:`durability.CheckpointStore` —
+  framing, CRC rejection, atomic publish, retention, journal epochs —
+  exercised directly on bytes, including PARAMETRIZED truncation of a
+  valid checkpoint at every record boundary and mid-record;
+* the scheduler policy — JSON-deep mutation-isolated ``snapshot()``,
+  tick/wall-clock periodic checkpoints, env overrides, write-ahead
+  journaling of submit/terminal/preempt;
+* recovery — ``durability.recover_scheduler`` /
+  ``AsyncFrontend.recover``: newest-valid fallback ladder, journal-tail
+  replay with verbatim terminal settlement, fingerprint refusal, the
+  S1-S4 snapshot audit, and crash → recover → drain bitwise token
+  parity on a fresh engine (with disk faults torn/flip/fsync live).
+"""
+import asyncio
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import ServeConfig, get_config
+from repro.models import transformer as tfm
+from repro.serve import audit, durability, faults
+from repro.serve.durability import CheckpointStore, iter_records, pack_record
+from repro.serve.engine import Engine, Request, RequestStatus
+from repro.serve.frontend import AsyncFrontend, PriorityScheduler
+
+KEY = jax.random.PRNGKey(0)
+
+CFG = dataclasses.replace(get_config("gemma-2b").reduced(), vocab_size=64,
+                          num_layers=2, d_ff=64, capacity_factor=64.0)
+
+
+def _engine(scfg: ServeConfig, cfg=CFG):
+    params = tfm.init_params(cfg, KEY)
+    sp = tfm.serve_params(params, cfg)
+    return Engine(cfg, sp, scfg), sp
+
+
+class TickClock:
+    def __init__(self, dt: float = 0.0, t0: float = 0.0):
+        self.t = t0
+        self.dt = dt
+
+    def __call__(self) -> float:
+        self.t += self.dt
+        return self.t
+
+
+def _solo_want(sp, prompts, max_new, *, prefill_chunk=32, max_seq_len=32):
+    ref = Engine(CFG, sp, ServeConfig(max_seq_len=max_seq_len, batch_size=1,
+                                      prefill_chunk=prefill_chunk))
+    want = {}
+    for i, p in enumerate(prompts):
+        ref.reset()
+        want[i] = np.asarray(ref.generate(np.asarray(p)[None, :], max_new)[0])
+    return want
+
+
+def _scfg(tmp_path, **kw):
+    base = dict(max_seq_len=32, batch_size=3, kv_block_size=8,
+                kv_num_blocks=12, paged_attn="gather", audit_interval=1,
+                checkpoint_dir=str(tmp_path / "ckpt"))
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# record framing + array codec
+# ---------------------------------------------------------------------------
+
+def test_record_roundtrip_and_corruption():
+    payloads = [b"a", b"x" * 100, json.dumps({"k": 1}).encode()]
+    blob = b"".join(pack_record(p) for p in payloads)
+    got, clean = iter_records(blob)
+    assert got == payloads and clean
+    # truncation anywhere in the last record drops it, keeps the prefix
+    last = len(blob) - len(pack_record(payloads[2]))
+    for cut in (len(blob) - 1, last + 9, last + 4, last + 1):
+        got, clean = iter_records(blob[:cut])
+        assert got == payloads[:2] and not clean
+    # a flipped bit in the middle record stops replay there
+    bad = bytearray(blob)
+    bad[pack_record(payloads[0]).__len__() + 8 + 10] ^= 0x01
+    got, clean = iter_records(bytes(bad))
+    assert got == payloads[:1] and not clean
+    # garbage length field (torn header) never raises
+    got, clean = iter_records(blob + b"\xff\xff\xff\xff")
+    assert got == payloads and not clean
+    assert iter_records(b"") == ([], True)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "int32", "bfloat16"])
+def test_array_codec_lossless(dtype):
+    a = np.arange(24, dtype=np.float64).reshape(2, 3, 4) / 7.0
+    a = a.astype(durability._np_dtype(dtype))
+    d = json.loads(json.dumps(durability.encode_array(a)))
+    b = durability.decode_array(d)
+    assert b.dtype == a.dtype and b.shape == a.shape
+    assert a.tobytes() == b.tobytes()            # bitwise, not approx
+
+
+# ---------------------------------------------------------------------------
+# CheckpointStore: publish, fallback ladder, retention, journal epochs
+# ---------------------------------------------------------------------------
+
+SNAP1 = {"fingerprint": ["m", 32], "tick_no": 1, "stats": {}, "key": [0, 1],
+         "queue": [], "inflight": [], "payload": "one"}
+SNAP2 = {**SNAP1, "tick_no": 2, "payload": "two"}
+
+
+def test_store_publish_monotonic_and_load_best(tmp_path):
+    st = CheckpointStore(tmp_path, keep=3)
+    assert st.load_best() == (None, None, 0)
+    assert st.write_checkpoint(SNAP1) and st.seq == 1
+    assert st.write_checkpoint(SNAP2) and st.seq == 2
+    assert st.list_checkpoints() == [1, 2]
+    assert st.read_checkpoint(1)["payload"] == "one"
+    seq, snap, skipped = st.load_best()
+    assert (seq, snap["payload"], skipped) == (2, "two", 0)
+    # a new store over the same dir resumes the sequence — no reuse
+    st2 = CheckpointStore(tmp_path, keep=3)
+    assert st2.seq == 2
+    assert st2.write_checkpoint(SNAP1) and st2.list_checkpoints() == [1, 2, 3]
+
+
+def _ckpt_bytes(path):
+    with open(path, "rb") as f:
+        return f.read()
+
+
+def _record_boundaries(data):
+    """Offsets of every record boundary in a checkpoint file (after the
+    magic+version header), the header offset included."""
+    off = len(durability.CKPT_MAGIC) + durability._VER.size
+    outs = [off]
+    while off < len(data):
+        ln, _crc = durability._REC.unpack_from(data, off)
+        off += durability._REC.size + ln
+        outs.append(off)
+    return outs
+
+
+@pytest.mark.parametrize("cut_kind", ["boundary", "mid_record"])
+@pytest.mark.parametrize("boundary", [0, 1, 2])
+def test_truncated_newest_falls_back_to_previous(tmp_path, cut_kind,
+                                                 boundary):
+    """ISSUE satellite: truncate a valid checkpoint at EVERY record
+    boundary and mid-record — recovery must degrade to the previous
+    checkpoint, never raise."""
+    st = CheckpointStore(tmp_path, keep=3)
+    st.write_checkpoint(SNAP1)
+    st.write_checkpoint(SNAP2)
+    path = st._ckpt_path(2)
+    data = _ckpt_bytes(path)
+    cuts = _record_boundaries(data)
+    assert len(cuts) == 4                        # header + 3 records
+    cut = cuts[boundary] + (0 if cut_kind == "boundary" else 3)
+    with open(path, "wb") as f:
+        f.write(data[:cut])
+    seq, snap, skipped = CheckpointStore(tmp_path).load_best()
+    assert (seq, snap["payload"], skipped) == (1, "one", 1)
+
+
+def test_flipped_and_unversioned_checkpoints_fall_back(tmp_path):
+    st = CheckpointStore(tmp_path, keep=3)
+    st.write_checkpoint(SNAP1)
+    st.write_checkpoint(SNAP2)
+    data = _ckpt_bytes(st._ckpt_path(2))
+    flipped = bytearray(data)
+    flipped[len(data) // 2] ^= 0x01              # one bit, mid-file
+    with open(st._ckpt_path(2), "wb") as f:
+        f.write(bytes(flipped))
+    assert CheckpointStore(tmp_path).load_best()[0] == 1
+    # wrong magic / future version are corruption too, not crashes
+    with open(st._ckpt_path(2), "wb") as f:
+        f.write(b"NOPE" + data[4:])
+    assert CheckpointStore(tmp_path).load_best()[0] == 1
+    with open(st._ckpt_path(2), "wb") as f:
+        f.write(data[:4] + durability._VER.pack(99) + data[8:])
+    assert CheckpointStore(tmp_path).load_best()[0] == 1
+    # every checkpoint corrupt -> (None, None, all skipped)
+    with open(st._ckpt_path(1), "wb") as f:
+        f.write(b"")
+    with open(st._ckpt_path(2), "wb") as f:
+        f.write(b"\x00")
+    assert CheckpointStore(tmp_path).load_best() == (None, None, 2)
+
+
+def test_retention_prunes_checkpoints_and_stale_journal(tmp_path):
+    st = CheckpointStore(tmp_path, keep=2)
+    for i in range(5):
+        st.append({"ev": "noise", "i": i})       # journal epoch = seq
+        assert st.write_checkpoint({**SNAP1, "tick_no": i})
+    assert st.list_checkpoints() == [4, 5]       # keep-last-K
+    assert all(s >= 4 for s in st.list_journals())
+    assert st.stats["pruned_checkpoints"] == 3
+    assert st.stats["checkpoints_written"] == 5
+    assert st.stats["checkpoint_bytes"] > 0
+
+
+def test_journal_epochs_and_truncation_at_first_bad_record(tmp_path):
+    st = CheckpointStore(tmp_path, keep=5)
+    st.append({"ev": "a"})                       # epoch 0 (since boot)
+    events, truncated = st.read_journal(0)
+    assert [e["ev"] for e in events] == ["a"] and not truncated
+    st.write_checkpoint(SNAP1)                   # rotate -> epoch 1 ...
+    assert st.list_journals() == []              # ... and prune epoch 0:
+    st.append({"ev": "b"})                       # ckpt 1 captured its events
+    st.append({"ev": "c"})
+    events, truncated = st.read_journal(1)       # tail after checkpoint 1
+    assert [e["ev"] for e in events] == ["b", "c"] and not truncated
+    # tear the epoch-1 tail: replay keeps the prefix, flags truncation
+    st.close()
+    path = st._wal_path(1)
+    data = _ckpt_bytes(path)
+    with open(path, "wb") as f:
+        f.write(data[:-3])
+    events, truncated = CheckpointStore(tmp_path).read_journal(1)
+    assert [e["ev"] for e in events] == ["b"] and truncated
+    # ... and a later epoch past the hole is IGNORED (unorderable)
+    st2 = CheckpointStore(tmp_path, keep=5)
+    st2.write_checkpoint(SNAP2)
+    st2.append({"ev": "d"})
+    events, truncated = st2.read_journal(1)
+    assert [e["ev"] for e in events] == ["b"] and truncated
+
+
+def test_retire_keeps_journal_until_a_valid_checkpoint_covers_it(tmp_path):
+    """Regression: a PUBLISHED checkpoint a disk fault corrupted must not
+    license pruning the journal epochs it was supposed to absorb — they
+    are the only surviving copy of those requests."""
+    plan = faults.FaultPlan.parse("flip@2")      # write 1 = append,
+    st = CheckpointStore(tmp_path, keep=3, faults=plan)   # 2 = ckpt temp
+    st.append({"ev": "a"})
+    assert st.write_checkpoint(SNAP1)            # published ... but flipped
+    assert st.read_checkpoint(1) is None
+    assert 0 in st.list_journals()               # wal-0 survives: no valid
+    events, truncated = st.read_journal(0)       # base checkpoint yet
+    assert [e["ev"] for e in events] == ["a"] and not truncated
+    assert st.write_checkpoint(SNAP2)            # valid -> now prunable
+    assert st.read_checkpoint(2) is not None
+    assert all(s >= 2 for s in st.list_journals())
+
+
+def test_fsync_failure_aborts_checkpoint_publish(tmp_path):
+    plan = faults.FaultPlan.parse("fsync@1")
+    st = CheckpointStore(tmp_path, keep=3, faults=plan)
+    assert st.write_checkpoint(SNAP1) is False   # aborted, not torn
+    assert st.list_checkpoints() == [] and st.seq == 0
+    assert not [n for n in os.listdir(tmp_path) if n.startswith(".tmp")]
+    assert st.stats["checkpoint_failures"] == 1
+    assert plan.fired["fsync"] == 1
+    assert st.write_checkpoint(SNAP1) is True    # next publish lands
+
+
+def test_disk_write_seams_tally_and_fire_once():
+    plan = faults.FaultPlan.parse("torn@1,flip@2,fsync@2")
+    assert plan.take_disk_write() == "torn"
+    assert plan.take_disk_write() == "flip"
+    assert plan.take_disk_write() is None        # ordinals advance past
+    assert not plan.take_fsync() and plan.take_fsync()
+    assert not plan.take_fsync()
+    assert plan.fired["torn"] == 1 and plan.fired["flip"] == 1
+    assert plan.fired["fsync"] == 1
+
+
+# ---------------------------------------------------------------------------
+# snapshot: deep, JSON-serializable, mutation-isolated
+# ---------------------------------------------------------------------------
+
+def test_snapshot_is_json_deep_and_mutation_isolated(tmp_path):
+    scfg = _scfg(tmp_path, checkpoint_dir="")    # no store: snapshot only
+    e, sp = _engine(scfg)
+    sched = PriorityScheduler(e)
+    rng = np.random.default_rng(3)
+    for i in range(3):
+        sched.submit(Request(rid=i, prompt=rng.integers(
+            1, 64, 9).astype(np.int32), max_new=12,
+            on_token=lambda r, t: None))         # non-serializable field
+    finished: list = []
+    for _ in range(4):
+        sched.tick(finished)
+    snap = sched.snapshot()
+    frozen = json.dumps(snap, sort_keys=True)    # would raise on any
+    # non-JSON leaf (ndarray, callable, jax array)
+    d = snap["inflight"][0]
+    assert d["streaming"] is True and "on_token" not in d
+    audit.audit_snapshot(snap)
+    # mutation isolation: keep ticking, the captured dict must not move
+    while not sched.idle:
+        sched.tick(finished)
+    assert json.dumps(snap, sort_keys=True) == frozen
+
+
+def test_audit_snapshot_names_the_broken_invariant():
+    good = {"fingerprint": ["m"], "tick_no": 0, "stats": {}, "key": [0, 1],
+            "queue": [{"rid": 1, "prompt": [1, 2], "max_new": 4,
+                       "generated": []}],
+            "inflight": [{"rid": 2, "prompt": [3], "max_new": 4,
+                          "generated": [5]}],
+            "registered": [["ab", 0]], "kv": {"k": durability.encode_array(
+                np.zeros(2, np.float32))}}
+    audit.audit_snapshot(good)
+    cases = [
+        ("S1", {k: v for k, v in good.items() if k != "queue"}),
+        ("S1", {**good, "tick_no": "zero"}),
+        ("S2", {**good, "queue": [{"prompt": [1], "max_new": 1,
+                                   "generated": []}]}),
+        ("S2", {**good, "queue": [{"rid": 1, "prompt": [], "max_new": 1,
+                                   "generated": []}]}),
+        ("S2", {**good, "queue": [{"rid": 1, "prompt": [1], "max_new": 1,
+                                   "generated": [1, 2]}]}),
+        ("S3", {**good, "queue": good["queue"] + [good["inflight"][0]]}),
+        ("S4", {**good, "registered": [["ab", 0], ["cd", 0]]}),
+        ("S4", {**good, "kv": {}}),
+        ("S4", {**good, "kv": {"k": {"dtype": "float32"}}}),
+    ]
+    for inv, snap in cases:
+        with pytest.raises(audit.AuditError) as err:
+            audit.audit_snapshot(snap)
+        assert err.value.invariant == inv
+
+
+# ---------------------------------------------------------------------------
+# periodic checkpoint policy + journaling on the live scheduler
+# ---------------------------------------------------------------------------
+
+def test_tick_interval_checkpoints_and_journal(tmp_path):
+    scfg = _scfg(tmp_path, checkpoint_interval=2)
+    e, sp = _engine(scfg)
+    sched = PriorityScheduler(e)
+    rng = np.random.default_rng(5)
+    for i in range(2):
+        sched.submit(Request(rid=i, prompt=rng.integers(
+            1, 64, 8).astype(np.int32), max_new=6))
+    done = sched.run()
+    assert len(done) == 2
+    st = sched._ckpt_store
+    assert st.list_checkpoints()                 # every 2nd tick published
+    assert sched.stats["checkpoints"] == st.stats["checkpoints_written"]
+    # the journal saw 2 submits + 2 terminals (the submits landed in
+    # epoch 0, since pruned — checkpoints captured those requests)
+    assert sched.stats["journal_events"] == 4
+    events, truncated = st.read_journal(0)
+    kinds = [ev["ev"] for ev in events]
+    assert kinds.count("terminal") == 2 and not truncated
+    # terminal events carry the exact final tokens
+    by_rid = {r.rid: r for r in done}
+    for ev in events:
+        if ev["ev"] == "terminal":
+            assert ev["req"]["generated"] == \
+                list(by_rid[ev["req"]["rid"]].generated)
+
+
+def test_wall_clock_interval_checkpoints(tmp_path):
+    scfg = _scfg(tmp_path, checkpoint_interval=0, checkpoint_interval_s=5.0)
+    e, sp = _engine(scfg)
+    sched = PriorityScheduler(e, clock=TickClock(1.0))
+    sched.submit(Request(rid=0, prompt=np.arange(1, 9, dtype=np.int32),
+                         max_new=12))
+    sched.run()
+    st = sched._ckpt_store
+    assert st.list_checkpoints()                 # the 5s period elapsed
+    assert len(st.list_checkpoints()) <= 3       # keep-last-K retention
+    assert sched.stats["checkpoints"] == st.stats["checkpoints_written"]
+
+
+def test_env_overrides_outrank_scfg(tmp_path, monkeypatch):
+    env_dir = tmp_path / "env-ckpt"
+    monkeypatch.setenv("REPRO_CHECKPOINT_DIR", str(env_dir))
+    monkeypatch.setenv("REPRO_CHECKPOINT_INTERVAL", "1")
+    scfg = _scfg(tmp_path, checkpoint_dir=str(tmp_path / "scfg-ckpt"),
+                 checkpoint_interval=0)
+    e, sp = _engine(scfg)
+    sched = PriorityScheduler(e)
+    sched.submit(Request(rid=0, prompt=np.arange(1, 9, dtype=np.int32),
+                         max_new=4))
+    sched.run()
+    assert sched._ckpt_store.dir == str(env_dir)
+    assert sched._ckpt_store.list_checkpoints()  # interval 1 from env
+    assert not (tmp_path / "scfg-ckpt").exists()
+
+
+def test_checkpoint_without_store_raises(tmp_path):
+    scfg = _scfg(tmp_path, checkpoint_dir="")
+    e, sp = _engine(scfg)
+    sched = PriorityScheduler(e)
+    with pytest.raises(RuntimeError, match="checkpoint directory"):
+        sched.checkpoint()
+    with pytest.raises(ValueError, match="checkpoint directory"):
+        durability.recover_scheduler(_engine(scfg)[0])
+
+
+# ---------------------------------------------------------------------------
+# recovery: crash -> recover -> drain, bitwise
+# ---------------------------------------------------------------------------
+
+def test_crash_recover_drain_is_bitwise_and_leak_free(tmp_path):
+    scfg = _scfg(tmp_path, checkpoint_interval=0)   # manual checkpoint:
+    e, sp = _engine(scfg)                        # the terminal must land in
+    rng = np.random.default_rng(14)              # the journal tail AFTER it
+    prompts = [rng.integers(1, 64, 9).astype(np.int32) for _ in range(4)]
+    max_new = [4, 14, 14, 14]                    # rid 0 completes pre-crash
+    want = _solo_want(sp, prompts, max(max_new))
+    sched = PriorityScheduler(e)
+    for i, p in enumerate(prompts):
+        sched.submit(Request(rid=i, prompt=p.copy(), max_new=max_new[i]))
+    finished: list = []
+    for _ in range(2):
+        sched.tick(finished)
+    assert not finished
+    assert sched.checkpoint()                    # everyone mid-flight
+    while not any(r.rid == 0 for r in finished):
+        sched.tick(finished)
+    # hard crash: the process state is abandoned; only the disk survives
+    pre_crash = {r.rid: list(r.generated) for r in finished}
+    e2, _ = _engine(scfg)
+    sched2, report = durability.recover_scheduler(e2, clock=None)
+    assert report["checkpoint_seq"] is not None
+    assert report["checkpoints_skipped"] == 0
+    # rid 0 finished before the crash: settled verbatim off the journal,
+    # not recomputed, not requeued
+    done_rids = [r.rid for r in report["completed"]]
+    assert 0 in done_rids
+    for r in report["completed"]:
+        assert list(r.generated) == pre_crash[r.rid]
+        assert r.status is RequestStatus.OK and r.done
+    assert report["requeued"] == 4 - len(done_rids)
+    assert report["resumed_inflight"] >= 1       # partial output survived
+    got = {r.rid: list(r.generated) for r in report["completed"]}
+    for r in sched2.run():
+        got[r.rid] = list(r.generated)
+    for i in range(4):
+        np.testing.assert_array_equal(
+            np.asarray(got[i]), want[i][:max_new[i]])
+    assert e2.pool.free_count == e2.pool.num_blocks   # zero leaks
+    assert e2.pool.live_refs == 0
+    audit.audit_scheduler(sched2)
+
+
+def test_recover_with_corrupt_newest_checkpoint_falls_back(tmp_path):
+    scfg = _scfg(tmp_path, checkpoint_interval=2)
+    e, sp = _engine(scfg)
+    rng = np.random.default_rng(21)
+    prompts = [rng.integers(1, 64, 9).astype(np.int32) for _ in range(3)]
+    want = _solo_want(sp, prompts, 12)
+    sched = PriorityScheduler(e)
+    for i, p in enumerate(prompts):
+        sched.submit(Request(rid=i, prompt=p.copy(), max_new=12))
+    finished: list = []
+    for _ in range(7):
+        sched.tick(finished)
+    st = sched._ckpt_store
+    assert len(st.list_checkpoints()) >= 2
+    newest = st.list_checkpoints()[-1]
+    data = _ckpt_bytes(st._ckpt_path(newest))
+    with open(st._ckpt_path(newest), "wb") as f:
+        f.write(data[:len(data) // 2])           # torn newest
+    e2, _ = _engine(scfg)
+    sched2, report = durability.recover_scheduler(e2)
+    assert report["checkpoints_skipped"] == 1
+    assert report["checkpoint_seq"] == newest - 1
+    got = {r.rid: list(r.generated) for r in sched2.run()}
+    for r in report["completed"]:
+        got[r.rid] = list(r.generated)
+    for i in range(3):
+        np.testing.assert_array_equal(np.asarray(got[i]), want[i])
+
+
+def test_recover_refuses_wrong_engine_fingerprint(tmp_path):
+    scfg = _scfg(tmp_path, checkpoint_interval=1)
+    e, sp = _engine(scfg)
+    sched = PriorityScheduler(e)
+    sched.submit(Request(rid=0, prompt=np.arange(1, 9, dtype=np.int32),
+                         max_new=8))
+    finished: list = []
+    sched.tick(finished)
+    assert sched._ckpt_store.list_checkpoints()
+    # same directory, different geometry: VALID checkpoint, wrong engine
+    other = dataclasses.replace(scfg, kv_num_blocks=10)
+    e2, _ = _engine(other)
+    with pytest.raises(ValueError, match="fingerprint"):
+        durability.recover_scheduler(e2)
+
+
+def test_recover_from_journal_only(tmp_path):
+    """No checkpoint ever published (interval 0): recovery rebuilds the
+    whole queue from wal-0 alone."""
+    scfg = _scfg(tmp_path, checkpoint_interval=0)
+    e, sp = _engine(scfg)
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(1, 64, 8).astype(np.int32) for _ in range(2)]
+    want = _solo_want(sp, prompts, 6)
+    sched = PriorityScheduler(e)
+    for i, p in enumerate(prompts):
+        sched.submit(Request(rid=i, prompt=p.copy(), max_new=6))
+    # crash before the first tick: only submit events exist
+    e2, _ = _engine(scfg)
+    sched2, report = durability.recover_scheduler(e2)
+    assert report["checkpoint_seq"] is None and report["requeued"] == 2
+    got = {r.rid: list(r.generated) for r in sched2.run()}
+    for i in range(2):
+        np.testing.assert_array_equal(np.asarray(got[i]), want[i])
+
+
+def test_recovery_draws_a_clean_checkpoint_line(tmp_path):
+    scfg = _scfg(tmp_path, checkpoint_interval=0)
+    e, sp = _engine(scfg)
+    sched = PriorityScheduler(e)
+    sched.submit(Request(rid=0, prompt=np.arange(1, 9, dtype=np.int32),
+                         max_new=6))
+    e2, _ = _engine(scfg)
+    sched2, _report = durability.recover_scheduler(e2)
+    st = sched2._ckpt_store
+    assert st.list_checkpoints()                 # recovery checkpointed
+    # the new epoch starts clean: replay from it sees no pre-crash events
+    events, truncated = st.read_journal(st.seq)
+    assert events == [] and not truncated
+
+
+def test_async_frontend_recover(tmp_path):
+    scfg = _scfg(tmp_path, checkpoint_interval=2)
+    e, sp = _engine(scfg)
+    rng = np.random.default_rng(30)
+    prompts = [rng.integers(1, 64, 8).astype(np.int32) for _ in range(3)]
+    want = _solo_want(sp, prompts, 10)
+    fe = AsyncFrontend(e)
+    reqs = [fe.submit(p, 10) for p in prompts]
+    finished: list = []
+    for _ in range(5):
+        fe.scheduler.tick(finished)
+    e2, _ = _engine(scfg)
+    fe2 = AsyncFrontend.recover(e2)
+    assert fe2.recovery_report["requeued"] + \
+        len(fe2.recovery_report["completed"]) == 3
+    # fresh rids continue past every recovered one
+    fresh = fe2.submit(prompts[0], 2)
+    assert fresh.rid > max(r.rid for r in reqs)
+    drained = asyncio.run(asyncio.wait_for(fe2.drain(), 60))
+    got = {r.rid: list(r.generated) for r in fe2._finished + drained}
+    for i in range(3):
+        np.testing.assert_array_equal(np.asarray(got[i]), want[i])
+    np.testing.assert_array_equal(np.asarray(got[fresh.rid]), want[0][:2])
+
+
+# ---------------------------------------------------------------------------
+# disk-fault chaos: torn/flip/fsync live while serving + recovering
+# ---------------------------------------------------------------------------
+
+def test_serving_survives_disk_faults_and_recovers(tmp_path):
+    """torn + flip land in published checkpoints (the fallback ladder's
+    job), fsync aborts one publish — the plane never raises, and
+    recovery after a mid-run kill still reaches bitwise parity."""
+    plan = faults.FaultPlan.parse("torn@3,flip@5,fsync@2")
+    scfg = _scfg(tmp_path, checkpoint_interval=1)
+    e, sp = _engine(scfg)
+    rng = np.random.default_rng(17)
+    prompts = [rng.integers(1, 64, 9).astype(np.int32) for _ in range(3)]
+    want = _solo_want(sp, prompts, 12)
+    sched = PriorityScheduler(e, fault_plan=plan)
+    for i, p in enumerate(prompts):
+        sched.submit(Request(rid=i, prompt=p.copy(), max_new=12))
+    finished: list = []
+    for _ in range(8):
+        sched.tick(finished)
+    fired = sched.fault_plan.fired
+    assert fired["torn"] + fired["flip"] + fired["fsync"] >= 2
+    sstats = sched._ckpt_store.stats
+    assert (sstats["torn_writes"] + sstats["bit_flips"]
+            + sstats["fsync_failures"]) >= 2     # the seams hit the store
+    # kill; recover with NO faults (the disk is what it is now)
+    e2, _ = _engine(scfg)
+    sched2, report = durability.recover_scheduler(e2)
+    got = {r.rid: list(r.generated) for r in report["completed"]}
+    for r in sched2.run():
+        got[r.rid] = list(r.generated)
+    for i in range(3):
+        np.testing.assert_array_equal(np.asarray(got[i]), want[i])
+    assert e2.pool.live_refs == 0
+    audit.audit_scheduler(sched2)
