@@ -51,6 +51,13 @@ column carries the headline quantity of that figure (speedup, ratio, k*).
                 newest-checkpoint fallback leg, hard asserts on
                 zero leaks + bitwise greedy continuity — written
                 to the ``durability`` section of BENCH_serve.json
+  telemetry     the observability plane: identical traffic run
+                with telemetry off vs on (hard token-parity
+                across modes), per-lane queue/prefill/decode
+                latency attribution computed from the request
+                trace, and a disabled-mode no-op overhead
+                micro-gate — written to the ``telemetry``
+                section of BENCH_serve.json
   paged_attn_bench  the in-place paged-attention trajectory:
                 per-decode-step KV bytes moved (kernel vs the
                 gather path's materialize-then-score) at true
@@ -918,6 +925,134 @@ def durability_bench(json_path: str = "BENCH_serve.json",
     return section
 
 
+def telemetry_bench(json_path: str = "BENCH_serve.json",
+                    smoke: bool = False):
+    """Observability plane -> the ``telemetry`` section of
+    BENCH_serve.json (``--only telemetry``).
+
+    Identical mixed-priority traffic on the constrained paged geometry,
+    run twice: telemetry disabled (the default) and enabled.  Hard
+    asserts: every request OK in both modes and bitwise token parity
+    ACROSS modes (observing the plane must not change a single token),
+    plus a well-formed canonical trace export with per-lane
+    queue/prefill/decode latency attribution on the enabled leg.  Perf
+    gates (warn unless BENCH_STRICT=1): the disabled run is not slower
+    than the enabled one beyond scheduler noise, and the disabled-mode
+    registry no-op costs under 2 µs per call.
+    """
+    import dataclasses
+    import json as _json
+    import jax
+    from repro.config import ServeConfig, get_config
+    from repro.models import transformer as tfm
+    from repro.serve import telemetry as tele
+    from repro.serve.engine import Engine, Request, RequestStatus
+    from repro.serve.frontend import PriorityScheduler
+
+    cfg = dataclasses.replace(
+        get_config("falcon3-3b-1.58bit").reduced(), vocab_size=256,
+        num_layers=2)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    tree = tfm.serve_params(params, cfg)
+    n_req = 3 if smoke else 6
+    max_new = 20
+    base = ServeConfig(max_seq_len=32, batch_size=3, kv_block_size=8,
+                       kv_num_blocks=9, prefill_chunk=8, paged_attn="gather")
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, 9).astype(np.int32)
+               for _ in range(n_req)]
+
+    def traffic():
+        return [Request(rid=i, prompt=prompts[i].copy(), max_new=max_new,
+                        priority=i % 3) for i in range(n_req)]
+
+    section = {
+        "meta": {"schema": "bench_telemetry_v1", "smoke": smoke,
+                 "requests": n_req, "max_new": max_new,
+                 "batch": base.batch_size,
+                 "pool_blocks": base.kv_num_blocks,
+                 "note": ("gather-mode paged engine on the reduced config; "
+                          "latencies are CPU wall clock — trajectory "
+                          "numbers, not TPU perf")},
+    }
+    runs = {}
+    for mode in (False, True):
+        eng = Engine(cfg, tree, dataclasses.replace(base, telemetry=mode))
+        for _timed in (False, True):     # first pass absorbs compiles
+            eng.reset()
+            eng.telemetry.trace.clear()
+            sched = PriorityScheduler(eng)
+            for r in traffic():
+                sched.submit(r)
+            t0 = time.perf_counter()
+            done = sched.run()
+            dt = time.perf_counter() - t0
+        assert all(r.status is RequestStatus.OK for r in done), \
+            [r.status for r in done]
+        runs[mode] = {
+            "dt": dt, "eng": eng, "sched": sched,
+            "toks": sum(len(r.generated) for r in done),
+            "tokens": {r.rid: list(r.generated) for r in done}}
+    # hard: observing the plane must not change a single decoded token
+    assert runs[False]["tokens"] == runs[True]["tokens"], \
+        "telemetry changed decode tokens"
+
+    # enabled leg: trace + attribution are the introspection payload
+    tel = runs[True]["eng"].telemetry
+    ev = tel.trace.events
+    assert ev, "enabled run produced no trace events"
+    doc = _json.loads(tel.dump_trace())
+    assert doc["schema"] == "repro_trace_v1" and doc["events"]
+    att = tele.latency_attribution(ev)
+    assert att and all(att[lane]["decode"]["n"] >= 1 for lane in att), \
+        "latency attribution missing decode stage"
+    text = tel.render_prometheus()
+    assert "serve_tick_phase_seconds" in text, "phase profile missing"
+    lanes = {str(lane): {stage: {"n": s["n"],
+                                 "mean_s": round(s["mean"], 6),
+                                 "p50_s": round(s["p50"], 6),
+                                 "p99_s": round(s["p99"], 6)}
+                         for stage, s in stages.items()}
+             for lane, stages in att.items()}
+
+    # disabled-mode no-op overhead: the whole call chain on a disabled
+    # registry (get -> NULL -> observe) per op
+    noop = tele.Telemetry(enabled=False)
+    n_ops = 20_000 if smoke else 200_000
+    t0 = time.perf_counter()
+    for _ in range(n_ops):
+        noop.histogram("serve_noop_probe").observe(1.0)
+    per_op_us = (time.perf_counter() - t0) / n_ops * 1e6
+
+    dt_off, dt_on = runs[False]["dt"], runs[True]["dt"]
+    section["disabled"] = {
+        "wall_s": round(dt_off, 4),
+        "tokens_per_s": round(runs[False]["toks"] / dt_off, 2)}
+    section["enabled"] = {
+        "wall_s": round(dt_on, 4),
+        "tokens_per_s": round(runs[True]["toks"] / dt_on, 2),
+        "trace_events": len(ev), "lane_latency": lanes,
+        "token_parity_vs_disabled": True}
+    section["noop_overhead_us_per_call"] = round(per_op_us, 4)
+    section["enabled_over_disabled_wall_ratio"] = round(dt_on / dt_off, 4)
+
+    perf_gate(dt_off <= dt_on * 1.10,
+              f"telemetry-off run slower than telemetry-on "
+              f"({dt_off:.3f}s vs {dt_on:.3f}s; timing-sensitive; "
+              f"BENCH_STRICT=1 to enforce)", section)
+    perf_gate(per_op_us < 2.0,
+              f"disabled-mode no-op costs {per_op_us:.2f}us/call "
+              f"(want < 2us; timing-sensitive)", section)
+    emit("telemetry_disabled", dt_off * 1e6,
+         f"tokens_per_s={runs[False]['toks'] / dt_off:.1f}")
+    emit("telemetry_enabled", dt_on * 1e6,
+         f"tokens_per_s={runs[True]['toks'] / dt_on:.1f};"
+         f"trace_events={len(ev)}")
+    emit("telemetry_noop", per_op_us, "us_per_disabled_registry_call")
+    _merge_json(json_path, {"telemetry": section})
+    return section
+
+
 def prefill_bench(json_path: str = "BENCH_prefill.json", smoke: bool = False):
     """Prefill-path trajectory benchmark -> BENCH_prefill.json.
 
@@ -1488,6 +1623,7 @@ def main() -> None:
         "chaos": lambda: chaos_bench(args.json, smoke=args.smoke),
         "durability": lambda: durability_bench(args.json,
                                                smoke=args.smoke),
+        "telemetry": lambda: telemetry_bench(args.json, smoke=args.smoke),
         "prefill": lambda: prefill_bench(args.prefill_json,
                                          smoke=args.smoke),
         "paged": lambda: paged_bench(args.prefill_json, smoke=args.smoke),

@@ -29,15 +29,19 @@
 # random tick with torn/flip/fsync disk faults live and asserts
 # recovery from disk (newest valid checkpoint + journal replay) is
 # leak-free and bitwise-continuous, plus a corrupted-newest-checkpoint
-# fallback leg.
+# fallback leg.  telemetry runs identical traffic with the observability
+# plane off vs on and asserts bitwise token parity across modes plus a
+# well-formed trace export; its disabled-mode no-op overhead micro-gate
+# keeps the default path free.
 # Timing-sensitive perf comparisons (chunked > scan, paged >= dense,
-# 1.5x >= 1.0x) are recorded-and-warned on a loaded machine;
+# 1.5x >= 1.0x, telemetry-off <= telemetry-on) are recorded-and-warned
+# on a loaded machine;
 # BENCH_STRICT=1 restores the hard asserts.  The asyncio frontend tests
 # in tests/test_frontend.py carry their own asyncio.wait_for timeout
 # guard, so a dead serve loop fails fast instead of hanging this script.
 # The committed BENCH_serve.json / BENCH_prefill.json are produced by the
 # full runs (`python benchmarks/run.py --only
-# serve|request_plane|prefill|paged|paged_attn|chaos|durability`,
+# serve|request_plane|prefill|paged|paged_attn|chaos|durability|telemetry`,
 # merge-preserving
 # writes into both JSONs) and tracked per PR.
 set -euo pipefail
@@ -92,6 +96,9 @@ if [[ "${1:-}" != "--fast" ]]; then
         --json /tmp/BENCH_serve_smoke.json
     echo "== durability smoke soak =="
     PYTHONPATH="src:." python benchmarks/run.py --only durability --smoke \
+        --json /tmp/BENCH_serve_smoke.json
+    echo "== telemetry smoke benchmark =="
+    PYTHONPATH="src:." python benchmarks/run.py --only telemetry --smoke \
         --json /tmp/BENCH_serve_smoke.json
 fi
 

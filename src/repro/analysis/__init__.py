@@ -70,6 +70,15 @@ packed-code path (``core/preprocess.pack_code_words`` →
 * **RL402** env-doc-stale — a table row documenting a variable nothing
   reads.
 
+``metricsdocs`` (:mod:`repro.analysis.metricsdocs`) — the telemetry
+metric catalog (``serve/__init__.py`` Observability section):
+
+* **RL501** metric-undocumented — a ``serve_*``/``rsr_*`` family name
+  handed to a telemetry constructor (``counter``/``gauge``/
+  ``histogram``/``stats_counters`` or the class forms) anywhere in
+  ``src/`` that is missing from the catalog.
+* **RL502** metric-doc-stale — a catalogued name nothing emits.
+
 Suppression baseline
 --------------------
 ``reprolint_baseline.json`` at the repo root is the committed list of
@@ -124,12 +133,18 @@ def _check_envdocs(root: str):
     return check(root)
 
 
+def _check_metricsdocs(root: str):
+    from repro.analysis.metricsdocs import check
+    return check(root)
+
+
 #: name -> callable(root) -> list[Finding]; ordered as reported.
 CHECKERS = {
     "tiles": _check_tiles,
     "boundaries": _check_boundaries,
     "dtypeflow": _check_dtypeflow,
     "envdocs": _check_envdocs,
+    "metricsdocs": _check_metricsdocs,
 }
 
 

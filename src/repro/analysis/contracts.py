@@ -81,6 +81,28 @@ ENV_TABLE_FILE = "src/repro/serve/__init__.py"
 ENV_PREFIX = "REPRO_"
 ENV_SCAN_DIRS = ("src",)
 
+# --- metric registry --------------------------------------------------------
+
+#: the metric name catalog shares the serve module docstring with the env
+#: table (Observability section).
+METRIC_CATALOG_FILE = ENV_TABLE_FILE
+
+#: name prefixes that make a string a telemetry metric name; anything a
+#: metric constructor gets that starts with one of these must be
+#: catalogued.
+METRIC_PREFIXES = ("serve_", "rsr_")
+
+#: call names (plain or attribute) whose first string argument is a
+#: metric family name: the repro.serve.telemetry constructors and the
+#: registry/Telemetry get-or-create passthroughs.
+METRIC_CALLS = frozenset({
+    "counter", "gauge", "histogram", "stats_counters",
+    "Counter", "Gauge", "Histogram", "StatsView",
+})
+
+#: directories scanned for metric emissions.
+METRIC_SCAN_DIRS = ("src",)
+
 # --- tile / VMEM probing geometry -------------------------------------------
 
 #: canonical serve geometry the tile checker evaluates the zoo under —

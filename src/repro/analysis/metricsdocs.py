@@ -1,0 +1,111 @@
+"""RL5xx — metric-name documentation drift checker (pure AST + docstring).
+
+The metric name catalog lives in the ``repro.serve`` module docstring's
+Observability section (``contracts.METRIC_CATALOG_FILE``), the same
+doc-as-contract pattern as the RL4xx env table.  Every metric family
+name the code emits — a string literal (or module-level name constant)
+handed as the first argument to one of the telemetry constructors
+(``contracts.METRIC_CALLS``: ``counter`` / ``gauge`` / ``histogram`` /
+``stats_counters`` and the class forms) and starting with a
+``contracts.METRIC_PREFIXES`` prefix — must appear in that catalog
+(RL501), and every catalogued name must correspond to a real emission
+(RL502).  A dashboard built against the catalog must never find a
+metric missing, and the catalog must never advertise one that nothing
+produces.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+
+from repro.analysis import contracts
+from repro.analysis.findings import Finding
+
+__all__ = ["check", "documented_metrics", "metric_emits"]
+
+_DOC_ROW = re.compile(
+    r"``((?:%s)\w+)``" % "|".join(
+        re.escape(p) for p in contracts.METRIC_PREFIXES))
+
+
+def documented_metrics(source: str) -> set[str]:
+    """serve_*/rsr_* names in the module docstring's metric catalog."""
+    doc = ast.get_docstring(ast.parse(source)) or ""
+    return set(_DOC_ROW.findall(doc))
+
+
+def _str_constants(tree: ast.Module) -> dict[str, str]:
+    """module-level NAME = "literal" bindings (name-constant indirection,
+    same resolution the env checker does)."""
+    out = {}
+    for node in tree.body:
+        if (isinstance(node, ast.Assign)
+                and isinstance(node.value, ast.Constant)
+                and isinstance(node.value.value, str)):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out[t.id] = node.value.value
+    return out
+
+
+def _call_name(func: ast.AST) -> str | None:
+    if isinstance(func, ast.Name):
+        return func.id
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    return None
+
+
+def metric_emits(source: str) -> dict[str, int]:
+    """{metric family name -> first emission line} in one file."""
+    tree = ast.parse(source)
+    consts = _str_constants(tree)
+    emits: dict[str, int] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call) or not node.args:
+            continue
+        if _call_name(node.func) not in contracts.METRIC_CALLS:
+            continue
+        arg = node.args[0]
+        if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+            name = arg.value
+        elif isinstance(arg, ast.Name):
+            name = consts.get(arg.id)
+        else:
+            name = None
+        if name and name.startswith(contracts.METRIC_PREFIXES):
+            emits.setdefault(name, node.lineno)
+    return emits
+
+
+def check(root: str) -> list[Finding]:
+    catalog_path = os.path.join(root, contracts.METRIC_CATALOG_FILE)
+    with open(catalog_path) as f:
+        documented = documented_metrics(f.read())
+    emitted_at: dict[str, tuple[str, int]] = {}
+    for rel in contracts.METRIC_SCAN_DIRS:
+        base = os.path.join(root, rel)
+        for dirpath, _, names in os.walk(base):
+            for n in sorted(names):
+                if not n.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, n)
+                rel_path = os.path.relpath(path, root).replace(os.sep, "/")
+                with open(path) as f:
+                    for name, line in metric_emits(f.read()).items():
+                        emitted_at.setdefault(name, (rel_path, line))
+    findings = []
+    for name in sorted(set(emitted_at) - documented):
+        rel_path, line = emitted_at[name]
+        findings.append(Finding(
+            "RL501", rel_path, name,
+            f"metric {name} is emitted here but missing from the metric "
+            f"catalog in {contracts.METRIC_CATALOG_FILE}",
+            line=line))
+    for name in sorted(documented - set(emitted_at)):
+        findings.append(Finding(
+            "RL502", contracts.METRIC_CATALOG_FILE, name,
+            f"metric {name} is catalogued but nothing under "
+            f"{'/'.join(contracts.METRIC_SCAN_DIRS)} emits it"))
+    return findings

@@ -228,6 +228,16 @@ class ServeConfig:
     checkpoint_keep: int = 3          # keep-last-K checkpoint retention
                                       # (older ones + their journal epochs
                                       # are pruned after each publish)
+    # --- observability (repro.serve.telemetry) ---
+    telemetry: bool = False           # enable the metrics registry,
+                                      # request tracing, and tick/kernel
+                                      # profiling ($REPRO_TELEMETRY
+                                      # outranks); stats counter views
+                                      # count regardless
+    trace_path: str = ""              # file that dump_trace() writes the
+                                      # canonical-JSON trace export to
+                                      # ($REPRO_TRACE_PATH outranks;
+                                      # "" = return-only)
 
 
 @dataclasses.dataclass(frozen=True)

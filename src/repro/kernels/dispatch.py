@@ -66,6 +66,9 @@ import jax.numpy as jnp
 from repro.core import binlib
 from repro.kernels.ops import _pad_to
 from repro.kernels.rsr_onehot import default_interpret, rsr_onehot_matmul
+# stdlib-only module: safe to import from kernel code (no serve cycle);
+# record_dispatch is a host-side count at trace time, not a traced op
+from repro.serve import telemetry
 
 __all__ = ["BACKENDS", "select_backend", "select_tiles", "rsr_serve_linear",
            "rsr_serve_matmul", "autotune", "AUTOTUNE_TABLE", "TUNED_TILES",
@@ -343,6 +346,7 @@ def rsr_serve_matmul(xb: jax.Array, codes: jax.Array, *, k: int,
     xb = xb.astype(jnp.float32)
 
     if backend == "scatter":
+        telemetry.record_dispatch(backend, _regime(b), (0, 0, 0))
         y = _scatter_matmul(xb, codes, k)
         if scale is not None:
             y = y * scale
@@ -352,6 +356,9 @@ def rsr_serve_matmul(xb: jax.Array, codes: jax.Array, *, k: int,
         return y
 
     tile_b, tile_blk, tile_n = tiles or select_tiles(b, nb, n)
+    # runs at trace time (static shapes): one count per compiled variant
+    telemetry.record_dispatch(backend, _regime(b),
+                              (tile_b, tile_blk, tile_n))
     x_p = _pad_to(_pad_to(xb, 0, tile_b), 1, tile_n)
     pattern = binlib.tern_matrix(k)
     nb_pad = _round_up(nb, tile_blk)
@@ -450,7 +457,10 @@ def autotune(b: int, n: int, n_out: int, *, k: int = 5,
         t0 = time.perf_counter()
         for _ in range(reps):
             fn().block_until_ready()
-        rows.append((tiles, (time.perf_counter() - t0) / reps * 1e6))
+        per_rep_s = (time.perf_counter() - t0) / reps
+        telemetry.observe_dispatch_seconds(select_backend(backend),
+                                           per_rep_s)
+        rows.append((tiles, per_rep_s * 1e6))
     rows.sort(key=lambda r: r[1])
     key = (_regime(b), _bucket(nb), _bucket(n))
     TUNED_TILES[key] = rows[0][0]

@@ -29,6 +29,13 @@ KV cache, and the async request plane.
   retention) plus a write-ahead request journal between checkpoints,
   and ``recover_scheduler`` (newest VALID checkpoint + journal-tail
   replay, corruption falls back instead of raising).
+* ``telemetry`` — the observability plane: a typed metrics registry
+  (counters / gauges / fixed-bucket histograms with labels; the shared
+  no-op metric when disabled), dict-compatible ``StatsView`` counter
+  families behind every legacy ``stats`` dict, deterministic
+  request-lifecycle tracing on the scheduler's injectable clock, and
+  Prometheus/JSON export through ``AsyncFrontend.metrics()`` /
+  ``dump_trace()``.  See the Observability section below.
 
 Request-plane guide
 -------------------
@@ -157,7 +164,85 @@ Under pressure the plane walks this ladder, gentlest first:
                        .analysis`` (default
                        ``reprolint_baseline.json`` at the linted
                        root); see :mod:`repro.analysis`.
+``REPRO_TELEMETRY``    Enable the serve-plane telemetry layer
+                       (metrics registry families, request-lifecycle
+                       tracing, tick/kernel profiling); outranks
+                       ``ServeConfig.telemetry``.  Off (the default),
+                       metric constructors return the shared no-op
+                       metric and tracing records nothing — the stats
+                       counter views below count regardless.
+``REPRO_TRACE_PATH``   File that ``AsyncFrontend.dump_trace()`` /
+                       ``Telemetry.dump_trace()`` additionally writes
+                       the canonical-JSON trace export to; outranks
+                       ``ServeConfig.trace_path`` (empty: the export
+                       is only returned).
 =====================  ==================================================
+
+Observability
+-------------
+``repro.serve.telemetry`` is the one measurement substrate under the
+plane.  ``$REPRO_TELEMETRY`` (or ``ServeConfig.telemetry``) turns on
+tracing, tick-phase timers, histograms, and gauges; the ``StatsView``
+counter families count unconditionally, so the historical ``stats``
+dict assertions hold with telemetry off.  ``AsyncFrontend.metrics()``
+returns Prometheus text exposition, ``metrics_json()`` the same as a
+JSON dict, and ``dump_trace()`` the canonical-JSON event trace —
+transport-shaped for the ROADMAP's HTTP frontend (``/metrics``,
+``/trace``).
+
+Metric name catalog (every name emitted in code appears here — the
+``metricsdocs`` reprolint pass, RL501/RL502, enforces the drift both
+ways):
+
+* ``serve_sched_stats`` — priority-scheduler lifecycle counters
+  (label ``key``: ticks, admissions, preemptions, shed, timeouts,
+  readmissions, readmission_hit_tokens, prefill_faults, quarantined,
+  restored, checkpoints, journal_events).
+* ``serve_pool_stats`` — block-pool allocator/prefix-sharing counters
+  (label ``key``: admissions, lookup_tokens, hit_tokens, cow_copies,
+  warm_hit_blocks, warm_reclaims, faults_injected).
+* ``serve_checkpoint_stats`` — durable checkpoint/journal store
+  counters (label ``key``: checkpoints_written, checkpoint_failures,
+  checkpoint_bytes, journal_records, fsync_failures, torn_writes,
+  bit_flips, pruned_checkpoints).
+* ``serve_fault_fired`` — injected faults fired, by seam (label
+  ``key``: alloc, prefill, poison, clock, slow, torn, flip, fsync).
+* ``serve_tick_phase_seconds`` — histogram of per-tick phase durations
+  (label ``phase``: schedule, prefill, decode, audit).
+* ``serve_tick_duration_seconds`` — histogram of whole-tick durations.
+* ``serve_batch_occupancy`` — gauge: occupied batch slots at tick end.
+* ``serve_pool_free_blocks`` / ``serve_pool_warm_blocks`` /
+  ``serve_pool_used_blocks`` — gauges: pool claimable (free + warm),
+  warm-subset, and live-referenced block counts at tick end.
+* ``serve_request_latency_seconds`` — histogram of per-request latency
+  by lifecycle stage (label ``stage``: queue = submit→admit, prefill =
+  admit→first token, decode = first token→finish, total).
+* ``serve_decode_step_seconds`` — histogram of measured batched decode
+  step seconds (``Engine.decode_throughput``).
+* ``rsr_dispatch_calls`` — counter of RSR serve-matmul dispatches,
+  once per traced shape (labels ``backend`` / ``regime`` /
+  ``tile`` as ``BxBLKxN``, ``0x0x0`` for the un-tiled scatter path).
+* ``rsr_dispatch_seconds`` — histogram of eagerly measured matmul
+  durations (autotune candidates; label ``backend``).
+
+Trace event schema: events are dicts ``{"seq", "ev", "t", ...}`` —
+``seq`` a 1-based total order, ``t`` the scheduler's injectable clock
+(byte-deterministic exports under a fake/fault clock).  Events and
+their extra fields:
+
+* ``submit``      — rid, lane, prompt, max_new (accepted requests);
+* ``reject``      — rid, status (terminal at submit);
+* ``admit``       — rid, slot, readmit, hit_tokens (warm prefix hit);
+* ``first_token`` — rid (prefill finished; sampling began);
+* ``decode``      — tick, active (one per batched decode step);
+* ``preempt``     — rid, slot, n (cumulative preemptions);
+* ``shed`` / ``timeout`` — rid (deadline enforcement);
+* ``finish``      — rid, status, tokens (every terminal transition;
+  quarantined requests carry status FAILED_NUMERIC).
+
+``telemetry.latency_attribution(events)`` folds a trace into per-lane
+queue/prefill/decode/total percentiles (the ``--only telemetry`` bench
+section records exactly that).
 
 ``AuditError`` failure-mode runbook
 -----------------------------------

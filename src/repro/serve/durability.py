@@ -92,6 +92,8 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.serve import telemetry
+
 __all__ = ["CheckpointStore", "pack_record", "iter_records",
            "encode_array", "decode_array", "recover_scheduler",
            "CKPT_MAGIC", "WAL_MAGIC", "FORMAT_VERSION"]
@@ -194,10 +196,14 @@ class CheckpointStore:
         seqs = self.list_checkpoints()
         self.seq = seqs[-1] if seqs else 0   # newest published checkpoint
         self._wal_f = None                   # lazily-opened current epoch
-        self.stats = {"checkpoints_written": 0, "checkpoint_failures": 0,
-                      "checkpoint_bytes": 0, "journal_records": 0,
-                      "fsync_failures": 0, "torn_writes": 0, "bit_flips": 0,
-                      "pruned_checkpoints": 0}
+        # dict-compatible counter view (telemetry.StatsView): exported as
+        # serve_checkpoint_stats{key=} once a scheduler adopts it
+        self.stats = telemetry.stats_counters(
+            "serve_checkpoint_stats",
+            ("checkpoints_written", "checkpoint_failures",
+             "checkpoint_bytes", "journal_records", "fsync_failures",
+             "torn_writes", "bit_flips", "pruned_checkpoints"),
+            help="Durable checkpoint/journal store counters.")
 
     # -- paths / listing ----------------------------------------------------
 

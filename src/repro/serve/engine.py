@@ -88,7 +88,7 @@ import numpy as np
 from repro.config import ModelConfig, ServeConfig
 from repro.kernels import paged_attention
 from repro.models import transformer as tfm
-from repro.serve import faults, paging
+from repro.serve import faults, paging, telemetry
 
 
 class Engine:
@@ -96,6 +96,13 @@ class Engine:
         self.cfg, self.scfg = cfg, scfg
         self.params = serve_tree
         self.batch = scfg.batch_size
+        # observability plane ($REPRO_TELEMETRY > scfg.telemetry) and the
+        # engine's time source: perf_counter standalone, replaced by the
+        # scheduler's injectable (possibly fault-skewed) clock when one
+        # attaches — decode_throughput then measures on the same clock
+        # the plane schedules with
+        self.telemetry = telemetry.Telemetry.from_config(scfg)
+        self.clock: Callable[[], float] = time.perf_counter
         self.layout = paging.paged_layout(cfg, scfg)
         self.cache = tfm.init_cache(cfg, self.batch, scfg.max_seq_len,
                                     layout=self.layout)
@@ -608,14 +615,22 @@ class Engine:
         self._reserve_all(start + max(1, warmup) + steps)
         tok = jnp.ones((self.batch, 1), jnp.int32)
         cache = self.cache
+        clock = self.clock      # injectable: the scheduler's (fault) clock
         for _ in range(max(1, warmup)):     # ≥1: compile must stay untimed
             logits, cache = self._decode(self.params, cache, tok)
         logits.block_until_ready()
-        t0 = time.perf_counter()
+        t0 = clock()
         for _ in range(steps):
             logits, cache = self._decode(self.params, cache, tok)
         logits.block_until_ready()
-        dt = time.perf_counter() - t0
+        dt = clock() - t0
+        if dt <= 0:             # frozen injected clock: keep the math finite
+            dt = 1e-12
+        if self.telemetry.enabled and steps > 0:
+            self.telemetry.histogram(
+                "serve_decode_step_seconds",
+                "Measured batched decode step seconds "
+                "(decode_throughput).").observe(dt / steps)
         return {"tokens_per_s": self.batch * steps / dt,
                 "us_per_step": dt / steps * 1e6,
                 "batch": self.batch, "steps": steps}
@@ -793,6 +808,8 @@ class BatchScheduler:
     def __init__(self, engine: Engine, *, clock=None):
         self.engine = engine
         self.clock = clock if clock is not None else time.monotonic
+        self.telemetry = engine.telemetry
+        engine.clock = self.clock      # one time source for plane + engine
         self.slots: list[Optional[Request]] = [None] * engine.batch
         self.queue: list[Request] = []
         self.rejected: list[Request] = []
@@ -812,6 +829,14 @@ class BatchScheduler:
     def idle(self) -> bool:
         return not self.queue and all(s is None for s in self.slots)
 
+    def _trace(self, ev: str, **fields) -> None:
+        """Record one lifecycle trace event (no-op unless telemetry is
+        enabled; the timestamp is THIS scheduler's injectable clock, so
+        traces are deterministic under fake/fault clocks)."""
+        tel = self.telemetry
+        if tel.enabled:
+            tel.trace.event(ev, self.clock(), **fields)
+
     def submit(self, req: Request):
         """Validate and enqueue.  Invalid requests never enter the queue:
         they are marked failed (``req.status`` machine-readable, ``req.
@@ -826,9 +851,12 @@ class BatchScheduler:
             req.done = True
             req.completed_at = self.clock()
             self.rejected.append(req)
+            self._trace("reject", rid=req.rid, status=req.status.name)
             return
         req.status = RequestStatus.QUEUED
         self.queue.append(req)
+        self._trace("submit", rid=req.rid, lane=req.priority,
+                    prompt=len(req.prompt), max_new=req.max_new)
 
     def _validate(self, req: Request):
         """None when admissible, else (terminal RequestStatus, detail)."""
@@ -873,12 +901,41 @@ class BatchScheduler:
         self.slots[i] = None
         self.engine.free_slot(i)
         self._pos[i] = 0
+        if self.telemetry.enabled:
+            self._trace("finish", rid=req.rid, status=status.name,
+                        tokens=len(req.generated))
+            self._observe_latency(req)
         return req
+
+    def _observe_latency(self, req: Request) -> None:
+        """Per-stage latency attribution into
+        ``serve_request_latency_seconds{stage}`` — stage boundary
+        timestamps (``_t_admit`` / ``_t_first``) are stamped
+        opportunistically while telemetry is enabled."""
+        hist = self.telemetry.histogram(
+            "serve_request_latency_seconds",
+            "Request latency by lifecycle stage.", ("stage",))
+        t_sub = req.arrival
+        t_adm = getattr(req, "_t_admit", None)
+        t_tok = getattr(req, "_t_first", None)
+        t_fin = req.completed_at
+        if t_sub is not None and t_adm is not None:
+            hist.labels(stage="queue").observe(t_adm - t_sub)
+        if t_adm is not None and t_tok is not None:
+            hist.labels(stage="prefill").observe(t_tok - t_adm)
+        if t_tok is not None and t_fin is not None:
+            hist.labels(stage="decode").observe(t_fin - t_tok)
+        if t_sub is not None and t_fin is not None:
+            hist.labels(stage="total").observe(t_fin - t_sub)
 
     def _emit(self, req: Request, tok: int, events: list):
         """Record one generated token as a stream event + fire the
         request's streaming callback (if any)."""
         events.append((req, tok))
+        if self.telemetry.enabled and len(req.generated) == 1:
+            t = self.clock()
+            req._t_first = t
+            self.telemetry.trace.event("first_token", t, rid=req.rid)
         if req.on_token is not None:
             req.on_token(req, tok)
 
@@ -921,6 +978,11 @@ class BatchScheduler:
                                       plan=None if plan is True else plan)
             progressed = True
             req.status = RequestStatus.RUNNING
+            if self.telemetry.enabled:
+                t = self.clock()
+                req._t_admit = t
+                self.telemetry.trace.event("admit", t, rid=req.rid, slot=i,
+                                           readmit=False, hit_tokens=0)
             tok = int(self._sample(logits[None, :])[0])
             req.generated.append(tok)
             self._emit(req, tok, events)
@@ -942,6 +1004,7 @@ class BatchScheduler:
         eng = self.engine
         max_seq = eng.scfg.max_seq_len
         active = self._decoding_slots()
+        self._trace("decode", tick=self._tick_no, active=len(active))
         for i in range(eng.batch):
             if self.slots[i] is None and self._pos[i] + 1 >= max_seq:
                 eng.free_slot(i)      # recycle an idle slot's garbage rows

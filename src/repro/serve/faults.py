@@ -69,6 +69,8 @@ from typing import Callable, Dict, FrozenSet, Optional
 
 import numpy as np
 
+from repro.serve import telemetry
+
 __all__ = ["FaultPlan", "FaultClock", "PrefillFault", "env_fault_plan"]
 
 
@@ -134,9 +136,14 @@ class FaultPlan:
         self._prefill_calls = 0
         self._disk_writes = 0
         self._fsync_calls = 0
-        self.fired = {"alloc": 0, "prefill": 0, "poison": 0,
-                      "clock": 0, "slow": 0, "torn": 0, "flip": 0,
-                      "fsync": 0}
+        # dict-compatible counter view (telemetry.StatsView): every
+        # existing `fired["seam"] += 1` / equality assert is unchanged;
+        # exported as serve_fault_fired{key=} once a scheduler adopts it
+        self.fired = telemetry.stats_counters(
+            "serve_fault_fired",
+            ("alloc", "prefill", "poison", "clock", "slow", "torn",
+             "flip", "fsync"),
+            help="Injected faults fired, by seam.")
 
     # -- construction ------------------------------------------------------
 

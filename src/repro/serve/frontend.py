@@ -80,7 +80,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve import durability, faults, paging
+from repro.serve import durability, faults, paging, telemetry
 from repro.serve.engine import (BatchScheduler, Engine, Request,
                                 RequestStatus)
 
@@ -120,11 +120,15 @@ class PriorityScheduler(BatchScheduler):
             0, int(getattr(scfg, "max_prefill_tokens_per_tick", 0)))
         self._tick_prefill_left: Optional[int] = None
         self._prefilling: dict[int, object] = {}  # slot -> PrefillJob
-        self.stats = {"ticks": 0, "preemptions": 0, "shed": 0,
-                      "timeouts": 0, "readmissions": 0,
-                      "readmission_hit_tokens": 0, "admissions": 0,
-                      "prefill_faults": 0, "quarantined": 0, "restored": 0,
-                      "checkpoints": 0, "journal_events": 0}
+        # registry-backed counter view: the historical dict surface
+        # (stats["k"] += 1, dict(stats), snapshot/restore) is unchanged;
+        # exports see it as serve_sched_stats{key="..."}
+        self.stats = telemetry.stats_counters(
+            "serve_sched_stats",
+            ("ticks", "preemptions", "shed", "timeouts", "readmissions",
+             "readmission_hit_tokens", "admissions", "prefill_faults",
+             "quarantined", "restored", "checkpoints", "journal_events"),
+            help="Priority-scheduler lifecycle counters.")
         # fault-injection plan: explicit arg > $REPRO_FAULTS >
         # scfg.fault_plan.  Wired once here: alloc ordinals compose onto
         # the pool's existing injector ($REPRO_FAULT_ALLOC stays live as
@@ -142,6 +146,8 @@ class PriorityScheduler(BatchScheduler):
             if self.fault_plan.needs_clock:
                 self._fault_clock = faults.FaultClock(self.clock)
                 self.clock = self._fault_clock
+                engine.clock = self.clock   # keep the engine on the same
+                                            # (now fault-skewed) time source
         # durability policy: $REPRO_CHECKPOINT_DIR / _INTERVAL outrank the
         # scfg fields (same precedence rule as every other REPRO_* knob).
         # A configured directory turns on the write-ahead journal on every
@@ -161,6 +167,32 @@ class PriorityScheduler(BatchScheduler):
             self._ckpt_store = durability.CheckpointStore(
                 cdir, keep=int(getattr(scfg, "checkpoint_keep", 3)),
                 faults=self.fault_plan)
+        # observability: adopt every subsystem's counter view into the
+        # engine's registry (views count regardless of the enabled flag;
+        # adoption only makes them exportable), and pre-build the
+        # profiling families (NULL no-ops when telemetry is off)
+        tel = self.telemetry
+        tel.adopt(self.stats)
+        if engine.paged:
+            tel.adopt(engine.pool.stats)
+        if self.fault_plan is not None:
+            tel.adopt(self.fault_plan.fired)
+        if self._ckpt_store is not None:
+            tel.adopt(self._ckpt_store.stats)
+        self._phase_hist = tel.histogram(
+            "serve_tick_phase_seconds",
+            "Per-tick phase durations (schedule/prefill/decode/audit).",
+            ("phase",))
+        self._tick_hist = tel.histogram(
+            "serve_tick_duration_seconds", "Whole-tick durations.")
+        self._g_occupancy = tel.gauge(
+            "serve_batch_occupancy", "Occupied batch slots at tick end.")
+        self._g_pool_free = tel.gauge(
+            "serve_pool_free_blocks", "Free KV blocks at tick end.")
+        self._g_pool_warm = tel.gauge(
+            "serve_pool_warm_blocks", "Warm (reclaimable) KV blocks.")
+        self._g_pool_used = tel.gauge(
+            "serve_pool_used_blocks", "Live-referenced KV blocks.")
 
     # -- durability: write-ahead journal + periodic checkpoints ------------
 
@@ -271,6 +303,7 @@ class PriorityScheduler(BatchScheduler):
                 req.done = True
                 req.completed_at = now
                 self.stats["shed"] += 1
+                self._trace("shed", rid=req.rid)
                 finished.append(req)
         self.queue = keep
 
@@ -283,6 +316,7 @@ class PriorityScheduler(BatchScheduler):
             req.error = (f"request {req.rid}: deadline exceeded after "
                          f"{len(req.generated)}/{req.max_new} tokens")
             self.stats["timeouts"] += 1
+            self._trace("timeout", rid=req.rid)
             finished.append(self._finish(i, status=RequestStatus.TIMEOUT))
 
     # -- admission ---------------------------------------------------------
@@ -332,23 +366,33 @@ class PriorityScheduler(BatchScheduler):
             except paging.BlockPoolExhausted:
                 # the plan said it fits but alloc failed (fault injection,
                 # or a COW/warm race): roll the slot back and defer — the
-                # next tick replans against the true pool state
+                # next tick replans against the true pool state.
+                # free_slot zeroes the slot's DEVICE position, so the host
+                # mirror must follow or it stays offset forever (audit I6)
                 eng.free_slot(slot)
+                self._pos[slot] = 0
                 break
             except faults.PrefillFault:
                 # injected transient prefill failure: raised before any
                 # allocator/cache mutation, so rollback is the same defer
                 self.stats["prefill_faults"] += 1
                 eng.free_slot(slot)
+                self._pos[slot] = 0
                 break
             self.queue.pop(qi)
             progressed = True
             self.stats["admissions"] += 1
+            hit = 0
             if readmit:
                 self.stats["readmissions"] += 1
                 if eng.paged:
-                    self.stats["readmission_hit_tokens"] += (
-                        eng.pool.stats["hit_tokens"] - hit_before)
+                    hit = eng.pool.stats["hit_tokens"] - hit_before
+                    self.stats["readmission_hit_tokens"] += hit
+            if self.telemetry.enabled:
+                req._t_admit = now
+                self.telemetry.trace.event(
+                    "admit", now, rid=req.rid, slot=slot, readmit=readmit,
+                    hit_tokens=int(hit))
             req.status = RequestStatus.RUNNING
             self.slots[slot] = req
             self._pos[slot] = 0
@@ -430,6 +474,7 @@ class PriorityScheduler(BatchScheduler):
         self._pos[slot] = 0
         self.queue.append(req)
         self.stats["preemptions"] += 1
+        self._trace("preempt", rid=req.rid, slot=slot, n=req.preemptions)
         self._journal({"ev": "preempt", "rid": req.rid,
                        "n": req.preemptions})
         return req
@@ -539,13 +584,28 @@ class PriorityScheduler(BatchScheduler):
             if skew:
                 self._fault_clock.advance(skew)
         now = self.clock()
+        # phase profiler: extra clock reads happen ONLY when telemetry is
+        # on, so disabled-mode tick behavior (and fake-clock tests) is
+        # bit-for-bit the pre-telemetry one
+        prof = self.telemetry.enabled
+        pt = now
+
+        def mark(phase: str) -> None:
+            nonlocal pt
+            if prof:
+                t = self.clock()
+                self._phase_hist.labels(phase=phase).observe(t - pt)
+                pt = t
+
         self.stats["ticks"] += 1
         self._timeout_running(now, finished)
         self._shed_queue(now, finished)
+        mark("schedule")
         self._tick_prefill_left = (self.prefill_budget
                                    if self.prefill_budget > 0 else None)
         self._step_jobs(finished, events)
         progressed = self._admit(finished, events)
+        mark("prefill")
         if not any(s is not None for s in self.slots):
             if self.queue and not progressed:
                 self._barren += 1
@@ -555,18 +615,39 @@ class PriorityScheduler(BatchScheduler):
                         f"requests, no admission for {self._barren} ticks")
             self._apply_end_skew()
             self._maybe_audit()
+            mark("audit")
+            self._observe_tick_gauges(now)
             return events
         self._barren = 0
         self._extend_or_preempt(now)
         if self._decoding_slots():
             self._decode_once(finished, events)
+        mark("decode")
         self._apply_end_skew()
         dt = self.clock() - now
         if dt > 0:
             self._tick_ema = (dt if self._tick_ema is None
                               else 0.8 * self._tick_ema + 0.2 * dt)
         self._maybe_audit()
+        mark("audit")
+        self._observe_tick_gauges(now)
         return events
+
+    def _observe_tick_gauges(self, tick_start: float) -> None:
+        """Tick-end occupancy/pool gauges + whole-tick duration (enabled
+        mode only — every call here is a no-op on NULL metrics, but the
+        guard also skips the clock read)."""
+        if not self.telemetry.enabled:
+            return
+        self._tick_hist.observe(self.clock() - tick_start)
+        self._g_occupancy.set(
+            sum(1 for s in self.slots if s is not None))
+        eng = self.engine
+        if eng.paged:
+            free = eng.pool.free_count    # claimable = truly free + warm
+            self._g_pool_free.set(free)
+            self._g_pool_warm.set(eng.pool.warm_count)
+            self._g_pool_used.set(eng.layout.num_blocks - free)
 
     # -- crash-safe snapshot / restore -------------------------------------
 
@@ -667,7 +748,10 @@ class PriorityScheduler(BatchScheduler):
             self.queue.append(req)
         self._tick_no = int(snap["tick_no"])
         self._tick_ema = snap["tick_ema"]
-        self.stats = {**self.stats, **snap["stats"]}
+        # per-key assignment into the registry-adopted view (replacing the
+        # view object would detach the exporter)
+        for k, v in snap["stats"].items():
+            self.stats[k] = v
         self.stats["restored"] = (self.stats.get("restored", 0)
                                   + len(snap["inflight"]))
         self._key = jnp.asarray(np.asarray(snap["key"], np.uint32))
@@ -799,3 +883,25 @@ class AsyncFrontend:
         self._stopping = True
         if self._wake is not None:
             self._wake.set()
+
+    # -- observability (transport-shaped: an HTTP frontend serves these
+    # verbatim as /metrics and /trace) ---------------------------------
+
+    @property
+    def telemetry(self) -> telemetry.Telemetry:
+        return self.scheduler.telemetry
+
+    def metrics(self) -> str:
+        """Prometheus text exposition of every registered family
+        (adopted stats views always; registry families when enabled)."""
+        return self.telemetry.render_prometheus()
+
+    def metrics_json(self) -> dict:
+        """JSON snapshot of the same registry state."""
+        return self.telemetry.metrics_json()
+
+    def dump_trace(self, path: Optional[str] = None) -> str:
+        """Canonical-JSON request-lifecycle trace export (byte-
+        deterministic under an injected clock); also written to ``path``
+        or ``$REPRO_TRACE_PATH`` when configured."""
+        return self.telemetry.dump_trace(path)

@@ -62,6 +62,7 @@ from typing import Callable, List, Optional, Sequence
 import numpy as np
 
 from repro.config import ModelConfig, ServeConfig
+from repro.serve import telemetry
 
 __all__ = ["PagedLayout", "BlockPool", "BlockPoolExhausted", "paged_layout",
            "block_hashes", "prefix_sharing_supported", "env_fault_injector"]
@@ -232,9 +233,14 @@ class BlockPool:
         self.fault_injector = (fault_injector if fault_injector is not None
                                else env_fault_injector())
         self._alloc_calls = 0
-        self.stats = {"admissions": 0, "lookup_tokens": 0, "hit_tokens": 0,
-                      "cow_copies": 0, "warm_hit_blocks": 0,
-                      "warm_reclaims": 0, "faults_injected": 0}
+        # dict-compatible counter view (telemetry.StatsView): same call
+        # sites as the old plain dict, exported as serve_pool_stats{key=}
+        # once a scheduler adopts it into its registry
+        self.stats = telemetry.stats_counters(
+            "serve_pool_stats",
+            ("admissions", "lookup_tokens", "hit_tokens", "cow_copies",
+             "warm_hit_blocks", "warm_reclaims", "faults_injected"),
+            help="Block-pool allocator/prefix-sharing counters.")
 
     # -- bookkeeping -------------------------------------------------------
 

@@ -1,0 +1,569 @@
+"""Serve-plane telemetry: metrics registry, request tracing, profiling.
+
+Nine PRs of serve plane (priority scheduling, chaos hardening, durable
+checkpoints) grew four independently-invented ``stats`` dict idioms
+(``frontend.py``, ``paging.py``, ``durability.py``, ``faults.py``) and a
+hardcoded ``time.perf_counter()`` pair in ``engine.py`` — scattered
+enough that "where did this request's latency go?" had no answer.  This
+module is the one measurement substrate under all of it:
+
+* **Metrics registry** — typed :class:`Counter` / :class:`Gauge` /
+  :class:`Histogram` families with label dimensions, rendered as
+  Prometheus text exposition or a JSON snapshot.  When telemetry is
+  disabled (the default), every registry constructor hands back the one
+  shared :data:`NULL` no-op metric: call sites pay a single attribute
+  call and allocate nothing.
+* **Dict-compatible counter views** — :func:`stats_counters` returns a
+  :class:`StatsView`, a ``MutableMapping`` that the legacy ``stats``
+  dict call sites (``stats["k"] += 1``, ``dict(stats)``,
+  ``stats == {...}``) drive unchanged, while the registry ``adopt()``-s
+  it as a labelled counter family for export.  Views count ALWAYS —
+  tests and benches assert on them with telemetry off; the enabled flag
+  gates only the extra work (tracing, phase timers, histograms,
+  gauges).
+* **Request-lifecycle tracing** — :class:`Tracer` records schema'd
+  events (``submit → admit → first_token → … → finish``, see the
+  catalog in ``repro/serve/__init__.py``) with a monotonically
+  increasing ``seq`` ordinal and timestamps the *caller* reads from the
+  scheduler's injectable clock — never a wall clock of this module's
+  own — so a fake/fault clock makes the export byte-deterministic.
+* **Kernel profiling hooks** — :func:`record_dispatch` /
+  :func:`observe_dispatch_seconds` count RSR serve-matmul dispatches by
+  backend/regime/tile and time autotune candidates.  These live at
+  module scope (dispatch has no engine handle) and fire once per traced
+  shape, so they are unconditionally on.
+
+Enablement resolves the repo-wide precedence rule: ``$REPRO_TELEMETRY``
+outranks ``ServeConfig.telemetry``; ``$REPRO_TRACE_PATH`` outranks
+``ServeConfig.trace_path`` (a configured path makes ``dump_trace()``
+also write the JSON there).
+
+The module imports only the stdlib — every serve module (and
+``kernels/dispatch.py``) can import it without cycles.
+"""
+from __future__ import annotations
+
+import json
+import os
+from collections.abc import MutableMapping
+from typing import Dict, Iterable, List, Optional, Tuple
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "StatsView",
+    "Telemetry", "Tracer", "latency_attribution", "observe_dispatch_seconds",
+    "record_dispatch", "stats_counters",
+]
+
+# fixed histogram buckets (seconds): 100us .. 10s geometric-ish ladder,
+# +Inf implicit.  Fixed at module scope so two runs of the same traffic
+# always land counts in the same buckets — exports stay comparable.
+LATENCY_BUCKETS_S: Tuple[float, ...] = (
+    1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2,
+    0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0)
+
+
+def _truthy(v: str) -> bool:
+    return v.strip().lower() in ("1", "true", "yes", "on")
+
+
+def _fmt(v) -> str:
+    """Deterministic sample formatting: integral floats print as ints."""
+    f = float(v)
+    return str(int(f)) if f == int(f) else repr(f)
+
+
+def _label_str(names: Tuple[str, ...], values: Tuple[str, ...]) -> str:
+    if not names:
+        return ""
+    inner = ",".join(f'{n}="{v}"' for n, v in zip(names, values))
+    return "{%s}" % inner
+
+
+class _NullMetric:
+    """The shared disabled-mode metric: every mutator is a no-op and
+    ``labels()`` returns itself, so a disabled call chain touches no
+    allocation at all."""
+    __slots__ = ()
+
+    def inc(self, amount: float = 1) -> None:
+        pass
+
+    def dec(self, amount: float = 1) -> None:
+        pass
+
+    def set(self, value: float) -> None:
+        pass
+
+    def observe(self, value: float) -> None:
+        pass
+
+    def labels(self, **kv) -> "_NullMetric":
+        return self
+
+
+NULL = _NullMetric()
+
+
+class _Bound:
+    """One labelled child of a Counter/Gauge family."""
+    __slots__ = ("_family", "_key")
+
+    def __init__(self, family, key: Tuple[str, ...]):
+        self._family = family
+        self._key = key
+
+    def inc(self, amount: float = 1) -> None:
+        s = self._family._samples
+        s[self._key] = s.get(self._key, 0) + amount
+
+    def dec(self, amount: float = 1) -> None:
+        self.inc(-amount)
+
+    def set(self, value: float) -> None:
+        self._family._samples[self._key] = value
+
+
+class _Family:
+    kind = "untyped"
+
+    def __init__(self, name: str, help: str = "",
+                 labelnames: Iterable[str] = ()):
+        self.name = name
+        self.help = help
+        self.labelnames = tuple(labelnames)
+        self._samples: Dict[Tuple[str, ...], float] = {}
+
+    def _resolve(self, kv: dict) -> Tuple[str, ...]:
+        if tuple(sorted(kv)) != tuple(sorted(self.labelnames)):
+            raise ValueError(
+                f"{self.name}: labels {sorted(kv)} != declared "
+                f"{sorted(self.labelnames)}")
+        return tuple(str(kv[n]) for n in self.labelnames)
+
+    def labels(self, **kv) -> _Bound:
+        return _Bound(self, self._resolve(kv))
+
+    # zero-label convenience: the family itself acts as its () child
+    def inc(self, amount: float = 1) -> None:
+        self._samples[()] = self._samples.get((), 0) + amount
+
+    def dec(self, amount: float = 1) -> None:
+        self.inc(-amount)
+
+    def set(self, value: float) -> None:
+        self._samples[()] = value
+
+    def value(self, **kv) -> float:
+        key = self._resolve(kv) if kv else ()
+        return self._samples.get(key, 0)
+
+    def samples(self) -> List[Tuple[Tuple[str, ...], float]]:
+        return sorted(self._samples.items())
+
+    def render(self) -> List[str]:
+        lines = [f"# HELP {self.name} {self.help}",
+                 f"# TYPE {self.name} {self.kind}"]
+        for key, v in self.samples():
+            lines.append(
+                f"{self.name}{_label_str(self.labelnames, key)} {_fmt(v)}")
+        return lines
+
+    def to_json(self) -> dict:
+        return {"type": self.kind, "help": self.help,
+                "samples": [{"labels": dict(zip(self.labelnames, key)),
+                             "value": v} for key, v in self.samples()]}
+
+
+class Counter(_Family):
+    kind = "counter"
+
+
+class Gauge(_Family):
+    kind = "gauge"
+
+
+class _BoundHistogram:
+    __slots__ = ("_family", "_key")
+
+    def __init__(self, family, key: Tuple[str, ...]):
+        self._family = family
+        self._key = key
+
+    def observe(self, value: float) -> None:
+        self._family._observe(self._key, value)
+
+
+class Histogram:
+    """Fixed-bucket histogram family (cumulative ``le`` buckets, +Inf
+    implicit).  Buckets are fixed at construction, so same-traffic runs
+    export identical text."""
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str = "",
+                 labelnames: Iterable[str] = (),
+                 buckets: Tuple[float, ...] = LATENCY_BUCKETS_S):
+        self.name = name
+        self.help = help
+        self.labelnames = tuple(labelnames)
+        self.buckets = tuple(sorted(buckets))
+        # key -> [per-bucket counts..., +Inf count, sum]
+        self._samples: Dict[Tuple[str, ...], List[float]] = {}
+
+    def _resolve(self, kv: dict) -> Tuple[str, ...]:
+        if tuple(sorted(kv)) != tuple(sorted(self.labelnames)):
+            raise ValueError(
+                f"{self.name}: labels {sorted(kv)} != declared "
+                f"{sorted(self.labelnames)}")
+        return tuple(str(kv[n]) for n in self.labelnames)
+
+    def labels(self, **kv) -> _BoundHistogram:
+        return _BoundHistogram(self, self._resolve(kv))
+
+    def observe(self, value: float) -> None:
+        self._observe((), value)
+
+    def _observe(self, key: Tuple[str, ...], value: float) -> None:
+        row = self._samples.get(key)
+        if row is None:
+            row = self._samples[key] = [0.0] * (len(self.buckets) + 2)
+        for i, b in enumerate(self.buckets):
+            if value <= b:
+                row[i] += 1
+        row[-2] += 1                     # +Inf
+        row[-1] += value                 # sum
+
+    def count(self, **kv) -> float:
+        key = self._resolve(kv) if kv else ()
+        row = self._samples.get(key)
+        return 0 if row is None else row[-2]
+
+    def samples(self) -> List[Tuple[Tuple[str, ...], List[float]]]:
+        return sorted(self._samples.items())
+
+    def render(self) -> List[str]:
+        lines = [f"# HELP {self.name} {self.help}",
+                 f"# TYPE {self.name} histogram"]
+        for key, row in self.samples():
+            for i, b in enumerate(self.buckets):
+                ls = _label_str(self.labelnames + ("le",),
+                                key + (_fmt(b),))
+                lines.append(f"{self.name}_bucket{ls} {_fmt(row[i])}")
+            ls = _label_str(self.labelnames + ("le",), key + ("+Inf",))
+            lines.append(f"{self.name}_bucket{ls} {_fmt(row[-2])}")
+            base = _label_str(self.labelnames, key)
+            lines.append(f"{self.name}_sum{base} {_fmt(row[-1])}")
+            lines.append(f"{self.name}_count{base} {_fmt(row[-2])}")
+        return lines
+
+    def to_json(self) -> dict:
+        return {"type": "histogram", "help": self.help,
+                "buckets": list(self.buckets),
+                "samples": [{"labels": dict(zip(self.labelnames, key)),
+                             "counts": row[:-1], "sum": row[-1]}
+                            for key, row in self.samples()]}
+
+
+class StatsView(MutableMapping):
+    """A counter family that walks and talks like the legacy ``stats``
+    dict (``view["k"] += 1``, ``dict(view)``, ``view == {...}``,
+    ``repr`` prints the dict) while exporting as one labelled family
+    ``name{key="..."}``.  Counts unconditionally — the serve tests and
+    benches assert these with telemetry disabled."""
+    kind = "counter"
+    labelnames = ("key",)
+
+    def __init__(self, name: str, keys: Iterable[str] = (), help: str = ""):
+        self.name = name
+        self.help = help
+        self._d: Dict[str, float] = {k: 0 for k in keys}
+
+    # -- mapping surface ----------------------------------------------------
+
+    def __getitem__(self, k):
+        return self._d[k]
+
+    def __setitem__(self, k, v):
+        self._d[k] = v
+
+    def __delitem__(self, k):
+        del self._d[k]
+
+    def __iter__(self):
+        return iter(self._d)
+
+    def __len__(self):
+        return len(self._d)
+
+    def __eq__(self, other):
+        if isinstance(other, StatsView):
+            return self._d == other._d
+        if isinstance(other, dict):
+            return self._d == other
+        return NotImplemented
+
+    def __ne__(self, other):
+        eq = self.__eq__(other)
+        return eq if eq is NotImplemented else not eq
+
+    __hash__ = None
+
+    def __repr__(self):
+        return repr(self._d)
+
+    # -- export surface -----------------------------------------------------
+
+    def samples(self) -> List[Tuple[Tuple[str, ...], float]]:
+        return sorted(((str(k),), v) for k, v in self._d.items())
+
+    def render(self) -> List[str]:
+        lines = [f"# HELP {self.name} {self.help}",
+                 f"# TYPE {self.name} counter"]
+        for key, v in self.samples():
+            lines.append(
+                f"{self.name}{_label_str(self.labelnames, key)} {_fmt(v)}")
+        return lines
+
+    def to_json(self) -> dict:
+        return {"type": "counter", "help": self.help,
+                "samples": [{"labels": {"key": key[0]}, "value": v}
+                            for key, v in self.samples()]}
+
+
+def stats_counters(name: str, keys: Iterable[str] = (),
+                   help: str = "") -> StatsView:
+    """Standalone dict-compatible counter family (see
+    :class:`StatsView`).  Module-level so objects constructed before any
+    registry exists (``FaultPlan``, ``BlockPool``, ``CheckpointStore``)
+    can count from birth; the scheduler's :class:`Telemetry` later
+    ``adopt()``-s the instance for export."""
+    return StatsView(name, keys, help)
+
+
+class MetricsRegistry:
+    """Name-keyed family store.  ``counter()/gauge()/histogram()`` are
+    get-or-create by name; when the registry is disabled they return the
+    shared :data:`NULL` metric and register nothing.  ``adopt()`` wires
+    an externally-built family (``StatsView`` or module-level kernel
+    counters) into the export regardless of the enabled flag — those
+    count always and export whenever somebody asks."""
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = bool(enabled)
+        self._families: Dict[str, object] = {}
+
+    def _get(self, name: str, cls, help: str, labels, **kw):
+        if not self.enabled:
+            return NULL
+        fam = self._families.get(name)
+        if fam is None:
+            fam = self._families[name] = cls(name, help, labels, **kw)
+        elif not isinstance(fam, cls):
+            raise ValueError(f"metric {name!r} already registered as "
+                             f"{type(fam).__name__}")
+        return fam
+
+    def counter(self, name: str, help: str = "",
+                labels: Iterable[str] = ()):
+        return self._get(name, Counter, help, labels)
+
+    def gauge(self, name: str, help: str = "", labels: Iterable[str] = ()):
+        return self._get(name, Gauge, help, labels)
+
+    def histogram(self, name: str, help: str = "",
+                  labels: Iterable[str] = (),
+                  buckets: Tuple[float, ...] = LATENCY_BUCKETS_S):
+        return self._get(name, Histogram, help, labels, buckets=buckets)
+
+    def adopt(self, family):
+        """Register a pre-built family/view under its own name (latest
+        wins — a restored scheduler re-adopts its views)."""
+        self._families[family.name] = family
+        return family
+
+    def render_prometheus(self) -> str:
+        lines: List[str] = []
+        for name in sorted(self._families):
+            lines.extend(self._families[name].render())
+        return "\n".join(lines) + ("\n" if lines else "")
+
+    def to_json(self) -> dict:
+        return {name: self._families[name].to_json()
+                for name in sorted(self._families)}
+
+
+class Tracer:
+    """Append-only request-lifecycle event log.
+
+    Events are plain dicts ``{"seq", "ev", "t", ...fields}``: ``seq`` is
+    a 1-based ordinal (total order even when a fake clock repeats
+    timestamps), ``t`` is the caller-supplied clock reading.  The JSON
+    export is canonical (sorted keys, fixed separators), so two runs
+    that generate the same events from the same injected clock export
+    byte-identical bytes — the chaos-soak determinism contract."""
+
+    def __init__(self, enabled: bool = False):
+        self.enabled = bool(enabled)
+        self.events: List[dict] = []
+        self._seq = 0
+
+    def event(self, ev: str, t: float, **fields) -> None:
+        if not self.enabled:
+            return
+        self._seq += 1
+        e = {"seq": self._seq, "ev": ev, "t": float(t)}
+        e.update(fields)
+        self.events.append(e)
+
+    def clear(self) -> None:
+        self.events = []
+        self._seq = 0
+
+    def export_json(self) -> str:
+        return json.dumps({"schema": "repro_trace_v1",
+                           "events": self.events},
+                          sort_keys=True, separators=(",", ":"))
+
+
+class Telemetry:
+    """The per-engine telemetry plane: one registry + one tracer + the
+    enablement/trace-path policy.  ``$REPRO_TELEMETRY`` outranks
+    ``ServeConfig.telemetry``; ``$REPRO_TRACE_PATH`` outranks
+    ``ServeConfig.trace_path``."""
+
+    def __init__(self, enabled: bool = False,
+                 trace_path: Optional[str] = None):
+        self.enabled = bool(enabled)
+        self.trace_path = trace_path or None
+        self.registry = MetricsRegistry(enabled=self.enabled)
+        self.trace = Tracer(enabled=self.enabled)
+        # kernel-side module counters export through every telemetry
+        # instance (dispatch has no engine handle to register with)
+        self.registry.adopt(_DISPATCH_CALLS)
+        self.registry.adopt(_DISPATCH_SECONDS)
+
+    @classmethod
+    def from_config(cls, scfg) -> "Telemetry":
+        env = os.environ.get("REPRO_TELEMETRY")
+        enabled = (_truthy(env) if env is not None
+                   else bool(getattr(scfg, "telemetry", False)))
+        path = (os.environ.get("REPRO_TRACE_PATH", "").strip()
+                or str(getattr(scfg, "trace_path", "") or ""))
+        return cls(enabled=enabled, trace_path=path or None)
+
+    # registry passthroughs (NULL when disabled)
+    def counter(self, name: str, help: str = "", labels=()):
+        return self.registry.counter(name, help, labels)
+
+    def gauge(self, name: str, help: str = "", labels=()):
+        return self.registry.gauge(name, help, labels)
+
+    def histogram(self, name: str, help: str = "", labels=(),
+                  buckets: Tuple[float, ...] = LATENCY_BUCKETS_S):
+        return self.registry.histogram(name, help, labels, buckets)
+
+    def adopt(self, family):
+        return self.registry.adopt(family)
+
+    def event(self, ev: str, t: float, **fields) -> None:
+        self.trace.event(ev, t, **fields)
+
+    def render_prometheus(self) -> str:
+        return self.registry.render_prometheus()
+
+    def metrics_json(self) -> dict:
+        return self.registry.to_json()
+
+    def dump_trace(self, path: Optional[str] = None) -> str:
+        """Canonical-JSON trace export; written to ``path`` (or the
+        configured ``$REPRO_TRACE_PATH``) when one is set."""
+        blob = self.trace.export_json()
+        target = path or self.trace_path
+        if target:
+            with open(target, "w") as f:
+                f.write(blob)
+        return blob
+
+
+# -- kernel profiling hooks (module scope: dispatch has no engine) ----------
+
+_DISPATCH_CALLS = Counter(
+    "rsr_dispatch_calls",
+    "RSR serve-matmul dispatches (once per traced shape) by "
+    "backend/regime/tile.", ("backend", "regime", "tile"))
+_DISPATCH_SECONDS = Histogram(
+    "rsr_dispatch_seconds",
+    "Measured eager RSR matmul seconds (autotune candidates).",
+    ("backend",))
+
+
+def record_dispatch(backend: str, regime: str,
+                    tile: Tuple[int, int, int]) -> None:
+    """Count one ``rsr_serve_matmul`` dispatch.  Called at trace time
+    (static shapes), so it fires once per compiled shape — always on,
+    cost irrelevant, and deliberately free of env reads so the
+    boundaries lint (RL203) stays clean."""
+    _DISPATCH_CALLS.labels(
+        backend=str(backend), regime=str(regime),
+        tile="x".join(str(t) for t in tile)).inc()
+
+
+def observe_dispatch_seconds(backend: str, seconds: float) -> None:
+    """Record one eagerly-measured matmul duration (autotune loop)."""
+    _DISPATCH_SECONDS.labels(backend=str(backend)).observe(float(seconds))
+
+
+def kernel_families() -> Tuple[Counter, Histogram]:
+    return _DISPATCH_CALLS, _DISPATCH_SECONDS
+
+
+# -- trace analysis ---------------------------------------------------------
+
+def _percentile(xs: List[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    i = min(len(xs) - 1, int(round(q * (len(xs) - 1))))
+    return xs[i]
+
+
+def latency_attribution(events: List[dict]) -> dict:
+    """Per-lane queue/prefill/decode/total latency attribution from a
+    trace event list.  Stages per request (first occurrence of each
+    event): queue = submit→admit, prefill = admit→first_token, decode =
+    first_token→finish, total = submit→finish.  Returns
+    ``{lane: {stage: {"p50", "p99", "mean", "n"}}}`` keyed by the lane
+    recorded at submit."""
+    first: Dict[int, dict] = {}
+    for e in events:
+        rid = e.get("rid")
+        if rid is None:
+            continue
+        slot = first.setdefault(rid, {})
+        if e["ev"] not in slot:
+            slot[e["ev"]] = e["t"]
+        if e["ev"] == "submit":
+            slot["lane"] = e.get("lane", 0)
+    stages: Dict[int, Dict[str, List[float]]] = {}
+    for rec in first.values():
+        lane = int(rec.get("lane", 0))
+        by = stages.setdefault(
+            lane, {"queue": [], "prefill": [], "decode": [], "total": []})
+        t_sub, t_adm = rec.get("submit"), rec.get("admit")
+        t_tok, t_fin = rec.get("first_token"), rec.get("finish")
+        if t_sub is not None and t_adm is not None:
+            by["queue"].append(t_adm - t_sub)
+        if t_adm is not None and t_tok is not None:
+            by["prefill"].append(t_tok - t_adm)
+        if t_tok is not None and t_fin is not None:
+            by["decode"].append(t_fin - t_tok)
+        if t_sub is not None and t_fin is not None:
+            by["total"].append(t_fin - t_sub)
+    out: dict = {}
+    for lane, by in sorted(stages.items()):
+        out[lane] = {
+            stage: {"n": len(xs),
+                    "mean": (sum(xs) / len(xs)) if xs else 0.0,
+                    "p50": _percentile(xs, 0.50),
+                    "p99": _percentile(xs, 0.99)}
+            for stage, xs in by.items()}
+    return out

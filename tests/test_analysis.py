@@ -7,7 +7,8 @@ import textwrap
 
 import pytest
 
-from repro.analysis import boundaries, dtypeflow, envdocs, run_checks, tiles
+from repro.analysis import (boundaries, dtypeflow, envdocs, metricsdocs,
+                            run_checks, tiles)
 from repro.analysis.findings import (Finding, load_baseline, save_baseline,
                                      split_findings)
 from repro.config import ModelConfig
@@ -287,6 +288,56 @@ def test_envdocs_documented_read_is_quiet(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# metricsdocs (RL5xx) — seeded catalog drift in a temp tree
+# ---------------------------------------------------------------------------
+
+def _metric_tree(tmp_path, doc_names, emitter_src):
+    serve = tmp_path / "src" / "repro" / "serve"
+    serve.mkdir(parents=True)
+    rows = "\n".join(f"``{n}``  catalog row" for n in doc_names)
+    (serve / "__init__.py").write_text(f'"""metric catalog\n\n{rows}\n"""\n')
+    (tmp_path / "src" / "m.py").write_text(emitter_src)
+    return str(tmp_path)
+
+
+def test_metricsdocs_flags_undocumented_emit(tmp_path):
+    """Literal, name-constant-indirect, and attribute-call emissions are
+    all resolved; non-metric strings and non-constructor calls are not."""
+    root = _metric_tree(tmp_path, [], textwrap.dedent("""
+        from repro.serve import telemetry
+        _NAME = "rsr_indirect_total"
+        a = telemetry.Counter("serve_direct_total", "h")
+        b = telemetry.Histogram(_NAME, "h", ())
+        def wire(tel):
+            return tel.gauge("serve_attr_gauge", "h")
+        c = print("serve_not_a_metric")
+        d = telemetry.Counter("unprefixed_name", "h")
+    """))
+    fs = metricsdocs.check(root)
+    assert _codes(fs) == {"RL501"}
+    assert {f.symbol for f in fs} == {"serve_direct_total",
+                                      "rsr_indirect_total",
+                                      "serve_attr_gauge"}
+    assert all(f.path == "src/m.py" and f.line for f in fs)
+
+
+def test_metricsdocs_flags_stale_catalog_row(tmp_path):
+    root = _metric_tree(tmp_path, ["serve_gone_total"], "x = 1\n")
+    fs = metricsdocs.check(root)
+    assert _codes(fs) == {"RL502"}
+    assert fs[0].symbol == "serve_gone_total"
+    assert fs[0].path == "src/repro/serve/__init__.py"
+
+
+def test_metricsdocs_documented_emit_is_quiet(tmp_path):
+    root = _metric_tree(
+        tmp_path, ["serve_ok_total"],
+        'from repro.serve import telemetry\n'
+        'c = telemetry.stats_counters("serve_ok_total", ("a",))\n')
+    assert metricsdocs.check(root) == []
+
+
+# ---------------------------------------------------------------------------
 # baseline machinery
 # ---------------------------------------------------------------------------
 
@@ -319,7 +370,8 @@ def test_baseline_bad_schema_rejected(tmp_path):
 def test_fast_checkers_clean_on_real_tree():
     """AST checkers over the real tree: everything not in the committed
     baseline must be quiet."""
-    findings = run_checks(ROOT, ["boundaries", "dtypeflow", "envdocs"])
+    findings = run_checks(ROOT, ["boundaries", "dtypeflow", "envdocs",
+                                 "metricsdocs"])
     baseline = load_baseline(os.path.join(ROOT, "reprolint_baseline.json"))
     new, _, _ = split_findings(findings, baseline)
     assert new == [], "\n".join(f.render() for f in new)

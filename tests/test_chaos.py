@@ -183,6 +183,37 @@ def test_prefill_fault_is_transient_and_parity_preserving():
     assert e.pool.live_refs == 0
 
 
+def test_faulted_admission_rollback_keeps_position_mirror():
+    """Regression (found by the PR-10 telemetry chaos soak): the
+    PrefillFault/BlockPoolExhausted rollback in ``_admit`` calls
+    ``free_slot`` — which zeroes the slot's DEVICE position — but used to
+    leave the host mirror at its garbage-crept value, so the two stayed
+    offset forever.  The fault must hit a slot whose idle position has
+    already crept (decode ticks ran first); per-tick auditing then proves
+    the mirror exact through the rollback."""
+    scfg = ServeConfig(max_seq_len=32, batch_size=2, kv_block_size=8,
+                       kv_num_blocks=8, paged_attn="gather",
+                       fault_plan="prefill@2", audit_interval=1)
+    e, _ = _engine(scfg)
+    sched = PriorityScheduler(e)
+    rng = np.random.default_rng(12)
+    sched.submit(Request(rid=0, prompt=rng.integers(1, 64, 9).astype(
+        np.int32), max_new=12))
+    finished: list = []
+    for _ in range(4):          # idle slot 1's device pos creeps with each
+        sched.tick(finished)    # batched step (host mirror tracks it)
+    sched.submit(Request(rid=1, prompt=rng.integers(1, 64, 9).astype(
+        np.int32), max_new=4))
+    done = {r.rid: r for r in sched.run()}
+    for r in finished:
+        done[r.rid] = r
+    assert sched.fault_plan.fired["prefill"] == 1
+    assert all(done[i].status is RequestStatus.OK for i in range(2))
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(e.cache["pos"])), np.asarray(sched._pos))
+    audit.audit_scheduler(sched)
+
+
 # ---------------------------------------------------------------------------
 # Clock faults: jumps expire deadlines, slow ticks trip hopeless shedding
 # ---------------------------------------------------------------------------

@@ -1,0 +1,351 @@
+"""Serve-plane telemetry: registry semantics, dict-compatible stats
+views, injectable-clock timing, and the trace-determinism contract.
+
+The determinism tests run the full paged engine twice under identical
+seeds (overcommit soak for the preempt → warm-revival → tail-reprefill
+lifecycle; ``FaultPlan.random`` for the chaos soak) and require the
+event sequences — names, ordinals, injected-clock timestamps — to match
+exactly, with the chaos run's JSON exports bitwise identical.  That is
+the property that makes a trace diff a usable debugging artifact: any
+byte of divergence IS the nondeterminism you are hunting.
+"""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import ServeConfig, get_config
+from repro.models import transformer as tfm
+from repro.serve import telemetry
+from repro.serve.engine import Engine, Request, RequestStatus
+from repro.serve.faults import FaultPlan
+from repro.serve.frontend import AsyncFrontend, PriorityScheduler
+from repro.serve.telemetry import (NULL, Counter, Gauge, Histogram,
+                                   MetricsRegistry, StatsView, Telemetry,
+                                   Tracer, latency_attribution,
+                                   stats_counters)
+
+KEY = jax.random.PRNGKey(0)
+
+CFG = dataclasses.replace(get_config("gemma-2b").reduced(), vocab_size=64,
+                          num_layers=2, d_ff=64, capacity_factor=64.0)
+
+
+def _engine(scfg: ServeConfig, cfg=CFG):
+    params = tfm.init_params(cfg, KEY)
+    sp = tfm.serve_params(params, cfg)
+    return Engine(cfg, sp, scfg), sp
+
+
+class TickClock:
+    """Deterministic fake clock: advances ``dt`` on every call."""
+
+    def __init__(self, dt: float = 0.0, t0: float = 0.0):
+        self.t = t0
+        self.dt = dt
+
+    def __call__(self) -> float:
+        self.t += self.dt
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# StatsView: the dict-compat surface the legacy call sites drive
+# ---------------------------------------------------------------------------
+
+def test_stats_view_walks_like_the_legacy_dict():
+    v = stats_counters("serve_x_stats", ("a", "b"), help="h")
+    v["a"] += 2
+    v["b"] = 5
+    v["c"] = 1                                  # late key, like fired tallies
+    assert v["a"] == 2 and v.get("missing", 0) == 0
+    assert dict(v) == {"a": 2, "b": 5, "c": 1}
+    assert {**v} == {"a": 2, "b": 5, "c": 1}
+    assert v == {"a": 2, "b": 5, "c": 1}        # test_chaos literal equality
+    assert {"a": 2, "b": 5, "c": 1} == v        # reflected
+    assert v != {"a": 0}
+    assert sum(v.values()) == 8
+    assert repr(v) == repr({"a": 2, "b": 5, "c": 1})
+    assert json.dumps(dict(v))                  # snapshot-serializable
+    v.update({"a": 9})
+    assert v["a"] == 9
+
+
+def test_stats_view_exports_as_labelled_counter_family():
+    v = stats_counters("serve_x_stats", ("hits",), help="h")
+    v["hits"] += 3
+    text = "\n".join(v.render())
+    assert '# TYPE serve_x_stats counter' in text
+    assert 'serve_x_stats{key="hits"} 3' in text
+    assert v.to_json()["samples"] == [{"labels": {"key": "hits"},
+                                       "value": 3}]
+
+
+# ---------------------------------------------------------------------------
+# Registry: enabled families vs the shared disabled no-op
+# ---------------------------------------------------------------------------
+
+def test_disabled_registry_hands_back_the_shared_null():
+    reg = MetricsRegistry(enabled=False)
+    c = reg.counter("serve_c", "h")
+    assert c is NULL and reg.gauge("serve_g") is NULL
+    assert reg.histogram("serve_h") is NULL
+    c.inc()
+    c.labels(anything="x").observe(1.0)          # whole chain is a no-op
+    assert reg.render_prometheus() == "" and reg.to_json() == {}
+
+
+def test_enabled_registry_get_or_create_and_kind_clash():
+    reg = MetricsRegistry(enabled=True)
+    c = reg.counter("serve_c", "h", ("lane",))
+    assert reg.counter("serve_c") is c           # get-or-create by name
+    c.labels(lane="0").inc(2)
+    c.labels(lane="1").inc()
+    assert c.value(lane="0") == 2
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("serve_c")
+
+
+def test_prometheus_render_counter_gauge_histogram():
+    reg = MetricsRegistry(enabled=True)
+    reg.counter("serve_c", "hc", ("lane",)).labels(lane="0").inc(2)
+    reg.gauge("serve_g", "hg").set(7)
+    h = reg.histogram("serve_h", "hh", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(0.5)
+    h.observe(5.0)
+    text = reg.render_prometheus()
+    assert 'serve_c{lane="0"} 2' in text
+    assert "serve_g 7" in text
+    # cumulative le buckets, integral floats printed as ints
+    assert 'serve_h_bucket{le="0.1"} 1' in text
+    assert 'serve_h_bucket{le="1"} 2' in text
+    assert 'serve_h_bucket{le="+Inf"} 3' in text
+    assert "serve_h_sum 5.55" in text and "serve_h_count 3" in text
+    js = reg.to_json()
+    assert js["serve_h"]["type"] == "histogram"
+    assert js["serve_h"]["samples"][0]["sum"] == pytest.approx(5.55)
+
+
+def test_adopted_views_export_even_when_disabled():
+    """Stats views count always; adopt() wires them into the export
+    regardless of the enabled flag — the dashboard sees lifecycle
+    counters even on a telemetry-off plane."""
+    tel = Telemetry(enabled=False)
+    v = stats_counters("serve_x_stats", ("ticks",))
+    tel.adopt(v)
+    v["ticks"] += 4
+    assert 'serve_x_stats{key="ticks"} 4' in tel.render_prometheus()
+
+
+# ---------------------------------------------------------------------------
+# Enablement precedence and trace-path plumbing
+# ---------------------------------------------------------------------------
+
+def test_from_config_env_outranks_config(monkeypatch):
+    scfg = ServeConfig(max_seq_len=32, batch_size=1, telemetry=True)
+    monkeypatch.delenv("REPRO_TELEMETRY", raising=False)
+    assert Telemetry.from_config(scfg).enabled
+    monkeypatch.setenv("REPRO_TELEMETRY", "0")
+    assert not Telemetry.from_config(scfg).enabled       # env vetoes config
+    monkeypatch.setenv("REPRO_TELEMETRY", "yes")
+    scfg = ServeConfig(max_seq_len=32, batch_size=1, telemetry=False)
+    assert Telemetry.from_config(scfg).enabled           # env enables
+
+
+def test_trace_path_written_on_dump(tmp_path, monkeypatch):
+    target = tmp_path / "trace.json"
+    monkeypatch.setenv("REPRO_TRACE_PATH", str(target))
+    tel = Telemetry.from_config(
+        ServeConfig(max_seq_len=32, batch_size=1, telemetry=True))
+    tel.event("submit", 1.0, rid=0)
+    blob = tel.dump_trace()
+    assert target.read_text() == blob
+    doc = json.loads(blob)
+    assert doc["schema"] == "repro_trace_v1"
+    assert doc["events"] == [{"seq": 1, "ev": "submit", "t": 1.0, "rid": 0}]
+
+
+def test_tracer_disabled_records_nothing():
+    tr = Tracer(enabled=False)
+    tr.event("submit", 1.0, rid=0)
+    assert tr.events == []
+    assert json.loads(tr.export_json())["events"] == []
+
+
+# ---------------------------------------------------------------------------
+# latency attribution over a synthetic trace
+# ---------------------------------------------------------------------------
+
+def test_latency_attribution_stages_and_lanes():
+    ev = [
+        {"seq": 1, "ev": "submit", "t": 0.0, "rid": 0, "lane": 0},
+        {"seq": 2, "ev": "submit", "t": 0.0, "rid": 1, "lane": 2},
+        {"seq": 3, "ev": "admit", "t": 1.0, "rid": 0},
+        {"seq": 4, "ev": "first_token", "t": 3.0, "rid": 0},
+        {"seq": 5, "ev": "admit", "t": 2.0, "rid": 1},
+        {"seq": 6, "ev": "first_token", "t": 5.0, "rid": 1},
+        {"seq": 7, "ev": "finish", "t": 7.0, "rid": 0},
+        {"seq": 8, "ev": "finish", "t": 11.0, "rid": 1},
+    ]
+    att = latency_attribution(ev)
+    assert set(att) == {0, 2}
+    assert att[0]["queue"] == {"n": 1, "mean": 1.0, "p50": 1.0, "p99": 1.0}
+    assert att[0]["prefill"]["p50"] == 2.0
+    assert att[0]["decode"]["p50"] == 4.0
+    assert att[2]["total"] == {"n": 1, "mean": 11.0, "p50": 11.0,
+                               "p99": 11.0}
+    assert latency_attribution([]) == {}
+
+
+# ---------------------------------------------------------------------------
+# Engine timing runs on the injectable clock (the PR-10 bugfix)
+# ---------------------------------------------------------------------------
+
+def test_decode_throughput_measures_on_injected_clock():
+    """decode_throughput used to hardcode time.perf_counter; with the
+    scheduler-style clock injected, the measurement is exactly the fake
+    clock's arithmetic — deterministic and fault-skewable."""
+    e, _ = _engine(ServeConfig(max_seq_len=32, batch_size=2))
+    e.clock = TickClock(dt=0.5)
+    out = e.decode_throughput(steps=4, warmup=1)
+    assert out["us_per_step"] == pytest.approx(0.5 / 4 * 1e6)
+    assert out["tokens_per_s"] == pytest.approx(2 * 4 / 0.5)
+
+
+def test_scheduler_attaches_its_clock_to_the_engine():
+    e, _ = _engine(ServeConfig(max_seq_len=32, batch_size=1))
+    clock = TickClock(dt=0.001)
+    sched = PriorityScheduler(e, clock=clock)
+    assert e.clock is sched.clock
+
+
+# ---------------------------------------------------------------------------
+# Trace determinism: the overcommit soak, twice (ISSUE-10 satellite)
+# ---------------------------------------------------------------------------
+
+def _soak_scfg(**over) -> ServeConfig:
+    # the ISSUE-6 soak geometry: 3 requests x worst-case 4 blocks = 12 >
+    # pool of 9, so at 1.5x overcommit all three admit lazily and collide
+    # mid-decode -> preemption + warm re-admission.
+    return ServeConfig(max_seq_len=32, batch_size=3, kv_block_size=8,
+                       kv_num_blocks=9, paged_attn="gather",
+                       overcommit=1.5, telemetry=True, **over)
+
+
+def _traced_soak_run(fault_seed=None):
+    """One full soak run on a fresh engine with a fresh deterministic
+    clock; returns (scheduler, done-by-rid, trace blob)."""
+    e, _ = _engine(_soak_scfg())
+    plan = None if fault_seed is None else FaultPlan.random(fault_seed)
+    sched = PriorityScheduler(e, clock=TickClock(dt=1e-3, t0=100.0),
+                              fault_plan=plan)
+    rng = np.random.default_rng(11)
+    for i in range(3):
+        sched.submit(Request(rid=i,
+                             prompt=rng.integers(1, 64, 9).astype(np.int32),
+                             max_new=20))
+    done = {r.rid: r for r in sched.run()}
+    return sched, done, sched.telemetry.dump_trace()
+
+
+def test_trace_covers_preempt_warm_revival_lifecycle():
+    """The soak's trace must tell the whole story: submits, cold admits,
+    first tokens, at least one preemption, a warm re-admission that
+    re-hit prefix tokens, and OK finishes with the full token count."""
+    sched, done, blob = _traced_soak_run()
+    assert all(done[i].status is RequestStatus.OK for i in range(3))
+    ev = sched.telemetry.trace.events
+    assert [e["seq"] for e in ev] == list(range(1, len(ev) + 1))
+    by_name = {}
+    for e in ev:
+        by_name.setdefault(e["ev"], []).append(e)
+    assert {e["rid"] for e in by_name["submit"]} == {0, 1, 2}
+    assert len(by_name["preempt"]) >= 1          # the pool DID run dry
+    readmits = [e for e in by_name["admit"] if e["readmit"]]
+    assert readmits and any(e["hit_tokens"] > 0 for e in readmits)
+    assert {e["rid"] for e in by_name["first_token"]} == {0, 1, 2}
+    assert all(e["status"] == "OK" and e["tokens"] == 20
+               for e in by_name["finish"])
+    assert by_name["decode"], "tick-level decode events missing"
+    # attribution over the real trace: every stage observed for lane 0
+    att = latency_attribution(ev)
+    assert att[0]["queue"]["n"] == 3 and att[0]["decode"]["n"] == 3
+    assert att[0]["total"]["p99"] > 0
+
+
+def test_trace_identical_across_same_seed_runs():
+    """Same seed, same clock, fresh engine: the full event sequence —
+    names, ordinals, injected-clock timestamps, field payloads — must
+    match element for element across two independent runs."""
+    s1, d1, blob1 = _traced_soak_run()
+    s2, d2, blob2 = _traced_soak_run()
+    assert s1.telemetry.trace.events == s2.telemetry.trace.events
+    assert blob1 == blob2
+    assert {i: d1[i].status for i in d1} == {i: d2[i].status for i in d2}
+
+
+def test_chaos_soak_trace_export_bitwise_identical():
+    """Same seed + same FaultPlan ⇒ byte-identical canonical-JSON trace
+    exports and identical fault tallies (the PR-10 acceptance soak)."""
+    s1, d1, blob1 = _traced_soak_run(fault_seed=3)
+    s2, d2, blob2 = _traced_soak_run(fault_seed=3)
+    assert blob1 == blob2
+    assert s1.fault_plan.fired == dict(s2.fault_plan.fired)
+    assert {i: d1[i].status for i in d1} == {i: d2[i].status for i in d2}
+
+
+# ---------------------------------------------------------------------------
+# Frontend export surface + disabled-mode contract
+# ---------------------------------------------------------------------------
+
+def _run_async(coro):
+    import asyncio
+    return asyncio.run(asyncio.wait_for(coro, 120.0))
+
+
+def test_frontend_metrics_and_trace_export():
+    scfg = ServeConfig(max_seq_len=32, batch_size=2, telemetry=True)
+    e, _ = _engine(scfg)
+    fe = AsyncFrontend(e, clock=TickClock(dt=1e-3))
+
+    async def go():
+        fe.submit(np.ones(4, np.int32), 4)
+        fe.submit(np.ones(6, np.int32), 3, priority=1)
+        return await fe.drain()
+
+    done = _run_async(go())
+    assert all(r.status is RequestStatus.OK for r in done)
+    text = fe.metrics()
+    assert 'serve_sched_stats{key="ticks"}' in text
+    assert "# TYPE serve_tick_duration_seconds histogram" in text
+    assert "serve_batch_occupancy" in text
+    assert "# TYPE rsr_dispatch_calls counter" in text   # kernel families
+    js = fe.metrics_json()
+    assert js["serve_request_latency_seconds"]["type"] == "histogram"
+    doc = json.loads(fe.dump_trace())
+    assert doc["schema"] == "repro_trace_v1"
+    assert {e["ev"] for e in doc["events"]} >= {"submit", "admit",
+                                                "first_token", "finish"}
+    att = latency_attribution(fe.telemetry.trace.events)
+    assert att[0]["queue"]["n"] == 1 and att[1]["queue"]["n"] == 1
+
+
+def test_disabled_plane_counts_stats_but_traces_nothing():
+    """Telemetry off (the default): lifecycle counters still count (the
+    tests/benches assert them), but no events, no histograms, no gauges
+    — and the stats views still export for whoever asks."""
+    e, _ = _engine(ServeConfig(max_seq_len=32, batch_size=1))
+    sched = PriorityScheduler(e)
+    sched.submit(Request(rid=0, prompt=np.ones(4, np.int32), max_new=4))
+    done = sched.run()
+    assert done[0].status is RequestStatus.OK
+    assert not sched.telemetry.enabled
+    assert sched.stats["ticks"] > 0              # views count always
+    assert sched.telemetry.trace.events == []
+    text = sched.telemetry.render_prometheus()
+    assert 'serve_sched_stats{key="admissions"} 1' in text
+    assert "serve_tick_phase_seconds" not in text  # gated extras stayed off
+    assert sched.telemetry.histogram("serve_anything") is NULL
